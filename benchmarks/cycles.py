@@ -1,0 +1,54 @@
+"""Cycle-count scaling: bitSMM Eq. 8 vs BISMO/Loom Eq. 6 (paper §III-A).
+
+Reproduces the claim that bitSMM's (n+1)*b_max beats b_mc*b_ml*n for all
+operand widths > 2 and matches at b=2, and quantifies the speedup the
+paper's scheme buys as precision grows — the motivation for symmetric
+operand widths.
+"""
+
+from __future__ import annotations
+
+from repro.core import systolic as sa
+
+
+def scaling_table(n: int = 1000) -> list[dict]:
+    rows = []
+    for b in range(1, 17):
+        bismo = sa.bismo_dot_cycles(b, b, n)
+        bitsmm = sa.bitsmm_dot_cycles(b, n)
+        rows.append(dict(bits=b, n=n, bismo_cycles=bismo, bitsmm_cycles=bitsmm,
+                         speedup=bismo / bitsmm))
+    return rows
+
+
+def asymmetric_table(n: int = 1000) -> list[dict]:
+    """Where BISMO's asymmetric widths win: b_ml << b_mc (bitSMM must pad
+    to b_max — the trade-off the paper concedes in §III-A)."""
+    rows = []
+    for b_mc, b_ml in ((16, 2), (16, 4), (8, 2), (8, 8), (4, 4)):
+        bismo = sa.bismo_dot_cycles(b_mc, b_ml, n)
+        bitsmm = sa.bitsmm_dot_cycles(max(b_mc, b_ml), n)
+        rows.append(dict(b_mc=b_mc, b_ml=b_ml, bismo_cycles=bismo,
+                         bitsmm_cycles=bitsmm, speedup=bismo / bitsmm))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    sym = scaling_table()
+    assert all(r["speedup"] > 1 for r in sym if r["bits"] > 2)
+    tie = [r for r in sym if r["bits"] == 2][0]
+    assert abs(tie["speedup"] - 2 * 2 * 1000 / (1001 * 2)) < 1e-9
+    for r in sym:
+        if r["bits"] in (2, 4, 8, 16):
+            out.append((f"cycles/symmetric_b{r['bits']}", r["bitsmm_cycles"],
+                        f"bismo={r['bismo_cycles']};speedup={r['speedup']:.2f}x"))
+    for r in asymmetric_table():
+        out.append((f"cycles/asym_{r['b_mc']}x{r['b_ml']}", r["bitsmm_cycles"],
+                    f"bismo={r['bismo_cycles']};speedup={r['speedup']:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")

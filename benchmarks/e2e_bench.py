@@ -1,0 +1,67 @@
+"""End-to-end system benches: tiny-config train step throughput and
+quantized serve decode throughput (host wall-time)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.precision import PrecisionPolicy
+from repro.launch.inputs import make_batch
+from repro.launch.serve import Engine
+from repro.launch.steps import init_opt_state, make_train_step
+from repro.models import init_params
+from repro.optim import OptimConfig
+
+
+def train_bench(arch="granite-3-8b", steps=5):
+    cfg = get_reduced(arch)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = OptimConfig(total_steps=steps)
+    opt_state = init_opt_state(cfg, opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    batch = make_batch(cfg, 8, 128, "train", rng)
+    params, opt_state, m = step(params, opt_state, batch, jnp.int32(0))  # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(steps):
+        params, opt_state, m = step(params, opt_state, batch, jnp.int32(i + 1))
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / steps
+    toks = 8 * 128 / dt
+    return dt * 1e6, f"tokens_per_s={toks:.0f};loss={float(m['loss']):.3f}"
+
+
+def serve_bench(arch="yi-6b", bits=8):
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pol = PrecisionPolicy.uniform(bits, bits) if bits else PrecisionPolicy.off()
+    engine = Engine(cfg, params, pol, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    engine.generate(prompts, 4)  # warm
+    t0 = time.perf_counter()
+    _, tps = engine.generate(prompts, 16)
+    dt = time.perf_counter() - t0
+    return dt / 16 * 1e6, f"decode_tok_per_s={tps:.0f}"
+
+
+def run():
+    out = []
+    us, d = train_bench()
+    out.append(("e2e/train_step_granite_reduced", round(us, 0), d))
+    for bits in (0, 8, 4):
+        us, d = serve_bench(bits=bits)
+        tag = f"w{bits}a{bits}" if bits else "bf16"
+        out.append((f"e2e/serve_decode_yi_{tag}", round(us, 0), d))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")

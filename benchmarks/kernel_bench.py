@@ -1,0 +1,71 @@
+"""Microbenchmarks of the bit-serial matmul across execution levels,
+variants and bit-widths (wall time on this host + MXU-pass accounting),
+plus the quantization-error sweep behind the paper's precision dial.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitserial as bs
+from repro.core.quantize import quantization_error
+
+M, K, N = 256, 512, 256
+
+
+def _time(fn, *args, iters=5, **kw) -> float:
+    fn(*args, **kw).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def matmul_bench() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    out = []
+    for bits in (2, 4, 8):
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        a = jnp.asarray(rng.integers(lo, hi + 1, (M, K)), jnp.int32)
+        w = jnp.asarray(rng.integers(lo, hi + 1, (K, N)), jnp.int32)
+        for level in ("bitplane", "digit", "fused"):
+            for variant in ("booth", "sbmwc"):
+                if level == "fused" and variant == "sbmwc":
+                    continue
+                us = _time(
+                    bs.bitserial_matmul, a, w,
+                    a_bits=bits, w_bits=bits, variant=variant, level=level,
+                )
+                passes = bs.plane_pass_count(bits, bits, level, "fully_serial")
+                out.append((f"kernel/{level}_{variant}_b{bits}", round(us, 1),
+                            f"mxu_passes={passes}"))
+        # serial-parallel (Stripes-style) point
+        us = _time(bs.bitserial_matmul, a, w, a_bits=bits, w_bits=bits,
+                   variant="booth", level="bitplane", mode="serial_parallel")
+        out.append((f"kernel/bitplane_sp_b{bits}", round(us, 1),
+                    f"mxu_passes={bs.plane_pass_count(bits, bits, 'bitplane', 'serial_parallel')}"))
+    return out
+
+
+def precision_sweep() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    out = []
+    for bits in (1, 2, 4, 8, 12, 16):
+        err = float(quantization_error(x, bits))
+        out.append((f"precision/rms_err_b{bits}", round(err, 6), "per-tensor"))
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    return matmul_bench() + precision_sweep()
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")

@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+records.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun_final]
+
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ARCH_ORDER = [
+    "llama3-405b", "deepseek-coder-33b", "granite-3-8b", "yi-6b",
+    "mamba2-1.3b", "qwen3-moe-235b-a22b", "llama4-scout-17b-a16e",
+    "recurrentgemma-2b", "hubert-xlarge", "internvl2-2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str):
+    recs = {}
+    for f in pathlib.Path(dirpath).glob("*.json"):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def dryrun_table(recs, mesh: str) -> str:
+    rows = [
+        "| arch | shape | status | GiB/dev (raw) | GiB/dev (TPU) | fits 16G | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "SKIP":
+                rows.append(f"| {arch} | {shape} | SKIP — {r['reason']} | | | | |")
+                continue
+            if r["status"] == "FAIL":
+                rows.append(f"| {arch} | {shape} | **FAIL** | | | | |")
+                continue
+            m = r["memory"]
+            tpu = m.get("per_device_bytes_tpu", m["per_device_bytes"])
+            rows.append(
+                f"| {arch} | {shape} | OK | {fmt_bytes(m['per_device_bytes'])} "
+                f"| {fmt_bytes(tpu)} | {'yes' if m['fits_16gb'] else 'NO'} "
+                f"| {r['compile_s']} |"
+            )
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh: str) -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| MODEL/HLO flops | MFU@roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None or r["status"] != "OK":
+                continue
+            rl = r["roofline"]
+            rows.append(
+                f"| {arch} | {shape} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+                f"| {rl['collective_s']:.3f} | {rl['bottleneck']} "
+                f"| {rl['useful_flop_fraction']:.3f} | {rl['mfu_at_roofline']:.4f} |"
+            )
+    return "\n".join(rows)
+
+
+def summary(recs) -> str:
+    by = {"OK": 0, "SKIP": 0, "FAIL": 0}
+    fits = 0
+    ok = 0
+    for r in recs.values():
+        by[r["status"]] += 1
+        if r["status"] == "OK":
+            ok += 1
+            if r["memory"]["fits_16gb"]:
+                fits += 1
+    return (
+        f"{len(recs)} cells: {by['OK']} OK, {by['SKIP']} documented skips, "
+        f"{by['FAIL']} failures; {fits}/{ok} compiled cells fit 16 GiB/chip "
+        f"(TPU-corrected occupancy)."
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun_final")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print(f"no records in {args.dir}")
+        return
+    print("## Summary\n")
+    print(summary(recs))
+    for mesh in ("16x16", "2x16x16"):
+        if not any(k[2] == mesh for k in recs):
+            continue
+        print(f"\n## Dry-run — mesh {mesh}\n")
+        print(dryrun_table(recs, mesh))
+    print("\n## Roofline — single pod (16x16, 256 chips)\n")
+    print(roofline_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

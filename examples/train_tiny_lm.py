@@ -1,0 +1,85 @@
+"""End-to-end training driver: train a small LM for a few hundred steps
+through the full stack — sharded data pipeline, QuantizedLinear layers
+(QAT at the policy's bit-widths), AdamW, checkpoint/restart, straggler
+detection — and verify the loss actually falls.
+
+Default is a fast ~7M-parameter llama-family model (CPU-friendly);
+``--model-100m`` selects a ~100M-parameter config (the deliverable-scale
+run; several hours on a laptop CPU, minutes on one accelerator).
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+          [--model-100m] [--qat-bits 8] [--ckpt /tmp/tiny_ckpt]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.core.precision import PrecisionPolicy
+from repro.launch.train import TrainRun
+from repro.models.config import ModelConfig
+
+
+def tiny_7m() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-7m", family="dense", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, head_dim=32, d_ff=768, vocab_size=4096,
+    )
+
+
+def lm_100m() -> ModelConfig:
+    # ~100M params: 12L, d=768, llama-style (GQA 12H/kv4, SwiGLU 2048)
+    return ModelConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--model-100m", action="store_true")
+    ap.add_argument("--qat-bits", type=int, default=0,
+                    help="train with fake-quant at this width (0 = dense)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = lm_100m() if args.model_100m else tiny_7m()
+    n = cfg.param_count()
+    print(f"[tiny-lm] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}, "
+          f"devices={jax.device_count()}")
+
+    policy = (
+        PrecisionPolicy.uniform(args.qat_bits, args.qat_bits,
+                                keep_dense=("lm_head", "embed"))
+        if args.qat_bits else PrecisionPolicy.off()
+    )
+    run = TrainRun(
+        cfg=cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        peak_lr=args.lr,
+        policy=policy,
+        ckpt_dir=args.ckpt,
+        ckpt_every=100,
+        log_every=20,
+    )
+    out = run.run(resume=args.resume)
+
+    first = sum(out["losses"][:10]) / max(len(out["losses"][:10]), 1)
+    last = sum(out["losses"][-10:]) / max(len(out["losses"][-10:]), 1)
+    print(f"[tiny-lm] loss {first:.3f} -> {last:.3f} "
+          f"({out['steps_per_s']:.2f} steps/s)")
+    assert last < first, "loss did not fall — training is broken"
+    print("[tiny-lm] OK: loss fell through the full sharded/QAT stack")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Async atomic sharded checkpointing."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

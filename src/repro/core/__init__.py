@@ -1,0 +1,44 @@
+"""bitSMM core: bit/digit-plane decompositions, the bit-serial matmul,
+precision policy, quantizers, and the systolic-array model."""
+
+from repro.core.bitplanes import (
+    PlaneDecomposition,
+    booth_nonzero_digit_count,
+    signed_range,
+    to_bitplanes,
+    to_digits,
+)
+from repro.core.bitserial import (
+    bitserial_matmul,
+    plane_pass_count,
+    quantized_matmul,
+)
+from repro.core.precision import MAX_BITS, LayerPrecision, PrecisionPolicy
+from repro.core.quantize import (
+    Quantized,
+    dequantize,
+    fake_quant,
+    quantization_error,
+    quantize,
+)
+from repro.core import systolic
+
+__all__ = [
+    "PlaneDecomposition",
+    "booth_nonzero_digit_count",
+    "signed_range",
+    "to_bitplanes",
+    "to_digits",
+    "bitserial_matmul",
+    "plane_pass_count",
+    "quantized_matmul",
+    "MAX_BITS",
+    "LayerPrecision",
+    "PrecisionPolicy",
+    "Quantized",
+    "dequantize",
+    "fake_quant",
+    "quantization_error",
+    "quantize",
+    "systolic",
+]

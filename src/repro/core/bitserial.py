@@ -1,0 +1,211 @@
+"""bitSMM's bit-serial matrix multiplication as a composable JAX op.
+
+The accelerator computes ``A @ W`` by streaming operand bits through a
+systolic array of serial MACs. In JAX the temporal bit stream becomes a
+reduction over *planes* (bit-planes, or int8 digit-planes on TPU):
+
+    A @ W = sum_{i,j}  w_i * w_j * (A_i @ W_j)
+
+where ``A_i``/``W_j`` are planes of the decompositions in
+:mod:`repro.core.bitplanes` and ``w_i`` their weights. Each plane pair is
+one MXU pass; the plane loop is a ``lax.scan`` so HLO size is independent
+of precision.
+
+Execution levels (see DESIGN.md §2):
+  * ``bitplane`` — paper-faithful: binary (SBMwC) or ternary (Booth) planes,
+    ``a_bits * w_bits`` plane-pair passes (Eq. 6 flavour of cost).
+  * ``digit``    — TPU-native: radix-256 digits, ``ceil(b/8)^2`` passes;
+    the Booth variant keeps every digit int8-native.
+  * ``fused``    — one integer matmul (the b<=8 endpoint of the paper's
+    runtime-precision dial).
+
+Modes:
+  * ``fully_serial``    — both operands decomposed (the paper's design).
+  * ``serial_parallel`` — only activations decomposed, weights kept
+    parallel (Stripes-style; a beyond-paper optimization on TPU where the
+    weight operand can sit in VMEM at full width).
+
+All paths are exact integer arithmetic within the accumulator dtype's
+range (int32 default; use int64/x64 for 16-bit operands with large K).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitplanes as bp
+
+Level = Literal["bitplane", "digit", "fused"]
+Mode = Literal["fully_serial", "serial_parallel"]
+Variant = Literal["sbmwc", "booth"]
+
+
+def _wrap_weights(ws, accum_dtype) -> jnp.ndarray:
+    """Wrap Python-int plane weights into the accumulator dtype.
+
+    Integer accumulation is modular (two's complement), so wrapping the
+    weights mod 2^width preserves exactness whenever the *true* product
+    fits the accumulator — e.g. Booth's redundant third digit pair has
+    weight 2^32 ≡ 0 (mod 2^32) and its contribution legitimately vanishes
+    in int32 arithmetic.
+    """
+    dt = jnp.dtype(accum_dtype)
+    if jnp.issubdtype(dt, jnp.integer):
+        width = dt.itemsize * 8
+        half = 1 << (width - 1)
+        ws = [((int(w) + half) % (1 << width)) - half for w in ws]
+    return jnp.asarray(ws, dtype=accum_dtype)
+
+
+def _dot(a: jax.Array, b: jax.Array, accum_dtype) -> jax.Array:
+    """Integer matmul with explicit accumulator dtype (MXU int8->int32 shape).
+
+    XLA's CPU backend miscompiles some narrow-int dot shapes (invalid LLVM
+    IR); upcast operands there — on TPU the int8 operands feed the MXU
+    directly.
+    """
+    if jax.default_backend() == "cpu":
+        a = a.astype(accum_dtype)
+        b = b.astype(accum_dtype)
+    return lax.dot_general(
+        a,
+        b,
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype,
+    )
+
+
+def _plane_pair_scan(dec_a, dec_w, accum_dtype) -> jax.Array:
+    """sum_{i,j} w_i w_j (A_i @ W_j) via a single scan over plane pairs."""
+    n_a, n_w = dec_a.n_planes, dec_w.n_planes
+    pair_w = _wrap_weights(
+        [wa * ww for wa in dec_a.weights for ww in dec_w.weights], accum_dtype
+    )
+    a_planes, w_planes = dec_a.planes, dec_w.planes
+
+    out_shape = a_planes.shape[1:-1] + w_planes.shape[2:]
+
+    def body(acc, idx):
+        i, j = idx // n_w, idx % n_w
+        partial_prod = _dot(a_planes[i], w_planes[j], accum_dtype)
+        return acc + pair_w[idx] * partial_prod, None
+
+    init = jnp.zeros(out_shape, dtype=accum_dtype)
+    acc, _ = lax.scan(body, init, jnp.arange(n_a * n_w))
+    return acc
+
+
+def _plane_scan_serial_parallel(dec_a, w, accum_dtype) -> jax.Array:
+    """sum_i w_i (A_i @ W) — only the activation side is serialized."""
+    weights = _wrap_weights(dec_a.weights, accum_dtype)
+    a_planes = dec_a.planes
+    out_shape = a_planes.shape[1:-1] + w.shape[1:]
+
+    def body(acc, idx):
+        return acc + weights[idx] * _dot(a_planes[idx], w, accum_dtype), None
+
+    init = jnp.zeros(out_shape, dtype=accum_dtype)
+    acc, _ = lax.scan(body, init, jnp.arange(dec_a.n_planes))
+    return acc
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "a_bits",
+        "w_bits",
+        "variant",
+        "level",
+        "mode",
+        "radix_bits",
+        "accum_dtype",
+    ),
+)
+def bitserial_matmul(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    a_bits: int,
+    w_bits: int,
+    variant: Variant = "booth",
+    level: Level = "digit",
+    mode: Mode = "fully_serial",
+    radix_bits: int = 8,
+    accum_dtype=jnp.int32,
+) -> jax.Array:
+    """Exact integer matmul of quantized operands via plane decomposition.
+
+    ``a``: integer array ``(..., K)`` holding ``a_bits``-bit two's-complement
+    values; ``w``: ``(K, N)`` with ``w_bits``-bit values. Returns
+    ``(..., N)`` in ``accum_dtype``.
+    """
+    if a.shape[-1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch {a.shape} @ {w.shape}")
+    # NOTE: no (B,S,K)->(B*S,K) flatten here — _dot contracts the last axis
+    # of n-d operands directly, and flattening would merge the batch/seq
+    # dims and strip their shardings under GSPMD (observed: a replicated
+    # 28 GiB int32 accumulator on the 33B multi-pod prefill cell —
+    # EXPERIMENTS.md §Perf).
+
+    if level == "fused":
+        # Single pass. For bits<=8 this is the native int8 MXU path.
+        if max(a_bits, w_bits) <= 8:
+            return _dot(a.astype(jnp.int8), w.astype(jnp.int8), accum_dtype)
+        return _dot(a.astype(accum_dtype), w.astype(accum_dtype), accum_dtype)
+
+    if level == "bitplane":
+        dec_a = bp.to_bitplanes(a, a_bits, variant)
+        if mode == "serial_parallel":
+            return _plane_scan_serial_parallel(dec_a, w.astype(jnp.int32), accum_dtype)
+        dec_w = bp.to_bitplanes(w, w_bits, variant)
+        return _plane_pair_scan(dec_a, dec_w, accum_dtype)
+
+    if level == "digit":
+        dec_a = bp.to_digits(a, a_bits, variant, radix_bits)
+        if mode == "serial_parallel":
+            return _plane_scan_serial_parallel(dec_a, w.astype(jnp.int32), accum_dtype)
+        dec_w = bp.to_digits(w, w_bits, variant, radix_bits)
+        return _plane_pair_scan(dec_a, dec_w, accum_dtype)
+
+    raise ValueError(f"unknown level {level!r}")
+
+
+def quantized_matmul(
+    a_q: jax.Array,
+    w_q: jax.Array,
+    scale_a: jax.Array,
+    scale_w: jax.Array,
+    *,
+    a_bits: int,
+    w_bits: int,
+    out_dtype=jnp.float32,
+    **kwargs,
+) -> jax.Array:
+    """Dequantized product: ``(scale_a ⊗ scale_w) * (a_q @ w_q)``.
+
+    ``scale_a`` broadcasts over the leading/batch dims of ``a_q`` (per-token
+    scales have shape ``a_q.shape[:-1] + (1,)``); ``scale_w`` broadcasts
+    over output features (per-channel scales have shape ``(N,)``).
+    """
+    acc = bitserial_matmul(a_q, w_q, a_bits=a_bits, w_bits=w_bits, **kwargs)
+    return (acc.astype(jnp.float32) * scale_a * scale_w).astype(out_dtype)
+
+
+def plane_pass_count(a_bits: int, w_bits: int, level: Level, mode: Mode, radix_bits: int = 8) -> int:
+    """Number of MXU passes a config costs — the software analogue of the
+    paper's cycle counts; used by the roofline/benchmark layers."""
+    if level == "fused":
+        return 1
+    if level == "bitplane":
+        return a_bits * (w_bits if mode == "fully_serial" else 1)
+    if level == "digit":
+        da = -(-a_bits // radix_bits)
+        dw = -(-w_bits // radix_bits)
+        # booth digit recode can add one plane; report the common case.
+        return da * (dw if mode == "fully_serial" else 1)
+    raise ValueError(level)

@@ -1,0 +1,107 @@
+"""Per-layer runtime-configurable precision — the paper's headline feature.
+
+bitSMM's MACs are synthesized for a maximum width (16 bits) but run at any
+effective precision 1–16, so "different layers (or groups of parameters)
+can use different bit-widths" (paper §V). :class:`PrecisionPolicy` is that
+dial in software: it maps layer names to (weight_bits, activation_bits)
+and selects the execution level/variant of the bit-serial matmul.
+
+Changing the policy re-specializes the jitted step (bit-widths are trace-
+time constants, exactly as the SA's max width is a synthesis-time constant
+and the effective width a runtime register — here "runtime" means
+"per-jit-specialization").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping, Optional, Tuple
+
+MAX_BITS = 16  # the paper's synthesis-time maximum
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPrecision:
+    w_bits: Optional[int] = None  # None -> dense bf16 path (technique off)
+    a_bits: Optional[int] = None
+
+    def __post_init__(self):
+        for b in (self.w_bits, self.a_bits):
+            if b is not None and not 1 <= b <= MAX_BITS:
+                raise ValueError(f"bits must be in [1, {MAX_BITS}], got {b}")
+        if (self.w_bits is None) != (self.a_bits is None):
+            raise ValueError("w_bits and a_bits must both be set or both None")
+
+    @property
+    def active(self) -> bool:
+        return self.w_bits is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer bit-width assignment.
+
+    ``default``: precision for layers not matched by ``overrides``.
+    ``overrides``: ordered mapping of regex -> LayerPrecision; first match
+    wins. Layer names are hierarchical, e.g. ``"layers/attn/q_proj"``,
+    ``"layers/moe/expert"``, ``"lm_head"``.
+    ``variant``/``level``/``mode``: how matmuls lower (see core.bitserial).
+    """
+
+    default: LayerPrecision = LayerPrecision()
+    overrides: Tuple[Tuple[str, LayerPrecision], ...] = ()
+    variant: str = "booth"
+    level: str = "digit"
+    mode: str = "fully_serial"
+
+    @staticmethod
+    def off() -> "PrecisionPolicy":
+        """Dense bf16 everywhere (technique disabled — the reference)."""
+        return PrecisionPolicy()
+
+    @staticmethod
+    def uniform(
+        w_bits: int,
+        a_bits: Optional[int] = None,
+        *,
+        variant: str = "booth",
+        level: str = "digit",
+        mode: str = "fully_serial",
+        keep_dense: Tuple[str, ...] = (),
+    ) -> "PrecisionPolicy":
+        """Same precision everywhere except ``keep_dense`` layer patterns."""
+        a_bits = w_bits if a_bits is None else a_bits
+        overrides = tuple((pat, LayerPrecision()) for pat in keep_dense)
+        return PrecisionPolicy(
+            default=LayerPrecision(w_bits, a_bits),
+            overrides=overrides,
+            variant=variant,
+            level=level,
+            mode=mode,
+        )
+
+    @staticmethod
+    def from_dict(spec: Mapping[str, Tuple[Optional[int], Optional[int]]], **kw) -> "PrecisionPolicy":
+        """e.g. ``{"": (8, 8), "lm_head": (None, None), "layers/0/": (4, 4)}``
+        — empty pattern is the default."""
+        default = LayerPrecision(*spec.get("", (None, None)))
+        overrides = tuple(
+            (pat, LayerPrecision(*bits)) for pat, bits in spec.items() if pat
+        )
+        return PrecisionPolicy(default=default, overrides=overrides, **kw)
+
+    def lookup(self, layer_name: str) -> LayerPrecision:
+        for pattern, prec in self.overrides:
+            if re.search(pattern, layer_name):
+                return prec
+        return self.default
+
+    def describe(self) -> str:
+        lines = [
+            f"PrecisionPolicy(level={self.level}, variant={self.variant}, mode={self.mode})",
+            f"  default: w{self.default.w_bits}/a{self.default.a_bits}",
+        ]
+        for pat, p in self.overrides:
+            lines.append(f"  {pat!r}: w{p.w_bits}/a{p.a_bits}")
+        return "\n".join(lines)

@@ -1,0 +1,90 @@
+"""Symmetric integer quantization with straight-through-estimator training.
+
+The paper's accelerator consumes 1–16-bit two's-complement operands; this
+module produces them. Weights are quantized per-output-channel, activations
+dynamically per-token (the software analogue of the paper's "runtime
+configurable precision" — scales are data-dependent, bit-widths come from
+the :class:`repro.core.precision.PrecisionPolicy`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplanes import signed_range
+
+
+class Quantized(NamedTuple):
+    values: jax.Array  # integer values, stored in int8 (bits<=8) or int32
+    scale: jax.Array  # float32, broadcastable against ``values``
+    bits: int
+
+
+def _qmax(bits: int) -> int:
+    _, hi = signed_range(bits)
+    return max(hi, 1)
+
+
+def quantize(x: jax.Array, bits: int, axis=None) -> Quantized:
+    """Symmetric quantization of ``x`` to ``bits``-bit integers.
+
+    ``axis``: axis/axes to *reduce* when computing the scale (None =
+    per-tensor). E.g. for a ``(K, N)`` weight, ``axis=0`` gives a per-
+    output-channel ``(1, N)`` scale; for ``(..., K)`` activations,
+    ``axis=-1`` gives per-token scales.
+    """
+    qmax = _qmax(bits)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8).astype(jnp.float32) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1 if bits > 1 else 0, qmax)
+    store_dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return Quantized(q.astype(store_dtype), scale, bits)
+
+
+def dequantize(q: Quantized) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+@jax.custom_vjp
+def _ste_round(x: jax.Array) -> jax.Array:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT).
+
+    Forward emits exactly the values the bit-serial inference path would
+    see; backward passes gradients through the rounding (clip gradient is
+    kept — saturated values get zero grad, standard LSQ-free QAT).
+    """
+    if bits is None:
+        return x
+    qmax = _qmax(bits)
+    amax = jnp.max(jnp.abs(jax.lax.stop_gradient(x)), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    lo, hi = (-qmax - 1 if bits > 1 else 0), qmax
+    q = jnp.clip(_ste_round(x / scale), lo, hi)
+    return (q * scale).astype(x.dtype)
+
+
+def quantization_error(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """RMS relative error of the symmetric quantizer at ``bits`` — used by
+    the precision-sweep example to reproduce the paper's accuracy-vs-bits
+    trade-off argument."""
+    q = quantize(x, bits, axis=axis)
+    err = dequantize(q) - x
+    return jnp.sqrt(jnp.mean(err**2)) / (jnp.sqrt(jnp.mean(x**2)) + 1e-12)

@@ -1,0 +1,201 @@
+"""Systolic-array performance model and cycle-accurate serial-MAC simulator.
+
+Two roles:
+
+1. **Analytical model** — Equations 6, 8, 9, 10 of the paper, used by the
+   benchmark layer to reproduce Tables II/III (GOPS at the reported
+   frequencies), Table IV, and Figure 6.
+
+2. **Cycle-accurate simulator** of both serial MAC variants (Booth and
+   SBMwC), bit-by-bit, matching the paper's hardware semantics:
+   multiplier streamed LSb-first; the Booth variant shifts the
+   (sign-extended) multiplicand left each cycle and adds/subtracts when
+   the two most recent multiplier bits differ; the SBMwC variant keeps
+   sum/difference accumulators and commits the difference at the sign
+   bit. This is what the paper's own testbenches exercised (§IV-A:
+   exhaustive pairs <= 8 bits, random 8-16 bits, random dot products of
+   up to 1000 values) — our tests mirror that protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# Analytical model (paper Eqs. 6, 8, 9, 10)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SAConfig:
+    """Compile-time systolic array topology (#columns x #rows in the paper's
+    notation; e.g. the evaluated 16x4, 32x8, 64x16)."""
+
+    width: int  # columns
+    height: int  # rows
+    max_bits: int = 16
+
+    @property
+    def n_macs(self) -> int:
+        return self.width * self.height
+
+
+# The paper's evaluated topologies.
+PAPER_TOPOLOGIES = (SAConfig(16, 4), SAConfig(32, 8), SAConfig(64, 16))
+
+
+def bismo_dot_cycles(b_mc: int, b_ml: int, n_values: int) -> int:
+    """Eq. 6 — BISMO/Loom-style cycles for a dot product (no parallelism)."""
+    return b_mc * b_ml * n_values
+
+
+def bitsmm_dot_cycles(b_max: int, n_values: int) -> int:
+    """Eq. 8 — bitSMM cycles for a dot product: (n+1) * b_max.
+
+    The +1 is the lead-in: the multiplicand streams b_max cycles ahead of
+    the multiplier (Eq. 7), overlapping the next value's multiplicand with
+    the current value's multiplier.
+    """
+    return (n_values + 1) * b_max
+
+
+def matmul_total_cycles(sa: SAConfig, n: int, bits: int) -> int:
+    """Compute latency (Eq. 8) + snake-readout latency (#rows x #cols)."""
+    return bitsmm_dot_cycles(bits, n) + sa.n_macs
+
+
+def op_per_cycle(sa: SAConfig, n: int, a_width: int, b_height: int, bits: int) -> float:
+    """Eq. 9 — MAC operations per cycle for an (n x a_width) @ (b_height x n)
+    product on the array (a_width <= sa.width, b_height <= sa.height)."""
+    ops = n * a_width * b_height
+    cycles = (1 + n) * bits + sa.n_macs
+    return ops / cycles
+
+
+def peak_op_per_cycle(sa: SAConfig, bits: int) -> float:
+    """Eq. 10 — n -> inf, matrices matching the SA dimensions."""
+    return sa.n_macs / bits
+
+
+def gops(sa: SAConfig, bits: int, freq_hz: float) -> float:
+    """Peak throughput in GOPS at a clock frequency (Tables II/III)."""
+    return peak_op_per_cycle(sa, bits) * freq_hz / 1e9
+
+
+def readout_cycles(sa: SAConfig) -> int:
+    """One accumulator per cycle through the snake network."""
+    return sa.n_macs
+
+
+def pipeline_register_count(sa: SAConfig) -> int:
+    """(#rows - 1)(#cols - 1) + 1 registers (paper §III-B)."""
+    return (sa.height - 1) * (sa.width - 1) + 1
+
+
+def mux_count(sa: SAConfig) -> int:
+    """#rows x #cols - 1 two-input muxes (paper §III-B)."""
+    return sa.n_macs - 1
+
+
+# --------------------------------------------------------------------------
+# Cycle-accurate serial MAC simulator
+# --------------------------------------------------------------------------
+
+
+def _twos_complement_bits(x: jax.Array, bits: int) -> jax.Array:
+    """Low ``bits`` bits of x, LSb first: shape x.shape + (bits,)."""
+    u = x.astype(jnp.int32) & ((1 << bits) - 1)
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    return (u[..., None] >> shifts) & 1
+
+
+def booth_mac_dot(mc: jax.Array, ml: jax.Array, bits: int) -> tuple[jax.Array, int]:
+    """Bit-serial Booth MAC over vectors ``mc`` (multiplicands) and ``ml``
+    (multipliers), both ``bits``-bit two's complement. Returns
+    (dot_product, total_cycles) with total_cycles = (n+1)*bits (Eq. 8).
+
+    Per cycle i of element e: examine (ml_bit[i], ml_bit[i-1]) — Table I —
+    and add/subtract the sign-extended multiplicand shifted left i bits.
+    """
+    n = mc.shape[0]
+    ml_bits = _twos_complement_bits(ml, bits)  # (n, bits)
+    mc32 = mc.astype(jnp.int32)
+
+    def cycle(carry, t):
+        acc, prev_bit = carry
+        e, i = t // bits, t % bits
+        cur = ml_bits[e, i]
+        prev = jnp.where(i == 0, 0, prev_bit)
+        d = prev - cur  # Booth digit in {-1, 0, +1}
+        acc = acc + d * (mc32[e] << i)
+        return (acc, cur), None
+
+    (acc, _), _ = lax.scan(
+        cycle, (jnp.int32(0), jnp.int32(0)), jnp.arange(n * bits, dtype=jnp.int32)
+    )
+    return acc, bitsmm_dot_cycles(bits, n)
+
+
+def sbmwc_mac_dot(mc: jax.Array, ml: jax.Array, bits: int) -> tuple[jax.Array, int]:
+    """Bit-serial SBMwC MAC: unsigned accumulation with a subtract at the
+    multiplier sign bit. The hardware keeps sum and difference accumulators
+    (two adders) because it cannot know in advance whether the current bit
+    is the final one; we model both and select, which is bit-exact."""
+    n = mc.shape[0]
+    ml_bits = _twos_complement_bits(ml, bits)
+    mc32 = mc.astype(jnp.int32)
+
+    def cycle(acc, t):
+        e, i = t // bits, t % bits
+        bit = ml_bits[e, i]
+        shifted = mc32[e] << i
+        acc_sum = acc + shifted  # the "sum" accumulator
+        acc_diff = acc - shifted  # the "difference" accumulator
+        is_sign = i == bits - 1
+        acc = jnp.where(bit == 1, jnp.where(is_sign, acc_diff, acc_sum), acc)
+        return acc, None
+
+    acc, _ = lax.scan(cycle, jnp.int32(0), jnp.arange(n * bits, dtype=jnp.int32))
+    return acc, bitsmm_dot_cycles(bits, n)
+
+
+def serial_mac_dot(
+    mc: jax.Array, ml: jax.Array, bits: int, variant: str = "booth"
+) -> tuple[jax.Array, int]:
+    if variant == "booth":
+        return booth_mac_dot(mc, ml, bits)
+    if variant == "sbmwc":
+        return sbmwc_mac_dot(mc, ml, bits)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def serial_sa_matmul(
+    a: jax.Array, b: jax.Array, bits: int, sa: SAConfig, variant: str = "booth"
+) -> tuple[jax.Array, int]:
+    """Matrix product on the simulated SA: each output element is one MAC's
+    accumulator; returns (A @ B, total_cycles incl. snake readout).
+
+    ``a``: (M, n) multipliers streamed on horizontal inputs (LSb first),
+    ``b``: (n, N) multiplicands on vertical inputs (MSb first); M <= rows,
+    N <= cols as in the hardware.
+    """
+    m, n = a.shape
+    n2, ncols = b.shape
+    assert n == n2
+    if m > sa.height or ncols > sa.width:
+        raise ValueError(f"matrix {a.shape}x{b.shape} exceeds SA {sa.width}x{sa.height}")
+    dot = jax.vmap(
+        jax.vmap(
+            lambda ml_row, mc_col: serial_mac_dot(mc_col, ml_row, bits, variant)[0],
+            in_axes=(None, 1),
+        ),
+        in_axes=(0, None),
+    )
+    out = dot(a, b)
+    cycles = bitsmm_dot_cycles(bits, n) + readout_cycles(sa)
+    return out, cycles

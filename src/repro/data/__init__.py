@@ -1,0 +1,5 @@
+"""Deterministic sharded data pipeline."""
+
+from repro.data.pipeline import DataConfig, DataPipeline, write_token_file
+
+__all__ = ["DataConfig", "DataPipeline", "write_token_file"]

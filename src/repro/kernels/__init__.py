@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots:
+
+* ``plane_mm``        — fused plane-pair (bit/digit-serial) matmul, the
+                        paper's MAC-with-accumulator re-tiled for VMEM/MXU;
+* ``flash_attention`` — blockwise online-softmax attention for the
+                        long-sequence shape cells.
+
+``ops`` holds the jitted dispatch wrappers, ``ref`` the jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.plane_mm import plane_matmul
+
+__all__ = ["ops", "ref", "flash_attention", "plane_matmul"]

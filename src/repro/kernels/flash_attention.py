@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: blockwise (flash) attention with online softmax.
+
+Needed by the long-sequence shape cells: materializing a 32k x 32k score
+matrix is impossible, so attention is computed KV-block by KV-block with
+a running (max, sum, acc) in VMEM scratch — the standard flash schedule,
+re-tiled for the TPU (128-aligned blocks, MXU matmuls, VMEM scratch).
+
+Supports causal masking (with whole-block skipping above the diagonal)
+and GQA via a query-head -> kv-head index map (no KV broadcast in HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scratch,
+    l_scratch,
+    acc_scratch,
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _reset():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    # Causal: skip KV blocks strictly above the diagonal.
+    should_run = True
+    if causal:
+        should_run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(should_run)
+    def _run():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scratch[...]  # (block_q, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_scratch[...]
+        o_ref[0, 0] = (acc_scratch[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0 (GQA).
+
+    Sq % block_q == 0 and Sk % block_k == 0 (wrapper pads otherwise).
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}")
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq lens ({sq},{sk}) must tile by ({block_q},{block_k})")
+
+    kv_steps = sk // block_k
+    grid = (b, hq, sq // block_q, kv_steps)
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_steps=kv_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _scratch(block_q, 1),
+            _scratch(block_q, 1),
+            _scratch(block_q, d),
+        ],
+        compiler_params=dict(
+            mosaic=dict(
+                dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+            )
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(rows: int, cols: int):
+    import jax.experimental.pallas.tpu as pltpu  # deferred: CPU-safe import
+
+    return pltpu.VMEM((rows, cols), jnp.float32)

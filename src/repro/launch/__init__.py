@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, dry-run, roofline, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` force-sets XLA_FLAGS at import — import it
+only in a dedicated process (``python -m repro.launch.dryrun``).
+"""

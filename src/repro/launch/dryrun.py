@@ -1,0 +1,366 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax-touching import
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input-shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with the
+roofline terms (see launch/roofline.py); EXPERIMENTS.md tables are
+generated from these records.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_applicable, get_config
+from repro.core.precision import PrecisionPolicy
+from repro.launch import roofline
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+from repro.models.quant import quantize_params
+from repro.models.transformer import init_params
+from repro.optim import OptimConfig, state_specs
+from repro.sharding import rules as sh
+
+
+@dataclasses.dataclass
+class ArchProfile:
+    """Per-arch dry-run settings (memory-driven; see DESIGN.md §6)."""
+
+    optimizer: str = "adamw"
+    microbatches: int = 1
+    grad_accum_dtype: str = "float32"
+    remat_group: int = 1
+    # the paper's technique, TPU-adapted defaults (digit-serial Booth w8a8)
+    serve_policy: PrecisionPolicy = dataclasses.field(
+        default_factory=lambda: PrecisionPolicy.uniform(
+            8, 8, variant="booth", level="digit",
+            keep_dense=("frontend", "router"),  # routing stays fp32 (tiny, acc-critical)
+        )
+    )
+    # Training defaults to dense bf16: the paper's accelerator targets
+    # inference; QAT (PrecisionPolicy.uniform(8,8)) is a supported,
+    # smoke-tested option but adds f32 fake-quant cotangent buffers that
+    # the 405B-scale cells don't budget for (see EXPERIMENTS.md §Perf).
+    train_policy: PrecisionPolicy = dataclasses.field(
+        default_factory=PrecisionPolicy.off
+    )
+
+
+PROFILES = {
+    # NOTE single-level remat_group>1 REGRESSED for llama3-405b (backward
+    # materialized a whole group's intermediates: temp 18.3->22.6 GB) —
+    # recorded in EXPERIMENTS.md §Perf. The two-level version (inner
+    # per-period checkpoint) shrinks the residual stack by the group size
+    # at ~one extra in-group forward, which is what these profiles use.
+    # mb=16 fits 16GB/chip (13.9 GiB TPU-corrected); mb=8 is ~30% faster on
+    # the collective term but needs 17.6 GiB — the fits-first choice here,
+    # the trade-off is recorded in EXPERIMENTS.md §Perf.
+    "llama3-405b": ArchProfile(
+        optimizer="adafactor", microbatches=16, grad_accum_dtype="bfloat16",
+    ),
+    "deepseek-coder-33b": ArchProfile(optimizer="adafactor", microbatches=2),
+    "qwen3-moe-235b-a22b": ArchProfile(
+        optimizer="adafactor", microbatches=16, grad_accum_dtype="bfloat16",
+    ),
+    "llama4-scout-17b-a16e": ArchProfile(optimizer="adafactor", microbatches=2),
+    "mamba2-1.3b": ArchProfile(microbatches=2),
+    # 256k vocab: the f32 CE working set over (B/dev, 4k, 16k-shard) logits
+    # needs the batch split (was 20.8 GiB/dev at mb=1)
+    "recurrentgemma-2b": ArchProfile(microbatches=4),
+}
+
+
+def profile_for(arch: str) -> ArchProfile:
+    return PROFILES.get(arch, ArchProfile())
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape,
+    mesh,
+    *,
+    profile: ArchProfile,
+    policy_override: PrecisionPolicy | None = None,
+):
+    """Build + lower + compile the cell's step. Returns (lowered, compiled)."""
+    if profile.remat_group > 1:
+        cfg = dataclasses.replace(cfg, remat_group=profile.remat_group)
+    rules = sh.rules_for_mesh(mesh)
+    with sh.use_rules(rules):
+        key = jax.random.PRNGKey(0)
+        params_struct = jax.eval_shape(functools.partial(init_params, cfg), key)
+        batch = input_specs(cfg, shape)
+        batch_sh = _shardings(sh.batch_specs(batch), mesh)
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            policy = policy_override or profile.train_policy
+            opt_cfg = OptimConfig(kind=profile.optimizer)
+            # Each microbatch's global slice must still divide the batch
+            # shards, or GSPMD replicates activations across them (observed
+            # +11 GiB/dev on the 2-pod llama3 train cell): clamp so
+            # (global_batch / mb) % batch_shards == 0.
+            mb = min(
+                profile.microbatches, shape.global_batch // _bsz(mesh, rules)
+            )
+            step_fn = make_train_step(
+                cfg,
+                opt_cfg,
+                policy=policy,
+                microbatches=max(mb, 1),
+                grad_accum_dtype=jnp.dtype(profile.grad_accum_dtype),
+            )
+            opt_struct = jax.eval_shape(opt_cfg.build().init, params_struct)
+            p_specs = sh.tree_param_specs(params_struct)
+            p_sh = _shardings(p_specs, mesh)
+            o_specs = state_specs(profile.optimizer, params_struct, p_specs)
+            o_sh = _shardings(o_specs, mesh)
+            metrics_sh = {"loss": repl, "grad_norm": repl}
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, batch_sh, repl),
+                out_shardings=(p_sh, o_sh, metrics_sh),
+                donate_argnums=(0, 1),
+            )
+            step_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(params_struct, opt_struct, batch, step_scalar)
+
+        elif shape.kind == "prefill":
+            policy = policy_override or profile.serve_policy
+            q_struct = jax.eval_shape(
+                lambda p: quantize_params(p, policy), params_struct
+            )
+            p_sh = _shardings(sh.tree_param_specs(q_struct), mesh)
+            from repro.launch.steps import make_prefill_step
+
+            step_fn = make_prefill_step(cfg, policy=policy)
+            # out: (last_logits (B, V), cache). Without explicit shardings
+            # XLA may replicate the returned KV cache (observed: +15 GiB/dev
+            # on the 33B prefill cell — EXPERIMENTS.md §Perf).
+            out_struct = jax.eval_shape(step_fn, q_struct, batch)
+            logits_sh = NamedSharding(
+                mesh,
+                P(
+                    rules.batch_axes
+                    if shape.global_batch % _bsz(mesh, rules) == 0
+                    else None,
+                    rules.model_axis,
+                ),
+            )
+            cache_sh_out = (
+                _shardings(sh.tree_cache_specs(out_struct[1]), mesh)
+                if out_struct[1] is not None
+                else None
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh_out),
+            )
+            lowered = jitted.lower(q_struct, batch)
+
+        else:  # decode
+            policy = policy_override or profile.serve_policy
+            q_struct = jax.eval_shape(
+                lambda p: quantize_params(p, policy), params_struct
+            )
+            p_sh = _shardings(sh.tree_param_specs(q_struct), mesh)
+            cache_struct = jax.eval_shape(
+                functools.partial(
+                    init_cache, cfg, shape.global_batch, shape.seq_len, cfg.dtype
+                )
+            )
+            cache_sh = _shardings(sh.tree_cache_specs(cache_struct), mesh)
+            tok_sh = NamedSharding(
+                mesh,
+                P(rules.batch_axes if shape.global_batch % _bsz(mesh, rules) == 0 else None, None),
+            )
+            step_fn = make_serve_step(cfg, policy=policy)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, cache_sh, tok_sh),
+                out_shardings=(tok_sh, cache_sh),
+                donate_argnums=(1,),
+            )
+            tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            lowered = jitted.lower(q_struct, cache_struct, tokens)
+
+        compiled = lowered.compile()
+        return lowered, compiled
+
+
+def _bsz(mesh, rules):
+    n = 1
+    for a in rules.batch_axes:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        _write(out_dir, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(mesh.devices.ravel()))
+    t0 = time.time()
+    try:
+        lowered, compiled = lower_cell(cfg, shape, mesh, profile=profile_for(arch))
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        _write(out_dir, rec)
+        return rec
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_name}.hlo").write_text(hlo)
+    # Scan-aware accounting: while (lax.scan) bodies multiplied by the
+    # compiler-proven trip counts; ring-model wire bytes per collective.
+    from repro.launch import hlo_cost
+
+    cost = hlo_cost.analyze(hlo)
+    flops, bytes_ = cost.flops * chips, cost.bytes * chips
+    colls = {
+        k: {
+            "count": int(v["count"]),
+            "bytes": int(v["bytes"]),
+            "wire": int(v.get("wire", 0)),
+        }
+        for k, v in sorted(cost.collectives.items())
+    }
+    wire = cost.wire_bytes * chips
+    rl = roofline.Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_,
+        collective_bytes=wire,
+        model_flops=roofline.model_flops(cfg, shape),
+    )
+    per_dev_bytes = (
+        mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    # XLA:CPU promotes large bf16 loop carries (grad accumulators, remat
+    # residual stacks) to f32 — verified bf16 at jaxpr level; a TPU
+    # lowering keeps them bf16 (half the bytes). Report both raw and
+    # TPU-corrected occupancy (EXPERIMENTS.md §Dry-run notes).
+    from repro.launch import hlo_buffers
+
+    f32_carry = hlo_buffers.cpu_f32_carry_bytes(hlo)
+    per_dev_tpu = per_dev_bytes - f32_carry // 2
+    rec.update(
+        status="OK",
+        compile_s=round(compile_s, 1),
+        chips=chips,
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "cpu_f32_carry_bytes": f32_carry,
+            "per_device_bytes_tpu": per_dev_tpu,
+            "fits_16gb": bool(per_dev_tpu < roofline.HBM_BYTES),
+        },
+        collectives=colls,
+        roofline=rl.row(),
+    )
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: pathlib.Path, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    results = []
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, mp, out_dir, save_hlo=args.save_hlo)
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            r = rec["roofline"]
+            extra = (
+                f" compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                f"coll={r['collective_s']:.4f}s bottleneck={r['bottleneck']}"
+                f" fits={rec['memory']['fits_16gb']} compile={rec['compile_s']}s"
+            )
+        elif status == "FAIL":
+            extra = " " + rec["error"][:160]
+        else:
+            extra = " " + rec["reason"]
+        print(f"[{status}] {arch} x {shape} x {rec['mesh']}{extra}", flush=True)
+        results.append(rec)
+
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status']=='OK' for r in results)} ok, "
+          f"{sum(r['status']=='SKIP' for r in results)} skip, {n_fail} fail")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Largest-buffer analysis from optimized HLO text.
+
+``compiled.memory_analysis()`` gives only totals; to see WHAT occupies a
+device this walks the HLO for the structurally long-lived allocations:
+
+* entry parameters (weights/optimizer state/donated args),
+* while-loop carried tuples (alive for the whole loop: scan carries,
+  gradient accumulators, stacked remat residuals),
+* the largest single instruction outputs (peak working set candidates).
+
+Used by the §Perf iterations to find what to shrink next.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+from repro.launch.hlo_cost import (
+    _ARRAY_RE,
+    _DTYPE_BYTES,
+    _parse_computations,
+)
+
+
+def _tensor_sizes(type_str: str) -> List[Tuple[int, str]]:
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((n * _DTYPE_BYTES[dt], f"{dt}[{dims}]"))
+    return out
+
+
+def report(hlo: str, top: int = 15) -> str:
+    comps = _parse_computations(hlo)
+    entry = comps.get("__entry__", [])
+    lines = []
+
+    params = []
+    for i in entry:
+        if i.opcode == "parameter":
+            params.extend(_tensor_sizes(i.type_str))
+    params.sort(reverse=True)
+    total_p = sum(b for b, _ in params)
+    lines.append(f"entry parameters: {total_p/2**30:.2f} GiB total")
+    for b, s in params[:top]:
+        lines.append(f"  {b/2**30:8.3f} GiB  {s}")
+
+    lines.append("\nwhile-loop carries (live across the whole loop):")
+    for name, instrs in comps.items():
+        if name == "__entry__":
+            continue
+        for i in instrs:
+            if i.opcode != "while":
+                continue
+            sizes = _tensor_sizes(i.type_str)
+            tot = sum(b for b, _ in sizes)
+            trip = re.search(r'"known_trip_count":\{"n":"(\d+)"', i.rest)
+            lines.append(
+                f"  while in {name[:40]:40s} trips={trip.group(1) if trip else '?':>4s}"
+                f" carry={tot/2**30:7.2f} GiB"
+            )
+            for b, s in sorted(sizes, reverse=True)[:6]:
+                if b > 2**28:
+                    lines.append(f"      {b/2**30:8.3f} GiB  {s}")
+
+    lines.append("\nlargest single outputs anywhere:")
+    seen = []
+    for name, instrs in comps.items():
+        if name == "__entry__":
+            continue
+        for i in instrs:
+            if i.opcode in ("parameter", "tuple", "while", "get-tuple-element"):
+                continue
+            for b, s in _tensor_sizes(i.type_str):
+                seen.append((b, i.opcode, s, name))
+    seen.sort(reverse=True)
+    dedup = []
+    seen_keys = set()
+    for b, op, s, comp in seen:
+        key = (op, s)
+        if key in seen_keys:
+            continue
+        seen_keys.add(key)
+        dedup.append((b, op, s, comp))
+        if len(dedup) >= top:
+            break
+    for b, op, s, comp in dedup:
+        lines.append(f"  {b/2**30:8.3f} GiB  {op:22s} {s}  ({comp[:30]})")
+    return "\n".join(lines)
+
+
+def cpu_f32_carry_bytes(hlo: str, min_bytes: int = 64 * 2**20) -> int:
+    """Bytes attributable to XLA:CPU's bf16->f32 promotion of while-loop
+    carries.
+
+    The host CPU backend has no native bf16 ALU, so loop-carried bf16
+    accumulators (gradient sums, stacked remat residuals) are kept in f32
+    by the compiler — verified against the jaxpr, where the same carries
+    are bf16 (EXPERIMENTS.md §Perf llama3 iteration). A TPU lowering keeps
+    them bf16, i.e. half the bytes. Returns the total f32-carry bytes
+    above ``min_bytes`` whose TPU size would be half.
+    """
+    comps = _parse_computations(hlo)
+    # Nested whiles re-list the outer carry's buffers in their own tuple
+    # (the buffer is threaded through, aliased by XLA). Count each shape at
+    # its max multiplicity within a SINGLE while carry: within-carry
+    # duplicates are distinct buffers (e.g. gate/up grads share a shape),
+    # across-nesting repeats are the same buffer.
+    per_shape: dict = {}
+    for name, instrs in comps.items():
+        if name == "__entry__":
+            continue
+        for i in instrs:
+            if i.opcode != "while":
+                continue
+            local: dict = {}
+            for m in _ARRAY_RE.finditer(i.type_str):
+                dt, dims = m.group(1), m.group(2)
+                if dt != "f32":
+                    continue
+                shape = [int(d) for d in dims.split(",") if d]
+                if len(shape) < 2:
+                    continue
+                b = 4
+                for d in shape:
+                    b *= d
+                if b >= min_bytes:
+                    local[dims] = (local.get(dims, (0, 0))[0] + 1, b)
+            for dims, (cnt, b) in local.items():
+                prev = per_shape.get(dims, (0, 0))
+                if cnt > prev[0]:
+                    per_shape[dims] = (cnt, b)
+    return sum(cnt * b for cnt, b in per_shape.values())
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(report(open(sys.argv[1]).read()))

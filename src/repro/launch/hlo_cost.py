@@ -1,0 +1,448 @@
+"""Scan-aware cost accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — but our train
+and decode steps scan over layers (and microbatches), so its FLOPs/bytes
+undercount by the trip count (~63x for llama3-405b). XLA records the trip
+count it proved on every while op (``backend_config={"known_trip_count":
+{"n":...}}``), so this module re-walks the HLO call graph and accumulates
+
+  * flops            — dot/convolution ops (2 * prod(out) * prod(contract)),
+  * bytes            — HloCostAnalysis-style optimistic bytes accessed
+                       (operands + output per top-level op; fusions count
+                       only at the call site),
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       per collective kind,
+
+multiplying every while body by its known trip count. Validated against
+``cost_analysis()`` on scan-free programs (tests/test_roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8,
+    "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one array shape: dtype[d0,d1,...]{layout}  (layout optional)
+_ARRAY_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+# ops that move no real data (address/book-keeping only)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Elementwise/shape ops the TPU compiler always fuses into consumers. The
+# CPU backend (our dry-run host) leaves many of these unfused, which would
+# inflate the memory term ~10x vs a TPU compile; count them as fused (their
+# traffic shows up at the surviving boundaries: fusions, dots, copies,
+# slices, reduces, collectives).
+_FUSED_ON_TPU = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "negate", "abs", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "tanh", "sine", "cosine", "sqrt", "rsqrt", "power",
+    "convert", "compare", "select", "and", "or", "not", "xor",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "broadcast", "reshape", "clamp", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sign", "is-finite", "rem", "atan2", "expm1",
+    "log1p", "logistic", "cbrt", "erf", "real", "imag", "complex",
+    "reduce-precision", "stochastic-convert", "tan",
+}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shapes_of(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict
+    )
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += times * other.flops
+        self.bytes += times * other.bytes
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(k, {})
+            for field, val in v.items():
+                slot[field] = slot.get(field, 0.0) + times * val
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v.get("wire", 0.0) for v in self.collectives.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (rest of the line)
+
+
+def _split_type_op(rest: str) -> Optional[Tuple[str, str, str]]:
+    """Split '<type> opcode(args...' into (type, opcode, args-tail).
+
+    Result types may be tuples containing ``/*index=N*/`` comments and
+    layouts with parens (``{1,0:T(8,128)}``), so this is a char scan, not
+    a regex: find the first '(' at bracket-depth 0 (skipping a leading
+    balanced tuple type), then walk back over the opcode word.
+    """
+    i = 0
+    n = len(rest)
+    if rest.startswith("("):  # tuple result type: consume balanced parens
+        depth = 0
+        while i < n:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    i += 1
+                    break
+            i += 1
+    depth = 0
+    while i < n:
+        ch = rest[i]
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        elif ch == "(" and depth == 0:
+            k = i
+            while k > 0 and (rest[k - 1].isalnum() or rest[k - 1] in "-_"):
+                k -= 1
+            opcode = rest[k:i]
+            if not opcode:
+                return None
+            return rest[:k].strip(), opcode, rest[i + 1 :]
+        i += 1
+    return None
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    entry_alias: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry_alias = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        split = _split_type_op(m.group(2))
+        if split:
+            type_str, opcode, tail = split
+            comps[cur].append(_Instr(m.group(1), type_str, opcode, tail))
+    if entry_alias is not None:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(rest: str) -> int:
+    """Participants per replica group of a collective op."""
+    m = _IOTA_GROUPS_RE.search(rest)
+    if m:  # iota form: [n_groups, group_size]<=[total]
+        return max(int(m.group(2)), 1)
+    m = _EXPLICIT_GROUPS_RE.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+def _wire_bytes(kind: str, operand_bytes: float, g: int) -> float:
+    """Per-device ICI wire bytes under the ring algorithm.
+
+    Operand payloads: all-gather input is the local shard (wire = (g-1)x
+    shard); reduce-scatter input is the full tensor (wire = (g-1)/g x it);
+    all-reduce moves ~2(g-1)/g x the tensor (RS+AG); all-to-all keeps
+    (g-1)/g of the buffer on the wire; permute is point-to-point.
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * f * operand_bytes
+    if kind == "all-gather":
+        return float(g - 1) * operand_bytes
+    if kind == "reduce-scatter":
+        return f * operand_bytes
+    if kind == "all-to-all":
+        return f * operand_bytes
+    return operand_bytes  # collective-permute
+
+
+def _dot_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dims)."""
+    out_shapes = _shapes_of(instr.type_str)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    m = _CONTRACT_RE.search(instr.rest)
+    contract = 1
+    if m:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        lhs_name = None
+        om = _OPERAND_RE.search(instr.rest)
+        if om:
+            lhs_name = om.group(1)
+        lhs_type = symtab.get(lhs_name, "")
+        lhs_shapes = _shapes_of(lhs_type)
+        if lhs_shapes:
+            lhs_shape = lhs_shapes[0][1]
+            for d in dims:
+                if d < len(lhs_shape):
+                    contract *= lhs_shape[d]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(kernel spatial) * C_in (approx)."""
+    out_shapes = _shapes_of(instr.type_str)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    ops = _OPERAND_RE.findall(instr.rest)
+    if len(ops) < 2:
+        return 0.0
+    rhs_shapes = _shapes_of(symtab.get(ops[1], ""))
+    if not rhs_shapes:
+        return 0.0
+    k = 1
+    for d in rhs_shapes[0][1][:-1]:  # kernel spatial+input dims (approx)
+        k *= d
+    # feature_group_count scales work down (depthwise convs)
+    gm = re.search(r"feature_group_count=(\d+)", instr.rest)
+    groups = int(gm.group(1)) if gm else 1
+    return 2.0 * out_elems * k / max(groups, 1)
+
+
+_SLICED_MEMO: Dict[Tuple[int, str], Dict[int, float]] = {}
+
+
+def _sliced_params(comp: str, comps: Dict[str, List[_Instr]]) -> Dict[int, float]:
+    """Fusion parameters consumed ONLY by (dynamic-)slice/gather ops map to
+    the slice-sized bytes actually touched (param index -> bytes)."""
+    key = (id(comps), comp)
+    if key in _SLICED_MEMO:
+        return _SLICED_MEMO[key]
+    out: Dict[int, float] = {}
+    instrs = comps.get(comp, [])
+    param_names: Dict[str, int] = {}
+    for i in instrs:
+        if i.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", i.rest)
+            if m:
+                param_names[i.name] = int(m.group(1))
+    for pname, pidx in param_names.items():
+        touched = 0.0
+        ok = True
+        consumed = False
+        for i in instrs:
+            if i.opcode == "parameter":
+                continue
+            ops_ = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+            if pname not in ops_:
+                continue
+            consumed = True
+            if i.opcode in ("slice", "dynamic-slice", "gather") and ops_[0] == pname:
+                touched += _bytes_of(i.type_str)
+            else:
+                ok = False
+                break
+        if ok and consumed:
+            out[pidx] = touched
+    _SLICED_MEMO[key] = out
+    return out
+
+
+def _walk(
+    comp: str,
+    comps: Dict[str, List[_Instr]],
+    memo: Dict[str, Cost],
+) -> Cost:
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = Cost()  # cycle guard (shouldn't happen in HLO)
+    total = Cost()
+    instrs = comps.get(comp, [])
+    symtab = {i.name: i.type_str for i in instrs}
+    for i in instrs:
+        op = i.opcode
+        if op in _FREE_OPS:
+            continue
+        base = op.replace("-start", "")
+        if base in _COLLECTIVE_KINDS:
+            operand_bytes = 0
+            for name in _OPERAND_RE.findall(i.rest.split(")", 1)[0]):
+                operand_bytes += _bytes_of(symtab.get(name, ""))
+            g = _group_size(i.rest)
+            slot = total.collectives.setdefault(
+                base, {"count": 0.0, "bytes": 0.0, "wire": 0.0}
+            )
+            slot["count"] += 1
+            slot["bytes"] += operand_bytes
+            slot["wire"] += _wire_bytes(base, operand_bytes, g)
+            total.bytes += operand_bytes + _bytes_of(i.type_str)
+            continue
+        if op.endswith("-done"):
+            continue
+        if op == "while":
+            m = _COND_BODY_RE.search(i.rest)
+            tm = _TRIP_RE.search(i.rest)
+            trips = int(tm.group(1)) if tm else 1
+            if not tm:
+                total.unknown_trip_whiles += 1
+            if m:
+                cond, body = m.group(1), m.group(2)
+                total.add(_walk(body, comps, memo), times=trips)
+                total.add(_walk(cond, comps, memo), times=trips)
+            continue
+        if op in ("call", "fusion", "async-start"):
+            cm = _CALLS_RE.search(i.rest)
+            called = cm.group(1) if cm else None
+            if called:
+                sub = _walk(called, comps, memo)
+                # flops roll up; bytes count only at the call boundary
+                total.flops += sub.flops
+                for k, v in sub.collectives.items():
+                    slot = total.collectives.setdefault(k, {})
+                    for field, val in v.items():
+                        slot[field] = slot.get(field, 0.0) + val
+                total.unknown_trip_whiles += sub.unknown_trip_whiles
+            operands = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+            operand_bytes = 0.0
+            sliced = _sliced_params(called, comps) if called else {}
+            for idx, n in enumerate(operands):
+                b = _bytes_of(symtab.get(n, ""))
+                # a param consumed only by (dynamic-)slice/gather inside the
+                # fusion touches just the slice, not the whole buffer
+                if idx in sliced:
+                    b = min(b, sliced[idx])
+                operand_bytes += b
+            total.bytes += operand_bytes + _bytes_of(i.type_str)
+            continue
+        if op == "conditional":
+            # attribute conservatively: the max-cost branch
+            branches = [
+                _walk(b, comps, memo)
+                for b in re.findall(r"branch_computations=\{([^}]*)\}", i.rest)
+                for b in re.findall(r"%?([\w.\-]+)", b)
+            ]
+            tb = re.search(r"true_computation=%?([\w.\-]+)", i.rest)
+            fb = re.search(r"false_computation=%?([\w.\-]+)", i.rest)
+            for mm in (tb, fb):
+                if mm:
+                    branches.append(_walk(mm.group(1), comps, memo))
+            if branches:
+                total.add(max(branches, key=lambda c: c.flops + c.bytes))
+            continue
+        if op in ("slice", "dynamic-slice", "gather"):
+            # touches only the slice-sized region, not the source buffer
+            total.bytes += 2.0 * _bytes_of(i.type_str)
+            continue
+        if op == "dynamic-update-slice":
+            ops_ = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+            upd = _bytes_of(symtab.get(ops_[1], "")) if len(ops_) > 1 else 0
+            total.bytes += 2.0 * upd  # read update + write region
+            continue
+        if op == "scatter":
+            ops_ = _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+            upd = _bytes_of(symtab.get(ops_[-1], "")) if ops_ else 0
+            idxb = _bytes_of(symtab.get(ops_[1], "")) if len(ops_) > 2 else 0
+            total.bytes += 2.0 * upd + idxb
+            continue
+        if op == "dot":
+            total.flops += _dot_flops(i, symtab)
+        elif op == "convolution":
+            total.flops += _conv_flops(i, symtab)
+        elif op in _FUSED_ON_TPU:
+            continue  # fused into a consumer on TPU: no HBM round-trip
+        # bytes: operands + output (HloCostAnalysis' optimistic lower bound)
+        operand_bytes = sum(
+            _bytes_of(symtab.get(n, ""))
+            for n in _OPERAND_RE.findall(i.rest.split(")", 1)[0])
+        )
+        total.bytes += operand_bytes + _bytes_of(i.type_str)
+    memo[comp] = total
+    return total
+
+
+def analyze(hlo_text: str) -> Cost:
+    """Scan-aware cost of the module's entry computation (per device —
+    the text is the per-device SPMD module)."""
+    comps = _parse_computations(hlo_text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[str, Cost] = {}
+    return _walk("__entry__", comps, memo)

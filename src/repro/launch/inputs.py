@@ -1,0 +1,70 @@
+"""Model-input construction: concrete batches (smoke tests, examples) and
+ShapeDtypeStruct stand-ins (the dry-run; no device allocation).
+
+Audio/VLM frontends are stubs per the assignment: ``input_specs`` feeds
+precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int, kind: str) -> dict:
+    """ShapeDtypeStructs for one step's data inputs. ``kind``:
+    train (tokens+targets), prefill (tokens), decode (one token)."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if kind == "decode":
+        return {"tokens": sd((batch, 1), i32)}
+    if cfg.frontend == "audio":
+        b = {"features": sd((batch, seq, cfg.frontend_dim), f32)}
+        if kind == "train":
+            b["targets"] = sd((batch, seq), i32)
+        return b
+    if cfg.frontend == "vision":
+        s_text = seq - cfg.num_patches
+        b = {
+            "tokens": sd((batch, s_text), i32),
+            "patches": sd((batch, cfg.num_patches, cfg.frontend_dim), f32),
+        }
+        if kind == "train":
+            b["targets"] = sd((batch, s_text), i32)
+        return b
+    b = {"tokens": sd((batch, seq), i32)}
+    if kind == "train":
+        b["targets"] = sd((batch, seq), i32)
+    return b
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """The assignment-cell inputs as ShapeDtypeStructs."""
+    return batch_struct(cfg, shape.global_batch, shape.seq_len, shape.kind)
+
+
+def make_batch(
+    cfg: ModelConfig,
+    batch: int,
+    seq: int,
+    kind: str = "train",
+    rng: Optional[np.random.Generator] = None,
+) -> dict:
+    """Concrete random batch matching :func:`batch_struct`."""
+    rng = rng or np.random.default_rng(0)
+    structs = batch_struct(cfg, batch, seq, kind)
+    out = {}
+    for name, s in structs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape), s.dtype
+            )
+        else:
+            out[name] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return out

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time: everything is a function.
+The production topology is a TPU v5e pod of 16x16 = 256 chips; multi-pod
+adds a leading "pod" axis (2 pods = 512 chips) carrying pure data
+parallelism over DCN.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def _mesh(shape, axes) -> Mesh:
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} "
+            "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    arr = np.array(devices[:n]).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (tests, elastic re-meshing)."""
+    return _mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (CPU tests: 1 or XLA-forced N)."""
+    n = len(jax.devices())
+    return _mesh((n // model, model), ("data", "model"))

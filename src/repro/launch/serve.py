@@ -1,0 +1,90 @@
+"""Serving driver: quantized weights + batched prefill/decode engine.
+
+This is where the paper's technique earns its keep: weights live in
+memory at their configured bit-width (quantize_params), activations are
+quantized per token at runtime, and every projection runs through the
+bit-serial matmul at the policy's level/variant.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --bits 8 --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.core.precision import PrecisionPolicy
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models.quant import quantize_params
+from repro.models.transformer import init_params
+
+
+class Engine:
+    """Minimal batched generation engine over the serve steps."""
+
+    def __init__(self, cfg, params, policy, max_len: int = 256):
+        self.cfg = cfg
+        self.policy = policy
+        self.q_params = quantize_params(params, policy) if policy.default.active else params
+        self.prefill = jax.jit(make_prefill_step(cfg, policy, max_len=max_len))
+        self.step = jax.jit(make_serve_step(cfg, policy), donate_argnums=(1,))
+
+    def generate(self, prompts: jax.Array, n_tokens: int):
+        """prompts: (B, S) int32. Greedy-decodes ``n_tokens``; returns
+        (tokens (B, n), decode_tok_per_s)."""
+        last_logits, cache = self.prefill(self.q_params, {"tokens": prompts})
+        tok = jnp.argmax(last_logits[:, : self.cfg.vocab_size], axis=-1).astype(
+            jnp.int32
+        )[:, None]
+        out = [tok]
+        t0 = time.time()
+        for _ in range(n_tokens - 1):
+            tok, cache = self.step(self.q_params, cache, tok)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        tokens = jnp.concatenate(out, axis=1)
+        tps = prompts.shape[0] * max(n_tokens - 1, 1) / max(dt, 1e-9)
+        return tokens, tps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="yi-6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--level", default="digit", choices=("bitplane", "digit", "fused"))
+    ap.add_argument("--variant", default="booth", choices=("booth", "sbmwc"))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if not cfg.is_decoder:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    policy = (
+        PrecisionPolicy.uniform(args.bits, args.bits, variant=args.variant, level=args.level)
+        if args.bits
+        else PrecisionPolicy.off()
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, policy, max_len=args.prompt_len + args.gen)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    tokens, tps = engine.generate(prompts, args.gen)
+    print(f"[serve] {cfg.name} w{args.bits}a{args.bits} {args.level}/{args.variant}: "
+          f"generated {tokens.shape} at {tps:.1f} tok/s")
+    print("[serve] first row:", np.asarray(tokens[0]))
+
+
+if __name__ == "__main__":
+    main()

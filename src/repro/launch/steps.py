@@ -1,0 +1,142 @@
+"""Jittable step functions: train (with gradient accumulation), prefill,
+decode. These are what the launcher jits/lowers — the dry-run AOT-compiles
+exactly these under the production mesh."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.precision import PrecisionPolicy
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, loss_fn
+from repro.optim import OptimConfig, apply_updates, clip_by_global_norm
+from repro.optim import compress as gcomp
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimConfig,
+    policy: Optional[PrecisionPolicy] = None,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    grad_accum_dtype=jnp.float32,
+):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients over batch slices with a
+    lax.scan (bounds live activation memory); ``compress_grads`` routes
+    gradients through int8 error-feedback compression (numerics of a
+    compressed cross-pod all-reduce — the error buffer rides in
+    opt_state['_gc_error'])."""
+    optimizer = opt_cfg.build()
+
+    def loss_one(p, mb):
+        return loss_fn(cfg, p, mb, policy=policy, training=True)
+
+    grad_fn = jax.value_and_grad(loss_one, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _metrics), g = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(grad_accum_dtype), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), params
+            )
+            (gsum, lsum), _ = lax.scan(body, (gzero, jnp.float32(0.0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, _metrics), grads = grad_fn(params, batch)
+
+        if compress_grads:
+            err = opt_state["_gc_error"]
+            qs, scales, err = gcomp.compress_tree(grads, err)
+            grads = gcomp.decompress_tree(qs, scales)
+            opt_state = dict(opt_state, _gc_error=err)
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        inner = {k: v for k, v in opt_state.items() if not k.startswith("_")}
+        updates, inner = optimizer.update(grads, inner, params, step)
+        params = apply_updates(params, updates)
+        new_state = dict(inner)
+        for k, v in opt_state.items():
+            if k.startswith("_") and k != "_gc_error":
+                new_state[k] = v
+        if compress_grads:
+            new_state["_gc_error"] = opt_state["_gc_error"]
+            new_state["_gc_error"] = err
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(cfg, opt_cfg: OptimConfig, params, compress_grads: bool = False):
+    state = dict(opt_cfg.build().init(params))
+    if compress_grads:
+        state["_gc_error"] = gcomp.init_error(params)
+    return state
+
+
+def make_prefill_step(cfg: ModelConfig, policy=None, max_len: Optional[int] = None):
+    """prefill_step(params, batch) -> (last_logits, cache). Cache zeros are
+    created inside the step so the dry-run captures their allocation."""
+
+    def prefill_step(params, batch):
+        if cfg.frontend == "audio":
+            bsz, s = batch["features"].shape[:2]
+        else:
+            bsz, s = batch["tokens"].shape
+            if cfg.frontend == "vision" and "patches" in batch:
+                s += batch["patches"].shape[1]
+        cache = init_cache(cfg, bsz, max_len or s, cfg.dtype) if cfg.is_decoder else None
+        logits, _aux, cache = forward(
+            cfg, params, batch, policy=policy, cache=cache, last_only=cfg.is_decoder
+        )
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy=None):
+    """decode_step(params, cache, batch) -> (logits, new_cache)."""
+
+    def decode_step(params, cache, batch):
+        logits, _aux, cache = forward(cfg, params, batch, policy=policy, cache=cache)
+        return logits[:, -1, :], cache
+
+    return decode_step
+
+
+def make_serve_step(cfg: ModelConfig, policy=None):
+    """One engine iteration: decode + greedy next token (the shape-cell
+    ``serve_step``: one new token against a seq_len-deep cache)."""
+    decode = make_decode_step(cfg, policy)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = decode(params, cache, {"tokens": tokens})
+        if logits.shape[-1] != cfg.vocab_size:  # mask padded-vocab columns
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            logits = jnp.where(col < cfg.vocab_size, logits, -jnp.inf)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step

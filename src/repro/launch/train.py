@@ -1,0 +1,183 @@
+"""Training driver: mesh + sharded train step + data pipeline + fault
+tolerance (checkpoint/restart, step retry, straggler detection).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --reduced --steps 50 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+Runs on whatever devices exist (CPU: 1 device; forced-host or TPU pod:
+the (data, model) host mesh). The same code path the dry-run AOT-compiles
+for the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.core.precision import PrecisionPolicy
+from repro.data import DataConfig, DataPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import init_opt_state, make_train_step
+from repro.models.transformer import init_params
+from repro.optim import OptimConfig, state_specs
+from repro.runtime import StragglerDetector, retry_step
+from repro.sharding import rules as sh
+
+
+@dataclasses.dataclass
+class TrainRun:
+    """Programmatic entry point (used by examples + tests)."""
+
+    cfg: object
+    steps: int = 20
+    global_batch: int = 8
+    seq_len: int = 128
+    microbatches: int = 1
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    policy: PrecisionPolicy = dataclasses.field(default_factory=PrecisionPolicy.off)
+    compress_grads: bool = False
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    model_axis: int = 1
+    seed: int = 0
+    log_every: int = 10
+
+    def run(self, resume: bool = True) -> dict:
+        cfg = self.cfg
+        mesh = make_host_mesh(model=self.model_axis)
+        rules = sh.rules_for_mesh(mesh)
+        opt_cfg = OptimConfig(
+            kind=self.optimizer, peak_lr=self.peak_lr, total_steps=max(self.steps, 2)
+        )
+        dp = mesh.shape["data"]
+        pipeline = DataPipeline(
+            DataConfig(
+                seq_len=self.seq_len,
+                global_batch=self.global_batch,
+                vocab_size=cfg.vocab_size,
+                seed=self.seed,
+            ),
+            dp_rank=0,
+            dp_size=1,  # single-controller: full global batch, sharded by jit
+        )
+        mgr = CheckpointManager(self.ckpt_dir) if self.ckpt_dir else None
+
+        with sh.use_rules(rules):
+            key = jax.random.PRNGKey(self.seed)
+            params = init_params(cfg, key)
+            opt_state = init_opt_state(cfg, opt_cfg, params, self.compress_grads)
+            start_step = 0
+            if mgr and resume and mgr.latest_step() is not None:
+                state, meta = mgr.restore({"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                start_step = meta["step"] + 1
+                print(f"[train] resumed from step {meta['step']}")
+
+            p_specs = sh.tree_param_specs(params)
+            p_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), p_specs)
+            params = jax.tree_util.tree_map(jax.device_put, params, p_sh)
+
+            step_fn = make_train_step(
+                cfg,
+                opt_cfg,
+                policy=self.policy,
+                microbatches=self.microbatches,
+                compress_grads=self.compress_grads,
+            )
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+            detector = StragglerDetector()
+            losses = []
+            step = start_step
+            t_train0 = time.time()
+            while step < self.steps:
+                batch = pipeline.batch_at(step)
+                batch = {
+                    k: jax.device_put(
+                        v, NamedSharding(mesh, P("data" if v.shape[0] % dp == 0 else None))
+                    )
+                    for k, v in batch.items()
+                }
+                t0 = time.time()
+                params, opt_state, metrics = retry_step(
+                    jitted, params, opt_state, batch, jnp.int32(step)
+                )
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                if detector.record(dt):
+                    print(f"[train] straggler step {step}: {dt:.3f}s "
+                          f"(median {detector.median:.3f}s)")
+                losses.append(loss)
+                if step % self.log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} {dt:.3f}s")
+                if mgr and self.ckpt_every and (step + 1) % self.ckpt_every == 0:
+                    mgr.save(step, {"params": params, "opt": opt_state})
+                step += 1
+
+            if mgr:
+                mgr.save(self.steps - 1, {"params": params, "opt": opt_state}, block=True)
+                mgr.wait()
+            wall = time.time() - t_train0
+            return {
+                "params": params,
+                "losses": losses,
+                "final_loss": losses[-1] if losses else float("nan"),
+                "steps_per_s": (self.steps - start_step) / max(wall, 1e-9),
+                "stragglers": detector.flagged,
+            }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="granite-3-8b")
+    ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=("adamw", "adafactor"))
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--w-bits", type=int, default=0, help="QAT bits (0 = dense)")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    policy = (
+        PrecisionPolicy.uniform(args.w_bits, args.w_bits)
+        if args.w_bits
+        else PrecisionPolicy.off()
+    )
+    run = TrainRun(
+        cfg=cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        microbatches=args.microbatches,
+        optimizer=args.optimizer,
+        peak_lr=args.lr,
+        policy=policy,
+        compress_grads=args.compress_grads,
+        ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every,
+        model_axis=args.model_axis,
+    )
+    out = run.run()
+    print(f"[train] done: final loss {out['final_loss']:.4f}, "
+          f"{out['steps_per_s']:.2f} steps/s, {len(out['stragglers'])} stragglers")
+
+
+if __name__ == "__main__":
+    main()

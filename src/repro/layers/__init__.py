@@ -1,0 +1,1 @@
+"""Model building blocks; every projection routes through QuantizedLinear."""

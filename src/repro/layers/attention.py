@@ -1,0 +1,325 @@
+"""Grouped-query attention: chunked (flash-style) for train/prefill,
+windowed-local variant, and a cache-consuming decode path.
+
+All projections route through :mod:`repro.layers.linear`
+(QuantizedLinear), so the bit-serial technique applies to QKV/O.
+
+The train/prefill path is a pure-jnp online-softmax scan over KV chunks —
+mathematically the flash schedule — so it compiles on any backend (the
+dry-run runs on host CPU); on TPU the Pallas kernel in
+repro.kernels.flash_attention is the drop-in fast path. The chunk body is
+``jax.checkpoint``-ed so backward recomputes per-chunk scores instead of
+storing them (keeps 32k-token training under the HBM budget).
+
+Decode attends over an S-sharded KV cache with plain masked attention;
+the partial max/sum reductions over the sharded axis become the
+flash-decode collectives under GSPMD.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.linear import linear_apply, linear_init
+from repro.layers.norms import rmsnorm_init, rmsnorm_apply
+from repro.layers.rotary import apply_rope
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+def attention_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+    qk_norm: bool = False,
+):
+    ks = jax.random.split(key, 4)
+    params = {
+        "q_proj": linear_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "k_proj": linear_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "v_proj": linear_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "o_proj": linear_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        params["q_norm"] = rmsnorm_init(head_dim)
+        params["k_norm"] = rmsnorm_init(head_dim)
+    return params
+
+
+def _chunked_gqa(q, k, v, *, causal: bool, chunk: int, q_offset, kv_len=None):
+    """Online-softmax attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D).
+
+    ``q_offset``: absolute position of q[0] minus that of k[0] (causal
+    alignment for prefill-with-cache). ``kv_len``: optional valid KV
+    length (decode with a partially filled cache).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    # Keep Q/K/V in their storage dtype (bf16): the MXU consumes bf16 and
+    # accumulates f32 (preferred_element_type) — only the online-softmax
+    # statistics live in f32. An f32 upcast here materializes 2x-size
+    # copies of Q/K/V per layer (the dominant HBM term of the 32k-prefill
+    # cells before this change — EXPERIMENTS.md §Perf).
+    qf = q.reshape(b, sq, hkv, group, d)
+
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, d)
+    vc = v.reshape(b, n_chunks, chunk, hkv, d)
+
+    q_pos = jnp.arange(sq)[:, None] + q_offset  # (Sq, 1) absolute-ish
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = xs
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", qf, kj, preferred_element_type=jnp.float32
+        ) * (d**-0.5)  # (B,Sq,Hkv,G,chunk) f32 scores from bf16 operands
+        k_pos = j * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if kv_len is not None:
+            mask &= k_pos < kv_len
+        if pad:
+            mask &= k_pos < skv
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha[..., 0, None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd",
+            p.astype(vj.dtype),
+            vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, sq, hkv, group, 1), NEG_INF, jnp.float32),
+        jnp.zeros((b, sq, hkv, group, 1), jnp.float32),
+        jnp.zeros((b, sq, hkv, group, d), jnp.float32),
+    )
+    (m, l, acc), _ = lax.scan(
+        step,
+        init,
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, sq, hq, d)
+
+
+def _local_gqa(q, k, v, *, window: int, q_offset=0):
+    """Sliding-window attention via the block-pair trick: reshape into
+    window-sized blocks; each query block attends its own + previous block
+    under a banded mask. Exact for window <= block size."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    w = window
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nb = sp // w
+    qb = q.astype(jnp.float32).reshape(b, nb, w, hkv, group, d) * (d**-0.5)
+    kb = k.astype(jnp.float32).reshape(b, nb, w, hkv, d)
+    vb = v.astype(jnp.float32).reshape(b, nb, w, hkv, d)
+    # previous block (zeros for block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2w, Hkv, D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    s_ = jnp.einsum("bnqhgd,bnkhd->bnqhgk", qb, k2)  # (B,nb,w,Hkv,G,2w)
+    qpos = jnp.arange(w)[:, None] + w  # position within the 2w window
+    kpos = jnp.arange(2 * w)[None, :]
+    blk = jnp.arange(nb)[:, None, None]
+    mask = (qpos >= kpos) & (qpos - kpos < w)  # causal sliding band
+    mask = jnp.broadcast_to(mask[None], (nb, w, 2 * w))
+    # block 0 has no previous block; also mask tail padding
+    kv_abs = blk * w + kpos - w
+    mask = mask & (kv_abs >= 0) & (kv_abs < s)
+    s_ = jnp.where(mask[None, :, :, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bnqhgk,bnkhd->bnqhgd", p, v2)
+    out = out.reshape(b, sp, hq, d)[:, :s]
+    return out
+
+
+def _decode_gqa(q, k_cache, v_cache, kv_len):
+    """Single-token decode over an (S-sharded) cache. q: (B,1,Hq,D).
+
+    K/V stay in cache dtype (bf16): an f32 upcast here materializes a
+    full-size f32 copy of the *stacked* cache, hoisted out of the layer
+    scan by XLA (+7.9 GiB/dev on the 405B decode cell, EXPERIMENTS.md
+    §Perf); scores accumulate f32 via preferred_element_type.
+    """
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    group = hq // hkv
+    qf = q.reshape(b, hkv, group, d)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    k_pos = jnp.arange(k_cache.shape[1])[None, None, None, :]
+    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    ) / jnp.maximum(l, 1e-30)
+    return out.reshape(b, 1, hq, d)
+
+
+def attention_apply(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    window: int = 0,
+    rope_theta: float = 10000.0,
+    use_rope: bool = True,
+    qk_norm: bool = False,
+    chunk: int = 1024,
+    policy,
+    training: bool = False,
+    name: str = "attn",
+    cache: Optional[dict] = None,
+):
+    """Returns (out, new_cache). ``cache`` (decode): {'k','v','len'} with
+    k/v (B, S_max, Hkv, D); prefill with cache returns the filled cache."""
+    b, s, _ = x.shape
+    la = functools.partial(linear_apply, policy=policy, training=training)
+    q = la(params["q_proj"], x, name=f"{name}/q_proj").reshape(b, s, n_heads, head_dim)
+    k = la(params["k_proj"], x, name=f"{name}/k_proj").reshape(b, s, n_kv_heads, head_dim)
+    v = la(params["v_proj"], x, name=f"{name}/v_proj").reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    # TP interior: query heads model-sharded (KV heads replicate when
+    # n_kv_heads < model-axis size — the Megatron GQA rule). When the head
+    # count does NOT divide the model axis (e.g. deepseek's 56 heads on a
+    # 16-way axis), fall back to context parallelism: shard the QUERY
+    # sequence over the model axis and keep K/V whole — each shard computes
+    # its query rows against the full KV (exact; the flash scan is
+    # embarrassingly parallel over query rows).
+    from repro.sharding.rules import current_rules, _axis_size
+
+    rules = current_rules()
+    heads_shard = True
+    if rules is not None and rules.model_axis is not None:
+        msize = _axis_size(rules.mesh, rules.model_axis)
+        heads_shard = n_heads % msize == 0 and n_heads >= msize
+    if heads_shard:
+        q = constrain(q, ("batch", None, "model", None))
+        k = constrain(k, ("batch", None, "model", None))
+        v = constrain(v, ("batch", None, "model", None))
+    elif s > 1:
+        q = constrain(q, ("batch", "seq", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+
+    new_cache = cache
+    if cache is not None and s == 1:  # decode step
+        pos = cache["len"]  # scalar int32: tokens already generated
+        s_max = cache["k"].shape[1]
+        # Windowed caches are ring buffers of size `window` (long_500k decode
+        # keeps O(window) state); full caches are written at `pos` directly.
+        write_idx = pos % s_max if window else pos
+        k_cache = lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_idx, 0, 0)
+        )
+        v_cache = lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_idx, 0, 0)
+        )
+        kv_len = pos + 1
+        if window:
+            # softmax is permutation-invariant over KV and RoPE is already
+            # applied to k, so ring order does not matter — mask to the
+            # filled slots only.
+            valid = jnp.minimum(kv_len, s_max)
+            in_window = jnp.arange(s_max) < valid
+            out = _decode_window(q, k_cache, v_cache, in_window)
+        else:
+            out = _decode_gqa(q, k_cache, v_cache, kv_len)
+        new_cache = {"k": k_cache, "v": v_cache, "len": kv_len}
+    else:
+        if cache is not None:  # prefill into cache
+            s_max = cache["k"].shape[1]
+            kw, vw = k, v
+            if s > s_max:  # windowed ring cache: keep only the last s_max
+                kw, vw = k[:, -s_max:], v[:, -s_max:]
+            k_cache = lax.dynamic_update_slice(
+                cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            v_cache = lax.dynamic_update_slice(
+                cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            new_cache = {"k": k_cache, "v": v_cache, "len": jnp.int32(s)}
+        if window:
+            out = _local_gqa(q, k, v, window=window)
+        else:
+            out = _chunked_gqa(q, k, v, causal=causal, chunk=chunk, q_offset=0)
+
+    out = out.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    if heads_shard:
+        out = constrain(out, ("batch", None, "model"))
+    elif s > 1:
+        out = constrain(out, ("batch", "seq", None))
+    return la(params["o_proj"], out, name=f"{name}/o_proj"), new_cache
+
+
+def _decode_window(q, k_cache, v_cache, in_window):
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    group = hq // hkv
+    qf = q.reshape(b, hkv, group, d)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    s = jnp.where(in_window[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out / jnp.maximum(l, 1e-30)
+    return out.reshape(b, 1, hq, d)

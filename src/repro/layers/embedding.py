@@ -1,0 +1,42 @@
+"""Token embeddings, output heads, and modality-frontend stubs.
+
+Per the assignment, audio/vlm entries specify the transformer backbone
+only: ``input_specs()`` provides precomputed frame/patch embeddings and
+the frontends here are thin projections of those precomputed features.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.linear import linear_apply, linear_init
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    emb = jax.random.normal(key, (vocab, d_model), jnp.float32) * (d_model**-0.5)
+    return {"embedding": emb.astype(dtype)}
+
+
+def embedding_apply(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype=jnp.bfloat16):
+    return {"head": linear_init(key, d_model, vocab, dtype)}
+
+
+def lm_head_apply(params, x, *, policy, training=False, name="lm_head"):
+    return linear_apply(params["head"], x, name=name, policy=policy, training=training)
+
+
+def frontend_init(key, frontend_dim: int, d_model: int, dtype=jnp.bfloat16):
+    """Projection from precomputed frontend features (audio frames / vision
+    patches) into the backbone width."""
+    return {"proj": linear_init(key, frontend_dim, d_model, dtype)}
+
+
+def frontend_apply(params, feats, *, policy, training=False, name="frontend"):
+    return linear_apply(
+        params["proj"], feats, name=f"{name}/proj", policy=policy, training=training
+    )

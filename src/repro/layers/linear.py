@@ -1,0 +1,106 @@
+"""QuantizedLinear: every dense projection in the framework goes through
+here, which is where bitSMM's technique plugs into the models.
+
+Three parameter/execution regimes, selected by the
+:class:`repro.core.precision.PrecisionPolicy` and the parameter contents:
+
+* dense bf16 (`{'w'}`) with an inactive policy — the reference path;
+* QAT (`{'w'}` + active policy + ``training=True``) — straight-through
+  fake-quant at the layer's (w_bits, a_bits), so training sees exactly the
+  values the bit-serial inference path will compute;
+* bit-serial inference (`{'w_q','w_scale'}` from :func:`quantize_params`
+  or `{'w'}` + active policy) — activations are dynamically quantized
+  per-token and the product runs through
+  :func:`repro.kernels.ops.bitserial_matmul` at the policy's
+  level/variant/mode (bitplane = paper-faithful, digit = TPU-native).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.quantize import fake_quant, quantize
+from repro.kernels import ops
+
+
+def _accum_dtype(w_bits: int, a_bits: int):
+    """int32 accumulation is exact only while K * (2^(b-1))^2 < 2^31; above
+    8 bits the digit partials accumulate in f32 (exact to 2^24 per partial
+    — the TPU analogue of the paper's accumulator-width scaling note)."""
+    return jnp.int32 if max(w_bits, a_bits) <= 8 else jnp.float32
+
+
+def linear_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def quantize_linear(params: dict, w_bits: int) -> dict:
+    """Convert a dense linear param dict to stored-quantized form (weights
+    live in memory as integers — halves/quarters HBM traffic, as the
+    accelerator stores operands at their configured width)."""
+    q = quantize(params["w"].astype(jnp.float32), w_bits, axis=0)
+    return {"w_q": q.values, "w_scale": q.scale}
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    name: str,
+    policy: PrecisionPolicy,
+    training: bool = False,
+    backend: str = "auto",
+) -> jax.Array:
+    """Apply a (possibly bit-serial) linear layer. x: (..., d_in)."""
+    prec = policy.lookup(name)
+
+    if "w_q" in params:  # stored-quantized weights (serving path)
+        if not prec.active:
+            raise ValueError(f"layer {name}: quantized params but inactive policy")
+        xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
+        acc = ops.bitserial_matmul(
+            xq.values.astype(jnp.int32),
+            params["w_q"].astype(jnp.int32),
+            a_bits=prec.a_bits,
+            w_bits=prec.w_bits,
+            variant=policy.variant,
+            level=policy.level,
+            mode=policy.mode,
+            backend=backend,
+            accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
+        )
+        out = acc.astype(jnp.float32) * xq.scale * params["w_scale"]
+        return out.astype(x.dtype)
+
+    w = params["w"]
+    if not prec.active:
+        return x @ w.astype(x.dtype)
+
+    if training:
+        # QAT: fake-quant both operands with straight-through gradients.
+        # Compute stays in the layer dtype (bf16): an f32 cast here would
+        # force f32 FSDP all-gathers and f32 MXU matmuls everywhere.
+        wq = fake_quant(w.astype(jnp.float32), prec.w_bits, axis=0).astype(w.dtype)
+        xq = fake_quant(x.astype(jnp.float32), prec.a_bits, axis=-1).astype(x.dtype)
+        return (xq @ wq.astype(x.dtype)).astype(x.dtype)
+
+    # On-the-fly quantized inference from dense weights.
+    wq = quantize(w.astype(jnp.float32), prec.w_bits, axis=0)
+    xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
+    acc = ops.bitserial_matmul(
+        xq.values.astype(jnp.int32),
+        wq.values.astype(jnp.int32),
+        a_bits=prec.a_bits,
+        w_bits=prec.w_bits,
+        variant=policy.variant,
+        level=policy.level,
+        mode=policy.mode,
+        backend=backend,
+        accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
+    )
+    out = acc.astype(jnp.float32) * xq.scale * wq.scale
+    return out.astype(x.dtype)

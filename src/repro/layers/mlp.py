@@ -1,0 +1,42 @@
+"""Gated/plain MLP blocks (SwiGLU / GeGLU / GELU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.linear import linear_apply, linear_init
+from repro.sharding.rules import constrain
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "gate_proj": linear_init(ks[0], d_model, d_ff, dtype),
+            "up_proj": linear_init(ks[1], d_model, d_ff, dtype),
+            "down_proj": linear_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "up_proj": linear_init(ks[1], d_model, d_ff, dtype),
+        "down_proj": linear_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params, x, *, act: str = "swiglu", policy, training=False, name="mlp"):
+    la = functools.partial(linear_apply, policy=policy, training=training)
+    if act in ("swiglu", "geglu"):
+        g = la(params["gate_proj"], x, name=f"{name}/gate_proj")
+        u = la(params["up_proj"], x, name=f"{name}/up_proj")
+        nl = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = nl(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = la(params["up_proj"], x, name=f"{name}/up_proj")
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    # Megatron-style TP interior: keep the ff dim model-sharded so the
+    # down_proj weight grad is computed shard-local instead of as a full
+    # (d_ff, d_model) partial product per device.
+    h = constrain(h, ("batch", None, "model"))
+    return la(params["down_proj"], h, name=f"{name}/down_proj")

@@ -1,0 +1,31 @@
+"""Normalization layers (RMSNorm / LayerNorm), fp32 statistics."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    # Statistics in f32, but the (..., d)-shaped products stay in x.dtype:
+    # an f32 x-shaped intermediate here turns every remat recompute (and
+    # the layer-scan residual stack) into f32 at 405B scale.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jnp.reciprocal(jnp.sqrt(var + eps)).astype(x.dtype)
+    return (x * inv) * params["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps)) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)

@@ -1,0 +1,94 @@
+"""RecurrentGemma / Griffin recurrent block: causal conv + RG-LRU.
+
+The gated linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t * x_t)
+is associative, so train/prefill uses ``lax.associative_scan`` (log-depth
+on TPU); decode is a single fused step. Projections route through
+QuantizedLinear (the bit-serial technique); the recurrence itself is
+elementwise — kept fp32, like the paper's full-width accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.linear import linear_apply, linear_init
+from repro.layers.ssm import _causal_conv
+
+_C = 8.0  # RG-LRU temperature (Griffin)
+
+
+def rglru_init(key, d_model: int, lru_width: int, conv_width: int = 4, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": linear_init(ks[0], d_model, lru_width, dtype),
+        "in_y": linear_init(ks[1], d_model, lru_width, dtype),
+        "out": linear_init(ks[2], lru_width, d_model, dtype),
+        "gate_a": linear_init(ks[3], lru_width, lru_width, dtype),
+        "gate_x": linear_init(ks[4], lru_width, lru_width, dtype),
+        "conv_w": jax.random.normal(ks[5], (conv_width, lru_width), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((lru_width,), jnp.float32),
+        # Lambda param: a = exp(-C * softplus(lam) * sigmoid(r)); init so that
+        # a^C is in ~[0.9, 0.999] (Griffin's recommendation).
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, lru_width))).astype(
+            jnp.float32
+        ),
+    }
+
+
+def rglru_apply(
+    params,
+    x: jax.Array,
+    *,
+    lru_width: int,
+    conv_width: int = 4,
+    policy,
+    training: bool = False,
+    name: str = "rglru",
+    cache=None,
+):
+    """x: (B, S, d). Returns (out, new_cache {'conv','h','len'})."""
+    la = functools.partial(linear_apply, policy=policy, training=training)
+    y_branch = jax.nn.gelu(
+        la(params["in_y"], x, name=f"{name}/in_y").astype(jnp.float32)
+    )
+    xb = la(params["in_x"], x, name=f"{name}/in_x")
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(
+        xb.astype(jnp.float32), params["conv_w"], params["conv_b"], conv_cache
+    )
+    xc = xc.astype(x.dtype)
+
+    r = jax.nn.sigmoid(
+        la(params["gate_a"], xc, name=f"{name}/gate_a").astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        la(params["gate_x"], xc, name=f"{name}/gate_x").astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc.astype(jnp.float32))
+
+    if cache is not None and x.shape[1] == 1:  # decode
+        h_prev = cache["h"]
+        h = a[:, 0] * h_prev + gated_x[:, 0]
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h, "len": cache["len"] + 1}
+    else:
+
+        def comb(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = lax.associative_scan(comb, (a, gated_x), axis=1)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "h": hs[:, -1], "len": jnp.int32(x.shape[1])}
+
+    out = (hs * y_branch).astype(x.dtype)
+    return la(params["out"], out, name=f"{name}/out"), new_cache

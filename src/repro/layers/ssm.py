@@ -1,0 +1,198 @@
+"""Mamba2 SSD (state-space duality) block.
+
+The SSD chunked algorithm turns the selective-state recurrence into
+MXU-friendly matmuls: intra-chunk terms are small GEMMs under a decay
+mask, inter-chunk terms a short scan over chunk states — which is also
+why bitSMM's matmul substitution applies to an attention-free arch (the
+in/out projections route through QuantizedLinear; the recurrent state
+stays in fp32, playing the accumulator role the paper keeps at full
+width).
+
+Decode is O(1): one state update per token (the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.layers.linear import linear_apply, linear_init
+from repro.sharding.rules import constrain
+
+
+def ssm_init(
+    key,
+    d_model: int,
+    *,
+    d_inner: int,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+    conv_width: int = 4,
+    dtype=jnp.bfloat16,
+):
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * d_state
+    # in_proj emits [z (gate), x, B, C, dt] fused.
+    d_out = d_inner + conv_dim + n_heads
+    params = {
+        "in_proj": linear_init(ks[0], d_model, d_out, dtype),
+        "out_proj": linear_init(ks[1], d_inner, d_model, dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, conv_dim), jnp.float32) * 0.1),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (n_heads,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(ks[4], (n_heads,), jnp.float32, 1e-3, 1e-1))
+            - 1.0
+        ),
+    }
+    return params
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C). Returns (y, new_cache)
+    where cache holds the last W-1 inputs for decode."""
+    width = w.shape[0]
+    if cache is None:
+        ctx = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    new_cache = ctx[:, -(width - 1) :, :].astype(jnp.float32)
+    return y + b, new_cache
+
+
+def _segsum_decay(da):
+    """L[..., i, j] = exp(sum_{k=j+1..i} da_k) for i >= j else 0.
+    da: (..., q); returns (..., q, q)."""
+    q = da.shape[-1]
+    cum = jnp.cumsum(da, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """Chunked SSD scan. x: (B,L,H,P); dt: (B,L,H); a: (H,) (negative);
+    b_mat, c_mat: (B,L,N). Returns y: (B,L,H,P), final_state (B,H,P,N)."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} must divide chunk {q}"
+    c_ = l // q
+
+    xr = x.reshape(bsz, c_, q, h, p).astype(jnp.float32)
+    dtr = dt.reshape(bsz, c_, q, h).astype(jnp.float32)
+    br = b_mat.reshape(bsz, c_, q, n).astype(jnp.float32)
+    cr = c_mat.reshape(bsz, c_, q, n).astype(jnp.float32)
+
+    da = dtr * a  # (B,C,Q,H)
+    da_h = jnp.moveaxis(da, -1, -2)  # (B,C,H,Q)
+    cum = jnp.cumsum(da_h, axis=-1)  # inclusive
+    big_l = _segsum_decay(da_h)  # (B,C,H,Q,Q)
+
+    # Intra-chunk (the "duality" matmul): y_i += sum_{j<=i} (C_i.B_j) L_ij dt_j x_j
+    # NOTE: contractions are hand-factored into two-operand einsums — a
+    # single 4-operand einsum lets opt_einsum materialize a (B,C,H,Q,Q,P)
+    # intermediate (tens of GB at production shapes).
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)  # (B,C,Q,Q)
+    scaled_x = dtr[..., None] * xr  # (B,C,Q,H,P)
+    lw = cb[:, :, None] * big_l  # (B,C,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", lw, scaled_x)
+
+    # Chunk-final states: s_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_states = jnp.exp(cum[..., -1:] - cum)  # (B,C,H,Q)
+    xw = decay_states[..., None] * jnp.moveaxis(scaled_x, 2, 3)  # (B,C,H,Q,P)
+    states = jnp.einsum("bchjp,bcjn->bchpn", xw, br)
+
+    # Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,C,H)
+
+    def step(s_prev, inp):
+        dec, st = inp
+        s_new = dec[..., None, None] * s_prev + st
+        return s_new, s_prev  # emit the state *entering* this chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, s_in = lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B,C,H,P,N): state entering each chunk
+
+    # Cross-chunk contribution: y_i += C_i · (exp(cum_i) s_in)
+    cs = jnp.einsum("bcin,bchpn->bcihp", cr, s_in)
+    y_off = cs * jnp.moveaxis(jnp.exp(cum), 2, 3)[..., None]  # (B,C,Q,H,1)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def ssm_apply(
+    params,
+    x: jax.Array,
+    *,
+    d_inner: int,
+    n_heads: int,
+    head_dim: int,
+    d_state: int,
+    conv_width: int = 4,
+    chunk: int = 256,
+    policy,
+    training: bool = False,
+    name: str = "ssm",
+    cache=None,
+):
+    """x: (B, S, d_model). Returns (out, new_cache)."""
+    bsz, s, _ = x.shape
+    la = functools.partial(linear_apply, policy=policy, training=training)
+    conv_dim = d_inner + 2 * d_state
+
+    zxbcdt = la(params["in_proj"], x, name=f"{name}/in_proj")
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    z = constrain(z, ("batch", None, "model"))
+    xbc = constrain(xbc, ("batch", None, "model"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,) negative
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc.astype(jnp.float32), params["conv_w"], params["conv_b"], conv_cache
+    )
+    xbc = jax.nn.silu(xbc)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(bsz, s, n_heads, head_dim)
+    # Shard SSD heads over the model axis: the intra-chunk decay tensor
+    # (B, C, H, Q, Q) is the memory hot-spot and partitions over H.
+    xh = constrain(xh, ("batch", None, "model", None))
+    dt = constrain(dt, ("batch", None, "model"))
+
+    if cache is not None and s == 1:  # decode: single recurrent step
+        state = cache["state"]  # (B,H,P,N)
+        da = (dt[:, 0] * a).astype(jnp.float32)  # (B,H)
+        dbx = jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], b_mat[:, 0], xh[:, 0].astype(jnp.float32)
+        )
+        state = jnp.exp(da)[..., None, None] * state + dbx
+        y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0], state)
+        y = y + params["D"][:, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = {"conv": new_conv, "state": state, "len": cache["len"] + 1}
+    else:
+        y, final_state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk)
+        y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = constrain(y, ("batch", None, "model", None))
+        new_cache = None
+        if cache is not None:  # prefill fills the recurrent state
+            new_cache = {"conv": new_conv, "state": final_state, "len": jnp.int32(s)}
+
+    y = y.reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return la(params["out_proj"], y.astype(x.dtype), name=f"{name}/out_proj"), new_cache

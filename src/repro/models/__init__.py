@@ -1,0 +1,16 @@
+"""Model assembly: config, parameter init, forward, loss, decode caches."""
+
+from repro.models.config import SHAPES, ModelConfig, ShapeCell, cell_applicable
+from repro.models.cache import init_cache
+from repro.models.transformer import forward, init_params, loss_fn
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeCell",
+    "cell_applicable",
+    "init_cache",
+    "forward",
+    "init_params",
+    "loss_fn",
+]

@@ -1,0 +1,86 @@
+"""Decode-state (KV / SSM / LRU) cache construction.
+
+Cache layout mirrors the parameter layout: a ``periods`` pytree stacked
+over the scanned layer groups plus an unstacked ``tail``, so the layer
+scan can carry per-layer caches as scan inputs/outputs. Attention caches
+for windowed layers are ring buffers of size ``window`` (this is what
+makes the 500k-token cell O(window) instead of O(S))."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int, dtype):
+    s = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "len": jnp.int32(0),
+    }
+
+
+def _ssm_cache(cfg: ModelConfig, batch: int):
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "len": jnp.int32(0),
+    }
+
+
+def _rec_cache(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), jnp.float32),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "len": jnp.int32(0),
+    }
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("dense", "moe"):
+        return _attn_cache(cfg, batch, max_len, cfg.local_window if kind == "attn" else 0, dtype)
+    if kind == "attn":  # hybrid local-attention layer
+        return _attn_cache(cfg, batch, max_len, cfg.local_window, dtype)
+    if kind == "ssm":
+        return _ssm_cache(cfg, batch)
+    if kind == "rec":
+        return _rec_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Build the full decode cache for a model instance."""
+    import jax
+
+    kinds = cfg.layer_kinds()
+    if not cfg.scan_layers:
+        return {
+            "step": jnp.int32(0),
+            "layers": [
+                _block_cache(cfg, kind, batch, max_len, dtype) for kind in kinds
+            ],
+        }
+    period = cfg.period if cfg.period else (kinds[0],)
+    plen = len(period)
+    n_full = cfg.n_layers // plen
+    tail_kinds = kinds[n_full * plen :]
+
+    def one_period():
+        return {
+            f"b{j}_{kind}": _block_cache(cfg, kind, batch, max_len, dtype)
+            for j, kind in enumerate(period)
+        }
+
+    periods = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[one_period() for _ in range(n_full)]
+    ) if n_full > 0 else {}
+
+    tail = [
+        _block_cache(cfg, kind, batch, max_len, dtype) for kind in tail_kinds
+    ]
+    return {"step": jnp.int32(0), "periods": periods, "tail": tail}

@@ -1,0 +1,171 @@
+"""One configuration dataclass covering all ten assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    rope_theta: float = 500000.0
+    causal: bool = True
+    local_window: int = 0  # sliding-window size for local-attention layers
+    # mlp
+    d_ff: int = 0
+    act: str = "swiglu"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    moe_impl: str = "gshard_ep"  # gshard_ep (EP shard_map) | global_sort
+    moe_capacity_factor: float = 0.0  # 0 = dropless; >0 bounds dispatch
+    # buffers to cf * T_row * k / E per expert (production MoE cells)
+    # ssm (mamba2)
+    ssm_d_inner: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_state: int = 0
+    conv_width: int = 4
+    ssd_chunk: int = 256
+    # hybrid (recurrentgemma): layer pattern, repeated; remainder truncates.
+    period: Tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0
+    # modality frontend stub
+    frontend: str = "none"  # none | audio | vision
+    frontend_dim: int = 0
+    num_patches: int = 0  # vlm: image patches prepended to the text sequence
+    # misc
+    tie_embeddings: bool = False
+    attn_chunk: int = 1024  # online-softmax KV chunk
+    scan_layers: bool = True  # lax.scan over layer stacks (False enables
+    # per-layer-index precision overrides at the cost of unrolled HLO)
+    remat_group: int = 1  # periods per checkpoint region: >1 = nested remat
+    # (residual stack shrinks by G at the cost of one extra in-group fwd)
+    dtype: object = jnp.bfloat16
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim shards
+        cleanly over the model axis (Megatron-style padded vocabulary);
+        the loss masks the padding columns."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode state is sub-quadratic (SSM / windowed hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """The per-layer block types, length n_layers."""
+        if self.family == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.family == "hybrid":
+            assert self.period, "hybrid config needs a period pattern"
+            reps = -(-self.n_layers // len(self.period))
+            return (self.period * reps)[: self.n_layers]
+        if self.family == "moe":
+            return ("moe",) * self.n_layers
+        return ("dense",) * self.n_layers
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for roofline
+        MODEL_FLOPS = 6*N*D accounting."""
+        d = self.d_model
+        n = 0
+        n += self.vocab_size * d  # embedding
+        if not self.tie_embeddings and self.family != "encoder":
+            n += d * self.vocab_size  # head
+        if self.family == "encoder":
+            n += d * self.vocab_size
+        if self.frontend != "none":
+            n += self.frontend_dim * d
+        for kind in self.layer_kinds():
+            n += 2 * d  # norms
+            if kind in ("dense", "moe"):
+                hd = self.head_dim
+                n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                n += self.n_heads * hd * d
+            if kind == "dense":
+                n += 3 * d * self.d_ff
+            elif kind == "moe":
+                n += d * self.n_experts
+                n += self.n_experts * 3 * d * self.moe_d_ff
+            elif kind == "ssm":
+                conv_dim = self.ssm_d_inner + 2 * self.ssm_state
+                n += d * (self.ssm_d_inner + conv_dim + self.ssm_heads)
+                n += self.ssm_d_inner * d
+                n += self.conv_width * conv_dim
+            elif kind == "rec":
+                w = self.lru_width
+                n += 2 * d * w + w * d + 2 * w * w + self.conv_width * w
+            elif kind == "attn":
+                hd = self.head_dim
+                n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                n += self.n_heads * hd * d
+                n += 3 * d * self.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only top_k experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        n = self.param_count()
+        inactive = (
+            self.n_layers
+            * (self.n_experts - self.top_k)
+            * 3
+            * self.d_model
+            * self.moe_d_ff
+        )
+        return n - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) evaluation cell from the assignment."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Assignment skip rules (documented in DESIGN.md §5)."""
+    if shape.kind == "decode" and not cfg.is_decoder:
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode needs sub-quadratic attention"
+    if shape.kind == "prefill" and not cfg.is_decoder:
+        return True, "encoder forward pass (no cache)"
+    return True, ""

@@ -1,0 +1,227 @@
+"""Optimizers (AdamW, Adafactor), LR schedules, gradient clipping.
+
+Pure-JAX (optax-like init/update pairs). Adafactor's factored second
+moment is what lets the 405B config fit a 16 GB/chip pod without a
+fp32 master copy (see DESIGN.md §6); optimizer state inherits the
+parameter FSDP sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        # (step+1)/warmup so step 0 takes a real (non-zero) update
+        warm = peak_lr * (step + 1.0) / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+# --------------------------------------------------------------------------
+# Clipping
+# --------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+
+def adamw(
+    schedule: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+        c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (
+                (-lr * delta).astype(p.dtype),
+                m_new.astype(state_dtype),
+                v_new.astype(state_dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, optional bf16 momentum)
+# --------------------------------------------------------------------------
+
+
+def adafactor(
+    schedule: Callable,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    momentum: bool = False,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def _per_leaf_init(p):
+        st = {}
+        if _factored(p):
+            st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)  # row stats
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, jnp.float32)
+        if momentum:
+            st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+        return st
+
+    def init(params):
+        # Factored stats have different shapes per leaf, so state is a flat
+        # list aligned with tree_leaves(params) (sharding: state_specs()).
+        return {"leaves": [_per_leaf_init(p) for p in jax.tree_util.tree_leaves(params)]}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+
+        def upd(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            new_st = dict(st)
+            if _factored(p):
+                vr = decay * st["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * st["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                new_st["vr"], new_st["vc"] = vr, vc
+                rfac = jnp.maximum(vr / jnp.mean(vr, axis=-1, keepdims=True), eps)
+                upd_ = gf / (
+                    jnp.sqrt(rfac)[..., None] * jnp.sqrt(jnp.maximum(vc, eps))[..., None, :]
+                )
+            else:
+                v = decay * st["v"] + (1 - decay) * g2
+                new_st["v"] = v
+                upd_ = gf / jnp.sqrt(jnp.maximum(v, eps))
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            if momentum:
+                m = 0.9 * st["m"].astype(jnp.float32) + upd_
+                new_st["m"] = m.astype(jnp.bfloat16)
+                upd_ = m
+            if p.ndim >= 2 and weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (-lr * upd_).astype(p.dtype), new_st
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = jax.tree_util.tree_leaves(params)
+        outs = [upd(g, st, p) for g, st, p in zip(g_leaves, state["leaves"], p_leaves)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        return updates, {"leaves": [o[1] for o in outs]}
+
+    return Optimizer(init, update)
+
+
+def state_specs(kind: str, params, params_specs):
+    """PartitionSpecs for optimizer state, derived from parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    if kind == "adamw":
+        return {"m": params_specs, "v": params_specs}
+    if kind == "adafactor":
+        p_leaves = jax.tree_util.tree_leaves(params)
+        s_leaves = jax.tree_util.tree_leaves(
+            params_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        out = []
+        for p, spec in zip(p_leaves, s_leaves):
+            entries = list(spec) + [None] * (p.ndim - len(spec))
+            st = {}
+            if p.ndim >= 2:
+                st["vr"] = P(*entries[:-1])
+                st["vc"] = P(*(entries[:-2] + entries[-1:]))
+            else:
+                st["v"] = P(*entries)
+            out.append(st)
+        return {"leaves": out}
+    raise ValueError(kind)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    """Per-arch optimizer selection (large archs default to adafactor)."""
+
+    kind: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def build(self) -> Optimizer:
+        sched = warmup_cosine(self.peak_lr, self.warmup_steps, self.total_steps)
+        if self.kind == "adamw":
+            return adamw(sched, weight_decay=self.weight_decay)
+        if self.kind == "adafactor":
+            return adafactor(sched, weight_decay=self.weight_decay)
+        raise ValueError(self.kind)

@@ -1,0 +1,69 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam-family trick).
+
+At 1000+-node scale the cross-pod (DCN) gradient all-reduce dominates;
+compressing gradients to int8 with an error-feedback buffer keeps the
+asymptotic convergence of full-precision SGD/Adam while cutting the
+cross-pod bytes 4x vs fp32 / 2x vs bf16. The same symmetric quantizer as
+the bit-serial inference path is reused (per-tensor scale), so this is
+also the paper's "precision dial" applied to the *communication* side.
+
+Usage: ``compressed, new_err = compress_tree(grads + err)`` before the
+reduce, ``decompress_tree`` after; numerics are validated in
+tests/test_optim.py (error feedback => bounded bias).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jax.Array, bits: int = 8):
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(g / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(grads):
+    return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, error, bits: int = 8):
+    """Returns (quantized_tree, scales_tree, new_error_tree).
+
+    ``error`` accumulates the quantization residual (error feedback), so
+    information lost in one step is re-sent in the next.
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = compress_leaf(target, bits)
+        recon = decompress_leaf(q, scale)
+        return q, scale, target - recon
+
+    qs, scales, errs = {}, {}, {}
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    e_flat = jax.tree_util.tree_leaves(error)
+    outs = [one(g, e) for g, e in zip(flat, e_flat)]
+    qs = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    scales = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    errs = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return qs, scales, errs
+
+
+def decompress_tree(qs, scales, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda q, s: decompress_leaf(q, s).astype(dtype), qs, scales
+    )
+
+
+def compressed_bytes(grads, bits: int = 8) -> int:
+    """Wire bytes of the compressed gradients (for the roofline's
+    cross-pod collective term)."""
+    n = sum(l.size for l in jax.tree_util.tree_leaves(grads))
+    return n * bits // 8

@@ -1,0 +1,10 @@
+"""Fault-tolerance runtime: retries, stragglers, elastic re-meshing."""
+
+from repro.runtime.fault import (
+    ElasticMesh,
+    HealthMonitor,
+    StragglerDetector,
+    retry_step,
+)
+
+__all__ = ["ElasticMesh", "HealthMonitor", "StragglerDetector", "retry_step"]

@@ -1,0 +1,27 @@
+"""Sharding rules: logical axes -> mesh PartitionSpecs."""
+
+from repro.sharding.rules import (
+    MeshRules,
+    batch_specs,
+    constrain,
+    current_rules,
+    param_spec,
+    rules_for_mesh,
+    tree_cache_specs,
+    tree_param_shardings,
+    tree_param_specs,
+    use_rules,
+)
+
+__all__ = [
+    "MeshRules",
+    "batch_specs",
+    "constrain",
+    "current_rules",
+    "param_spec",
+    "rules_for_mesh",
+    "tree_cache_specs",
+    "tree_param_shardings",
+    "tree_param_specs",
+    "use_rules",
+]

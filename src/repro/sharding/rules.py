@@ -1,0 +1,263 @@
+"""Logical-axis sharding rules: parameter specs by path, activation
+constraints by logical name, for any mesh built by launch/mesh.py.
+
+Axis roles:
+  * ``data`` — data parallel AND FSDP (parameters/optimizer state sharded
+    over it; XLA all-gathers per layer under the scan);
+  * ``model`` — tensor parallel (heads / ffn / vocab), expert parallel
+    (MoE expert dim), and sequence/context parallel (activation seq dim
+    between blocks, KV-cache seq dim at decode — the flash-decode layout);
+  * ``pod``  — pure data parallel across pods (gradients reduce over
+    pod x data; parameters are NOT sharded over pod, keeping FSDP
+    all-gathers on intra-pod ICI instead of cross-pod DCN).
+"""
+
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]
+    fsdp_axis: Optional[str]
+    model_axis: Optional[str]
+    seq_shard: bool = True  # sequence-parallel activations between blocks
+
+
+_RULES: contextvars.ContextVar[Optional[MeshRules]] = contextvars.ContextVar(
+    "mesh_rules", default=None
+)
+
+
+def rules_for_mesh(mesh: Mesh, *, seq_shard: bool = True) -> MeshRules:
+    names = mesh.axis_names
+    return MeshRules(
+        mesh=mesh,
+        batch_axes=tuple(a for a in ("pod", "data") if a in names),
+        fsdp_axis="data" if "data" in names else None,
+        model_axis="model" if "model" in names else None,
+        seq_shard=seq_shard,
+    )
+
+
+class use_rules:
+    """Context manager installing the mesh rules for model tracing."""
+
+    def __init__(self, rules: Optional[MeshRules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self._token = _RULES.set(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _RULES.reset(self._token)
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _RULES.get()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _resolve(logical, rules: MeshRules):
+    if logical == "batch":
+        return rules.batch_axes or None
+    if logical == "seq":
+        return rules.model_axis if rules.seq_shard else None
+    if logical == "vocab" or logical == "model":
+        return rules.model_axis
+    if logical == "fsdp":
+        return rules.fsdp_axis
+    return None
+
+
+def constrain(x: jax.Array, logical: Tuple) -> jax.Array:
+    """Sharding-constrain an activation; drops axes that don't divide."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = _resolve(name, rules)
+        if axes is not None and dim % _axis_size(rules.mesh, axes) == 0 and dim > 1:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec))
+    )
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding by path
+# --------------------------------------------------------------------------
+
+# (regex on the param path, logical spec for the *trailing* dims)
+_PARAM_RULES = [
+    (r"embed/embedding$", ("vocab", "fsdp")),
+    (r"lm_head/head/w$", ("fsdp", "vocab")),
+    (r"frontend/proj/w$", (None, "fsdp")),
+    (r"(attn/q_proj|attn/k_proj|attn/v_proj)/w$", ("fsdp", "model")),
+    (r"attn/o_proj/w$", ("model", "fsdp")),
+    (r"(mlp/gate_proj|mlp/up_proj)/w$", ("fsdp", "model")),
+    (r"mlp/down_proj/w$", ("model", "fsdp")),
+    (r"moe/router/w$", ("fsdp", None)),
+    (r"moe/(gate|up)$", ("model", "fsdp", None)),
+    (r"moe/down$", ("model", None, "fsdp")),
+    (r"ssm/in_proj/w$", ("fsdp", None)),
+    (r"ssm/out_proj/w$", ("model", "fsdp")),
+    (r"rglru/(in_x|in_y)/w$", ("fsdp", "model")),
+    (r"rglru/out/w$", ("model", "fsdp")),
+    (r"rglru/(gate_a|gate_x)/w$", (None, "model")),
+    (r"rglru/(conv_w|conv_b|lam)$", (None,)),
+    # quantized-weight variants mirror their dense counterparts
+    (r"(attn/q_proj|attn/k_proj|attn/v_proj)/w_q$", ("fsdp", "model")),
+    (r"attn/o_proj/w_q$", ("model", "fsdp")),
+    (r"(mlp/gate_proj|mlp/up_proj)/w_q$", ("fsdp", "model")),
+    (r"mlp/down_proj/w_q$", ("model", "fsdp")),
+    (r"lm_head/head/w_q$", ("fsdp", "vocab")),
+    (r"w_scale$", (None, "model")),
+]
+
+
+def param_spec(path: str, arr) -> P:
+    """PartitionSpec for one parameter leaf, padded with leading Nones for
+    stacked (scanned) parameter pytrees."""
+    rules = _RULES.get()
+    if rules is None:
+        return P()
+    for pattern, logical in _PARAM_RULES:
+        if re.search(pattern, path):
+            base = [_resolve(x, rules) for x in logical]
+            break
+    else:
+        base = [None] * getattr(arr, "ndim", 0)
+    ndim = getattr(arr, "ndim", len(base))
+    lead = [None] * (ndim - len(base))
+    spec = lead + base
+    # drop axes that don't divide the dimension
+    shape = getattr(arr, "shape", ())
+    final = []
+    for i, axes in enumerate(spec):
+        if axes is None:
+            final.append(None)
+            continue
+        size = _axis_size(rules.mesh, axes)
+        if i < len(shape) and shape[i] % size == 0 and shape[i] >= size:
+            final.append(axes)
+        else:
+            final.append(None)
+    return P(*final)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_param_specs(params) -> dict:
+    """Pytree of PartitionSpecs matching a parameter pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf), params
+    )
+
+
+def tree_param_shardings(params):
+    rules = _RULES.get()
+    specs = tree_param_specs(params)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(rules.mesh, s), specs)
+
+
+# --------------------------------------------------------------------------
+# Batch / cache shardings
+# --------------------------------------------------------------------------
+
+_BATCH_LOGICAL = {
+    "tokens": ("batch", None),
+    "targets": ("batch", None),
+    "loss_mask": ("batch", None),
+    "features": ("batch", None, None),
+    "patches": ("batch", None, None),
+}
+
+
+def batch_specs(batch_tree) -> dict:
+    rules = _RULES.get()
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        logical = _BATCH_LOGICAL.get(name, ("batch",) + (None,) * (leaf.ndim - 1))
+        spec = []
+        for dim, lg in zip(leaf.shape, logical):
+            axes = _resolve(lg, rules) if rules else None
+            if axes is not None and dim % _axis_size(rules.mesh, axes) == 0:
+                spec.append(axes)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_spec(path: str, leaf) -> P:
+    """KV caches: (B, S, Hkv, D) with S sharded over model (flash-decode);
+    SSM/LRU states: heads/width over model; scalars replicated."""
+    rules = _RULES.get()
+    if rules is None or getattr(leaf, "ndim", 0) == 0:
+        return P()
+    name = path.split("/")[-1]
+    lead = leaf.ndim  # may include a stacked periods dim
+    if name in ("k", "v"):
+        base = ["batch", "seq_kv", None, None]
+    elif name == "state":
+        base = ["batch", "model", None, None]
+    elif name == "conv":
+        base = ["batch", None, "model"]
+    elif name == "h":
+        base = ["batch", "model"]
+    else:
+        return P(*([None] * lead))
+    spec = [None] * (lead - len(base)) + base
+    final = []
+    for i, lg in enumerate(spec):
+        if lg is None:
+            final.append(None)
+            continue
+        axes = rules.model_axis if lg in ("seq_kv", "model") else _resolve(lg, rules)
+        size = _axis_size(rules.mesh, axes) if axes else 1
+        if axes is not None and leaf.shape[i] % size == 0 and leaf.shape[i] >= size:
+            final.append(axes)
+        else:
+            final.append(None)
+    return P(*final)
+
+
+def tree_cache_specs(cache_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(_path_str(path), leaf), cache_tree
+    )

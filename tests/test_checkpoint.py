@@ -1,0 +1,74 @@
+"""Checkpoint manager: roundtrip (incl. bf16), atomic publish, GC, resume."""
+
+import json
+import pathlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(v=0.0):
+    return {
+        "params": {"w": jnp.full((4, 4), v, jnp.bfloat16), "b": jnp.arange(3.0)},
+        "opt": {"m": jnp.full((4, 4), v / 2, jnp.float32)},
+        "ints": jnp.array([1, 2, 3], jnp.int32),
+    }
+
+
+def test_roundtrip_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, _state(1.5), extra={"note": "x"})
+    restored, meta = mgr.restore(_state())
+    assert meta["step"] == 3 and meta["note"] == "x"
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(_state(1.5)["params"]["w"], np.float32),
+    )
+    np.testing.assert_array_equal(restored["ints"], [1, 2, 3])
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(0, _state(2.0))
+    mgr.wait()
+    assert mgr.latest_step() == 0
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 5, 9):
+        mgr.save(s, _state(float(s)))
+    assert mgr.steps() == [5, 9]
+    assert mgr.latest_step() == 9
+    restored, meta = mgr.restore(_state(), step=5)
+    assert meta["step"] == 5
+
+
+def test_tmp_dirs_not_counted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    (tmp_path / "step_7.tmp").mkdir()
+    assert mgr.steps() == []
+    assert mgr.restore(_state()) == (None, None)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(0, _state())
+    bad = {"params": {"w": jnp.zeros((2, 2), jnp.bfloat16), "b": jnp.arange(3.0)},
+           "opt": {"m": jnp.zeros((4, 4))}, "ints": jnp.zeros(3, jnp.int32)}
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_overwrite_same_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _state(1.0))
+    mgr.save(1, _state(2.0))
+    restored, _ = mgr.restore(_state())
+    assert float(np.asarray(restored["params"]["w"], np.float32)[0, 0]) == 2.0

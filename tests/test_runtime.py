@@ -1,0 +1,77 @@
+"""Fault-tolerance runtime: retries, stragglers, elastic re-meshing."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import ElasticMesh, HealthMonitor, StragglerDetector, retry_step
+
+
+def test_retry_recovers_from_transient():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return x + 1
+
+    out = retry_step(flaky, 41, backoff_s=0.001)
+    assert out == 42 and calls["n"] == 3
+
+
+def test_retry_escalates():
+    def always_fails():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        retry_step(always_fails, max_retries=2, backoff_s=0.001)
+
+
+def test_retry_callback_invoked():
+    seen = []
+
+    def flaky():
+        if len(seen) < 1:
+            raise RuntimeError("x")
+        return 1
+
+    retry_step(flaky, backoff_s=0.001, on_retry=lambda a, e: seen.append(a))
+    assert seen == [1]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=20, k=6.0, min_samples=5)
+    for _ in range(20):
+        assert not det.record(0.1)
+    assert det.record(5.0)  # clear outlier
+    assert det.flagged and det.flagged[0][1] == 5.0
+    assert det.median == pytest.approx(0.1)
+
+
+def test_straggler_tolerates_jitter(rng):
+    det = StragglerDetector(window=30, k=6.0, min_samples=5)
+    flagged = sum(det.record(0.1 + 0.01 * float(rng.standard_normal())) for _ in range(50))
+    assert flagged == 0
+
+
+def test_health_monitor():
+    hm = HealthMonitor(timeout_s=10)
+    hm.beat("w0", t=100.0)
+    hm.beat("w1", t=105.0)
+    assert hm.dead_workers(now=112.0) == ["w0"]
+
+
+def test_elastic_mesh_reshard():
+    em = ElasticMesh(model_axis=1)
+    mesh = em.mesh_for(len(jax.devices()))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state = {"w": np.ones((8, 4), np.float32)}
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out = em.reshard(state, sh)
+    assert out["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])

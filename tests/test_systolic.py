@@ -1,0 +1,121 @@
+"""Systolic-array model + serial MAC simulator vs the paper's claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitplanes as bp
+from repro.core import systolic as sa
+
+
+# -- MAC correctness (paper §IV-A protocol) ---------------------------------
+
+
+@pytest.mark.parametrize("variant", ["booth", "sbmwc"])
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_mac_exhaustive_small(variant, bits):
+    lo, hi = bp.signed_range(bits)
+    vals = np.arange(lo, hi + 1)
+    mc, ml = np.meshgrid(vals, vals)
+    mc, ml = jnp.asarray(mc.ravel()), jnp.asarray(ml.ravel())
+    f = jax.vmap(lambda c, m: sa.serial_mac_dot(c[None], m[None], bits, variant)[0])
+    np.testing.assert_array_equal(f(mc, ml), mc * ml)
+
+
+@pytest.mark.parametrize("variant", ["booth", "sbmwc"])
+def test_mac_exhaustive_6bit(variant):
+    bits = 6
+    lo, hi = bp.signed_range(bits)
+    vals = np.arange(lo, hi + 1)
+    mc, ml = np.meshgrid(vals, vals)
+    mc, ml = jnp.asarray(mc.ravel()), jnp.asarray(ml.ravel())
+    f = jax.vmap(lambda c, m: sa.serial_mac_dot(c[None], m[None], bits, variant)[0])
+    np.testing.assert_array_equal(f(mc, ml), mc * ml)
+
+
+@pytest.mark.parametrize("variant", ["booth", "sbmwc"])
+@pytest.mark.parametrize("bits", [8, 12, 16])
+def test_mac_random_wide(variant, bits, rng):
+    """100 random pairs at 8-16 bits, exactly the paper's protocol."""
+    lo, hi = bp.signed_range(bits)
+    mc = jnp.asarray(rng.integers(lo, hi + 1, 100), jnp.int32)
+    ml = jnp.asarray(rng.integers(lo, hi + 1, 100), jnp.int32)
+    f = jax.vmap(lambda c, m: sa.serial_mac_dot(c[None], m[None], bits, variant)[0])
+    np.testing.assert_array_equal(f(mc, ml), mc * ml)
+
+
+@pytest.mark.parametrize("variant", ["booth", "sbmwc"])
+@pytest.mark.parametrize("n", [1, 7, 100, 1000])
+def test_mac_vector_dot(variant, n, rng):
+    bits = 4
+    lo, hi = bp.signed_range(bits)
+    mc = jnp.asarray(rng.integers(lo, hi + 1, n), jnp.int32)
+    ml = jnp.asarray(rng.integers(lo, hi + 1, n), jnp.int32)
+    out, cycles = sa.serial_mac_dot(mc, ml, bits, variant)
+    assert int(out) == int(np.sum(np.asarray(mc) * np.asarray(ml)))
+    assert cycles == (n + 1) * bits  # Eq. 8
+
+
+def test_sa_matmul_and_readout(rng):
+    cfg = sa.SAConfig(16, 4)
+    a = jnp.asarray(rng.integers(-8, 8, (4, 25)), jnp.int32)
+    b = jnp.asarray(rng.integers(-8, 8, (25, 16)), jnp.int32)
+    out, cycles = sa.serial_sa_matmul(a, b, 4, cfg)
+    np.testing.assert_array_equal(out, a @ b)
+    assert cycles == (25 + 1) * 4 + cfg.n_macs  # compute + snake readout
+
+
+def test_sa_rejects_oversize():
+    cfg = sa.SAConfig(4, 4)
+    with pytest.raises(ValueError):
+        sa.serial_sa_matmul(jnp.zeros((5, 3), jnp.int32), jnp.zeros((3, 2), jnp.int32), 4, cfg)
+
+
+# -- Analytical model vs paper numbers --------------------------------------
+
+
+def test_eq6_vs_eq8_crossover():
+    """bitSMM beats BISMO for all b_mc, b_ml > 1 except the 2x2 tie (paper §III-A)."""
+    for b in range(3, 17):
+        n = 100
+        assert sa.bitsmm_dot_cycles(b, n) < sa.bismo_dot_cycles(b, b, n)
+    assert sa.bitsmm_dot_cycles(2, 1) == sa.bismo_dot_cycles(2, 2, 1)
+
+
+def test_peak_op_per_cycle_eq10():
+    assert sa.peak_op_per_cycle(sa.SAConfig(64, 16), 16) == 64.0
+    assert sa.peak_op_per_cycle(sa.SAConfig(16, 4), 1) == 64.0
+
+
+def test_eq9_asymptote():
+    cfg = sa.SAConfig(32, 8)
+    big_n = sa.op_per_cycle(cfg, 10**9, 32, 8, 16)
+    assert abs(big_n - sa.peak_op_per_cycle(cfg, 16)) / big_n < 1e-5
+
+
+PAPER_FPGA_GOPS = {(16, 4): 1.2, (32, 8): 4.8, (64, 16): 19.2}  # Table II @300MHz
+PAPER_ASAP7 = {  # Table III: (max_freq_MHz, peak_GOPS, target_MHz, target_GOPS)
+    (16, 4): (1183, 4.73, 1000, 4),
+    (32, 8): (1124, 17.98, 1000, 16),
+    (64, 16): (1144, 73.22, 1000, 64),
+}
+
+
+def test_paper_table2_fpga_gops():
+    for (w, h), gops in PAPER_FPGA_GOPS.items():
+        assert abs(sa.gops(sa.SAConfig(w, h), 16, 300e6) - gops) < 1e-9
+
+
+def test_paper_table3_asap7_gops():
+    for (w, h), (fmax, peak, ftgt, tgt) in PAPER_ASAP7.items():
+        cfg = sa.SAConfig(w, h)
+        assert abs(sa.gops(cfg, 16, fmax * 1e6) - peak) < 0.01
+        assert abs(sa.gops(cfg, 16, ftgt * 1e6) - tgt) < 1e-9
+
+
+def test_readout_network_counts():
+    cfg = sa.SAConfig(16, 4)
+    assert sa.pipeline_register_count(cfg) == 15 * 3 + 1
+    assert sa.mux_count(cfg) == 63
+    assert sa.readout_cycles(cfg) == 64
