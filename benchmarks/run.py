@@ -15,6 +15,12 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-e2e", action="store_true")
+    ap.add_argument(
+        "--json-out",
+        default=None,
+        help="path for the machine-readable kernel benchmark dump "
+        "(default: BENCH_kernel.json, or $BENCH_KERNEL_JSON)",
+    )
     args = ap.parse_args()
 
     from benchmarks import cycles, kernel_bench, throughput_model
@@ -22,7 +28,10 @@ def main() -> None:
     sections = [
         ("paper tables II/III/IV + fig6", throughput_model.run),
         ("cycle scaling eq6 vs eq8", cycles.run),
-        ("bit-serial matmul kernels", kernel_bench.run),
+        (
+            "bit-serial matmul kernels",
+            lambda: kernel_bench.run(json_path=args.json_out),
+        ),
     ]
     if not args.skip_e2e:
         from benchmarks import e2e_bench

@@ -15,17 +15,25 @@ operands one bit per cycle; here the temporal stream becomes a leading
 Digit-plane (radix ``2^k``) variants generalize the same three schemes to
 the width the TPU MXU natively consumes (k = 8 → int8 digits); see
 DESIGN.md §2. All decompositions are exact: ``reconstruct(decompose(x)) == x``.
+
+Bit-planes additionally support a *packed* storage format
+(:func:`pack_planes` / :func:`unpack_planes`): binary {0,1} planes pack
+32 plane values per int32 word, ternary Booth {-1,0,+1} planes pack as a
+sign/magnitude word pair — 32× / 16× less HBM traffic than int8 plane
+tensors. See DESIGN.md §"Packed plane format" for the word layout.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 Variant = Literal["unsigned", "sbmwc", "booth"]
+
+WORD_BITS = 32  # plane values per packed int32 word
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +172,247 @@ def to_digits(
         return PlaneDecomposition(planes, tuple(weights))
 
     raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Packed plane storage (DESIGN.md §"Packed plane format")
+# ---------------------------------------------------------------------------
+#
+# Word layout ("planar"): with W = ceil(K / 32) int32 words covering a
+# padded extent of 32*W along the packed axis, bit t of word j holds the
+# plane value at padded position k = t*W + j. Unpacking is therefore a
+# concatenation of 32 shift-and-mask chunks — no gathers and no lane
+# interleaves, which is what lets the Pallas kernel unpack on-chip with
+# plain VPU ops. The layout is a fixed permutation of K, so a matmul over
+# operands packed with the *same* W contracts identical K elements and
+# needs no unpermute.
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPlanes:
+    """Bit-packed plane tensor plus the metadata needed to unpack it.
+
+    ``mag``:     int32 words; bit t of word j = |plane value| at k = t*W + j.
+    ``sign``:    int32 words with the same layout, bit set where the plane
+                 value is -1 (ternary Booth planes); ``None`` for binary
+                 {0,1} planes. A set sign bit implies a set mag bit, so the
+                 value is always ``mag - 2*sign``.
+    ``k``:       unpadded extent of the packed axis.
+    ``axis``:    which axis of the *unpacked* plane array was packed
+                 (normalized non-negative; never 0, the planes axis).
+    ``weights``: plane weights carried through from the decomposition.
+    """
+
+    mag: jax.Array
+    sign: Optional[jax.Array]
+    k: int
+    axis: int
+    weights: tuple[int, ...]
+
+    @property
+    def n_planes(self) -> int:
+        return self.mag.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.mag.shape[self.axis]
+
+    @property
+    def nbytes(self) -> int:
+        n = self.mag.size * self.mag.dtype.itemsize
+        if self.sign is not None:
+            n += self.sign.size * self.sign.dtype.itemsize
+        return n
+
+    def unpack(self, dtype=jnp.int8) -> jax.Array:
+        return unpack_planes(self, dtype=dtype)
+
+
+def _packed_flatten(p: PackedPlanes):
+    return (p.mag, p.sign), (p.k, p.axis, p.weights)
+
+
+def _packed_unflatten(aux, children):
+    mag, sign = children
+    k, axis, weights = aux
+    return PackedPlanes(mag=mag, sign=sign, k=k, axis=axis, weights=weights)
+
+
+jax.tree_util.register_pytree_node(PackedPlanes, _packed_flatten, _packed_unflatten)
+
+
+def _to_words(bits01: jax.Array, axis: int, n_words: int) -> jax.Array:
+    """Pack a {0,1} int array along ``axis`` into int32 words (planar layout).
+
+    Works axis-in-place (no transposes): the extent splits into an adjacent
+    (32, W) pair, the bit axis is shifted into place and summed away —
+    disjoint bit positions make the int32 sum exactly the bitwise OR.
+    """
+    pad = n_words * WORD_BITS - bits01.shape[axis]
+    x = bits01
+    if pad:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, pad)
+        x = jnp.pad(x, pads)
+    sh = x.shape
+    x = x.reshape(sh[:axis] + (WORD_BITS, n_words) + sh[axis + 1 :]).astype(jnp.int32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.int32).reshape(
+        (WORD_BITS,) + (1,) * (x.ndim - 1 - axis)
+    )
+    return jnp.sum(x << shifts, axis=axis)
+
+
+def _from_words(words: jax.Array, axis: int, k: int) -> jax.Array:
+    """Inverse of :func:`_to_words`: int32 words -> {0,1} int32 values.
+
+    Bit t of word j is value t*W + j, so expanding a bit axis right before
+    the word axis and merging the two (C order) restores the padded
+    sequence — again transpose-free.
+    """
+    sh = words.shape
+    w = jnp.expand_dims(words, axis)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.int32).reshape(
+        (WORD_BITS,) + (1,) * (w.ndim - 1 - axis)
+    )
+    bits = (w >> shifts) & 1
+    bits = bits.reshape(sh[:axis] + (WORD_BITS * sh[axis],) + sh[axis + 1 :])
+    return jax.lax.slice_in_dim(bits, 0, k, axis=axis)
+
+
+def pack_planes(
+    planes: jax.Array,
+    *,
+    axis: int = -1,
+    ternary: bool = False,
+    weights: tuple[int, ...] = (),
+) -> PackedPlanes:
+    """Bit-pack plane values along ``axis`` into int32 words.
+
+    ``planes`` must hold values in {0,1} (``ternary=False``; the unsigned /
+    SBMwC bit-plane alphabets) or {-1,0,+1} (``ternary=True``; Booth).
+    ``ternary`` is a static flag — the packed alphabet cannot be inferred
+    from traced values. Digit planes (radix > 2) are not packable.
+    ``axis`` may not be 0 (the planes axis). Ragged extents pad with zero
+    plane values, which are exactly inert in the plane matmul.
+    """
+    axis = axis % planes.ndim
+    if axis == 0:
+        raise ValueError("cannot pack along the planes axis (axis 0)")
+    k = planes.shape[axis]
+    n_words = -(-k // WORD_BITS)
+    v = planes.astype(jnp.int32)
+    if ternary:
+        mag = _to_words(jnp.abs(v), axis, n_words)
+        sign = _to_words((v < 0).astype(jnp.int32), axis, n_words)
+    else:
+        mag = _to_words(v, axis, n_words)
+        sign = None
+    return PackedPlanes(mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights))
+
+
+def unpack_planes(packed: PackedPlanes, dtype=jnp.int8) -> jax.Array:
+    """Exact inverse of :func:`pack_planes` (round-trip guarantee)."""
+    vals = _from_words(packed.mag, packed.axis, packed.k)
+    if packed.sign is not None:
+        vals = vals - 2 * _from_words(packed.sign, packed.axis, packed.k)
+    return vals.astype(dtype)
+
+
+def pack_decomposition(
+    dec: PlaneDecomposition, *, axis: int = -1, variant: Variant = "sbmwc"
+) -> PackedPlanes:
+    """Pack a bit-plane :class:`PlaneDecomposition` (carries its weights)."""
+    return pack_planes(
+        dec.planes, axis=axis, ternary=variant == "booth", weights=dec.weights
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightPlanes:
+    """Pre-decomposed weight operand for the serving weight-plane cache.
+
+    Built once per checkpoint load (DESIGN.md §"Weight-cache lifecycle") so
+    the forward pass never re-decomposes static weights.
+
+    ``packed``: :class:`PackedPlanes` with K packed along the rows
+                (bit-plane level — binary/ternary planes);
+    ``planes``: raw planes ``(P, K, N)`` — always set at digit level
+                (radix-256 digits don't bit-pack); optionally *also* set at
+                bit-plane level so backends without an in-kernel unpacker
+                (the CPU/jnp scan) skip per-call weight-side work entirely.
+    """
+
+    packed: Optional[PackedPlanes]
+    planes: Optional[jax.Array]
+    weights: tuple[int, ...]
+    level: str
+    variant: str
+    w_bits: int
+
+    @property
+    def n_out(self) -> int:
+        arr = self.packed.mag if self.packed is not None else self.planes
+        return arr.shape[-1]
+
+
+def _wp_flatten(wp: WeightPlanes):
+    return (wp.packed, wp.planes), (wp.weights, wp.level, wp.variant, wp.w_bits)
+
+
+def _wp_unflatten(aux, children):
+    packed, planes = children
+    weights, level, variant, w_bits = aux
+    return WeightPlanes(
+        packed=packed, planes=planes, weights=weights,
+        level=level, variant=variant, w_bits=w_bits,
+    )
+
+
+jax.tree_util.register_pytree_node(WeightPlanes, _wp_flatten, _wp_unflatten)
+
+
+def make_weight_planes(
+    w_q: jax.Array,
+    *,
+    w_bits: int,
+    variant: Variant = "booth",
+    level: str = "digit",
+    radix_bits: int = 8,
+    store: str = "auto",
+) -> WeightPlanes:
+    """Decompose (and, at bit-plane level, pack) a quantized weight matrix.
+
+    ``w_q``: integer ``(K, N)`` weight. Stacked/scanned weights (leading
+    layer or expert dims) are handled by the caller via ``jax.vmap`` so the
+    stacked leaves keep their leading axes scannable.
+
+    ``store`` (bit-plane level): ``"packed"`` keeps only the packed words
+    (the HBM-lean serving format); ``"both"`` additionally keeps the raw
+    int8 planes so the jnp scan path pays zero per-call weight-side work;
+    ``"auto"`` = packed-only on TPU, both elsewhere.
+    """
+    if w_q.ndim != 2:
+        raise ValueError(f"make_weight_planes expects (K, N), got {w_q.shape}")
+    if store not in ("auto", "packed", "both"):
+        raise ValueError(f"unknown store mode {store!r}")
+    if store == "auto":
+        store = "packed" if jax.default_backend() == "tpu" else "both"
+    if level == "bitplane":
+        dec = to_bitplanes(w_q, w_bits, variant)
+        packed = pack_decomposition(dec, axis=-2, variant=variant)
+        return WeightPlanes(
+            packed=packed,
+            planes=dec.planes if store == "both" else None,
+            weights=dec.weights,
+            level=level, variant=variant, w_bits=w_bits,
+        )
+    if level == "digit":
+        dec = to_digits(w_q, w_bits, variant, radix_bits)
+        return WeightPlanes(
+            packed=None, planes=dec.planes, weights=dec.weights,
+            level=level, variant=variant, w_bits=w_bits,
+        )
+    raise ValueError(f"no weight-plane cache for level {level!r}")
 
 
 def booth_nonzero_digit_count(x: jax.Array, bits: int) -> jax.Array:

@@ -2,6 +2,9 @@
 
 * ``plane_mm``        — fused plane-pair (bit/digit-serial) matmul, the
                         paper's MAC-with-accumulator re-tiled for VMEM/MXU;
+* ``plane_mm_packed`` — the same contraction over bit-packed plane words,
+                        unpacked on-chip (8× less HBM traffic per operand
+                        at 8×8-bit SBMwC);
 * ``flash_attention`` — blockwise online-softmax attention for the
                         long-sequence shape cells.
 
@@ -11,5 +14,6 @@
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.plane_mm import plane_matmul
+from repro.kernels.plane_mm_packed import plane_matmul_packed
 
-__all__ = ["ops", "ref", "flash_attention", "plane_matmul"]
+__all__ = ["ops", "ref", "flash_attention", "plane_matmul", "plane_matmul_packed"]

@@ -34,6 +34,7 @@ def _flash_kernel(
     block_q: int,
     block_k: int,
     kv_steps: int,
+    kv_len: int,
 ):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -60,6 +61,12 @@ def _flash_kernel(
             q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
             s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        if kv_len < kv_steps * block_k:
+            # Padded KV columns must not receive attention mass. Applied
+            # under causal masking too: query rows at q_pos >= kv_len would
+            # otherwise attend padded columns on the diagonal's far side.
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos < kv_len, s, NEG_INF)
 
         m_prev = m_scratch[...]  # (block_q, 1)
         l_prev = l_scratch[...]
@@ -82,7 +89,9 @@ def _flash_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+    static_argnames=(
+        "causal", "sm_scale", "block_q", "block_k", "kv_len", "interpret"
+    ),
 )
 def flash_attention(
     q: jax.Array,
@@ -93,11 +102,18 @@ def flash_attention(
     sm_scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
+    kv_len: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0 (GQA).
 
     Sq % block_q == 0 and Sk % block_k == 0 (wrapper pads otherwise).
+    ``kv_len``: number of *real* KV positions (<= Sk); columns past it are
+    padding and are masked out of the softmax. NOTE: ``kv_len`` is a jit
+    *static* argument — each distinct value compiles a new kernel. It is
+    meant for fixed wrapper padding (ops.flash_attention passes the
+    constant unpadded length), not as a per-step decode cursor; a growing
+    cache should round its length to block_k multiples.
     Returns (B, Hq, Sq, D) in q.dtype.
     """
     b, hq, sq, d = q.shape
@@ -111,6 +127,9 @@ def flash_attention(
         raise ValueError(f"seq lens ({sq},{sk}) must tile by ({block_q},{block_k})")
 
     kv_steps = sk // block_k
+    kv_len = sk if kv_len is None else kv_len
+    if not 0 < kv_len <= sk:
+        raise ValueError(f"kv_len {kv_len} out of range (0, {sk}]")
     grid = (b, hq, sq // block_q, kv_steps)
     kernel = functools.partial(
         _flash_kernel,
@@ -119,6 +138,7 @@ def flash_attention(
         block_q=block_q,
         block_k=block_k,
         kv_steps=kv_steps,
+        kv_len=kv_len,
     )
     return pl.pallas_call(
         kernel,

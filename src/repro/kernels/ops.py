@@ -20,12 +20,25 @@ from repro.core import bitserial as bs
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.plane_mm import plane_matmul as _plane_mm_pallas
+from repro.kernels.plane_mm_packed import plane_matmul_packed as _plane_mm_packed
+from repro.kernels.plane_mm_packed import validate_packed_operands
 
 
 def resolve_backend(backend: str) -> str:
     if backend != "auto":
         return backend
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _resolve_packed(packed, backend: str, level: str) -> bool:
+    """``packed=None`` -> auto: packed slabs on the TPU kernel path for the
+    bit-plane level (where planes are binary/ternary and HBM traffic is the
+    bottleneck); off elsewhere. Digit planes (radix 256) are not packable."""
+    if level != "bitplane":
+        return False
+    if packed is None:
+        return backend == "pallas"
+    return bool(packed)
 
 
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
@@ -62,6 +75,111 @@ def plane_matmul(
     return out[:m, :n]
 
 
+def plane_matmul_packed(
+    packed_a: bp.PackedPlanes,
+    packed_w: bp.PackedPlanes,
+    pair_weights: jax.Array,
+    *,
+    backend: str = "auto",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Dispatch wrapper for the packed plane matmul kernel.
+
+    The jnp path unpacks and runs the reference — the parity oracle the
+    packed kernel is tested against (and an exact pack/unpack round trip).
+    """
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        validate_packed_operands(packed_a, packed_w, pair_weights)
+        return ref.plane_matmul_ref(
+            bp.unpack_planes(packed_a), bp.unpack_planes(packed_w), pair_weights
+        )
+    return _plane_mm_packed(
+        packed_a, packed_w, pair_weights,
+        bm=bm, bn=bn, bk=bk, interpret=backend == "interpret",
+    )
+
+
+def _pair_weights(wa: tuple, ww: tuple) -> jax.Array:
+    return bs._wrap_weights([x * y for x in wa for y in ww], jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("a_bits", "variant", "level"))
+def _matmul_cached_jnp(
+    a2: jax.Array,
+    w_planes: bp.WeightPlanes,
+    *,
+    a_bits: int,
+    variant: str,
+    level: str,
+) -> jax.Array:
+    """jnp path over cached weight planes: the same plane-pair scan as
+    :func:`repro.core.bitserial.bitserial_matmul`, minus the weight-side
+    decomposition."""
+    if level == "bitplane":
+        dec_a = bp.to_bitplanes(a2, a_bits, variant)
+        wpl = (
+            w_planes.planes
+            if w_planes.planes is not None
+            else bp.unpack_planes(w_planes.packed, dtype=jnp.int8)
+        )
+    else:
+        dec_a = bp.to_digits(a2, a_bits, variant)
+        wpl = w_planes.planes
+    dec_w = bp.PlaneDecomposition(wpl, w_planes.weights)
+    return bs._plane_pair_scan(dec_a, dec_w, jnp.int32)
+
+
+def _matmul_cached(
+    a2: jax.Array,
+    w_planes: bp.WeightPlanes,
+    *,
+    a_bits: int,
+    variant: str,
+    level: str,
+    backend: str,
+    use_packed: bool,
+    tile_kw,
+) -> jax.Array:
+    """Contract quantized activations against a pre-decomposed weight."""
+    if backend == "jnp" or (level == "digit" and variant != "booth"):
+        # SBMwC digits exceed int8 and take the jnp scan even on TPU.
+        return _matmul_cached_jnp(
+            a2, w_planes, a_bits=a_bits, variant=variant, level=level
+        )
+    if level == "bitplane":
+        dec_a = bp.to_bitplanes(a2, a_bits, variant)
+        pw = _pair_weights(dec_a.weights, w_planes.weights)
+        if use_packed:
+            pa = bp.pack_planes(
+                dec_a.planes, axis=-1, ternary=variant == "booth"
+            )
+            return plane_matmul_packed(
+                pa, w_planes.packed, pw, backend=backend, **tile_kw
+            )
+        wpl = (
+            w_planes.planes
+            if w_planes.planes is not None
+            else bp.unpack_planes(w_planes.packed)
+        )
+        return plane_matmul(
+            dec_a.planes.astype(jnp.int8), wpl.astype(jnp.int8), pw,
+            backend=backend, **tile_kw,
+        )
+    # digit level (booth: int8-native planes)
+    dec_a = bp.to_digits(a2, a_bits, variant)
+    pw = _pair_weights(dec_a.weights, w_planes.weights)
+    return plane_matmul(
+        dec_a.planes.astype(jnp.int8),
+        w_planes.planes.astype(jnp.int8),
+        pw,
+        backend=backend,
+        **tile_kw,
+    )
+
+
 def bitserial_matmul(
     a: jax.Array,
     w: jax.Array,
@@ -73,6 +191,8 @@ def bitserial_matmul(
     mode: str = "fully_serial",
     backend: str = "auto",
     accum_dtype=jnp.int32,
+    packed: bool | None = None,
+    w_planes: bp.WeightPlanes | None = None,
     **tile_kw,
 ) -> jax.Array:
     """Kernel-dispatching version of :func:`repro.core.bitserial_matmul`.
@@ -81,12 +201,51 @@ def bitserial_matmul(
     for both variants; digit level for Booth — SBMwC's unsigned digits
     exceed int8, the software echo of its two-adder hardware cost) and
     falls back to the jnp path otherwise.
+
+    ``packed``: bit-pack the plane operands and unpack in-kernel (32 plane
+    values per int32 word — up to 8× less HBM traffic per operand at
+    8×8-bit). ``None`` = auto (on for the TPU bitplane path). Explicit
+    ``True`` raises for configs that cannot pack (digit-level planes,
+    non-serial modes, non-int32 accumulation) rather than silently
+    falling back.
+
+    ``w_planes``: pre-decomposed weight operand from the serving cache
+    (:func:`repro.core.bitplanes.make_weight_planes`); used when its
+    level/variant/bits match the requested config, so the static weight is
+    never re-decomposed per call.
     """
     backend = resolve_backend(backend)
+    serial = mode == "fully_serial"
+    int32_acc = accum_dtype == jnp.int32
     kernel_ok = (
         level == "bitplane" or (level == "digit" and variant == "booth")
-    ) and accum_dtype == jnp.int32  # the Pallas kernel accumulates in int32
-    if backend == "jnp" or not kernel_ok or mode != "fully_serial":
+    ) and int32_acc  # the Pallas kernels accumulate in int32
+    use_packed = serial and int32_acc and _resolve_packed(packed, backend, level)
+    if packed and not use_packed:
+        raise ValueError(
+            "packed=True requires level='bitplane', mode='fully_serial' and "
+            f"int32 accumulation; got level={level!r}, mode={mode!r}, "
+            f"accum_dtype={jnp.dtype(accum_dtype).name}"
+        )
+
+    cache_ok = (
+        w_planes is not None
+        and serial
+        and int32_acc
+        and w_planes.level == level
+        and w_planes.variant == variant
+        and w_planes.w_bits == w_bits
+    )
+    if cache_ok:
+        lead = a.shape[:-1]
+        a2 = a.reshape((-1, a.shape[-1]))
+        out = _matmul_cached(
+            a2, w_planes, a_bits=a_bits, variant=variant, level=level,
+            backend=backend, use_packed=use_packed, tile_kw=tile_kw,
+        )
+        return out.reshape(lead + (w_planes.n_out,))
+
+    if (backend == "jnp" and not use_packed) or not kernel_ok or not serial:
         return bs.bitserial_matmul(
             a, w, a_bits=a_bits, w_bits=w_bits, variant=variant, level=level,
             mode=mode, accum_dtype=accum_dtype,
@@ -99,16 +258,20 @@ def bitserial_matmul(
     else:
         dec_a = bp.to_digits(a2, a_bits, variant)
         dec_w = bp.to_digits(w, w_bits, variant)
-    pw = bs._wrap_weights(
-        [wa * ww for wa in dec_a.weights for ww in dec_w.weights], jnp.int32
-    )
-    out = plane_matmul(
-        dec_a.planes.astype(jnp.int8),
-        dec_w.planes.astype(jnp.int8),
-        pw,
-        backend=backend,
-        **tile_kw,
-    )
+    pw = _pair_weights(dec_a.weights, dec_w.weights)
+    if use_packed:
+        ternary = variant == "booth"
+        pa = bp.pack_planes(dec_a.planes, axis=-1, ternary=ternary)
+        pwk = bp.pack_planes(dec_w.planes, axis=-2, ternary=ternary)
+        out = plane_matmul_packed(pa, pwk, pw, backend=backend, **tile_kw)
+    else:
+        out = plane_matmul(
+            dec_a.planes.astype(jnp.int8),
+            dec_w.planes.astype(jnp.int8),
+            pw,
+            backend=backend,
+            **tile_kw,
+        )
     return out.reshape(lead + (w.shape[1],))
 
 
@@ -130,8 +293,6 @@ def flash_attention(
     qp = _pad_to(q, (0, 0, block_q, 0))
     kp = _pad_to(k, (0, 0, block_k, 0))
     vp = _pad_to(v, (0, 0, block_k, 0))
-    # Padded KV columns must not attend: rely on causal masking when causal,
-    # otherwise mask via a large-negative trick using an extra value row.
     out = _flash_pallas(
         qp,
         kp,
@@ -140,6 +301,7 @@ def flash_attention(
         sm_scale=sm_scale,
         block_q=block_q,
         block_k=block_k,
+        kv_len=sk,  # padded KV columns are masked out of the softmax
         interpret=backend == "interpret",
     )
     return out[:, :, :sq, :]

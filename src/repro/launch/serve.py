@@ -28,10 +28,16 @@ from repro.models.transformer import init_params
 class Engine:
     """Minimal batched generation engine over the serve steps."""
 
-    def __init__(self, cfg, params, policy, max_len: int = 256):
+    def __init__(self, cfg, params, policy, max_len: int = 256, plane_cache: bool = True):
         self.cfg = cfg
         self.policy = policy
-        self.q_params = quantize_params(params, policy) if policy.default.active else params
+        # Quantize AND pre-decompose/pack the weight planes exactly once at
+        # load time (plane_cache) — forwards only decompose activations.
+        self.q_params = (
+            quantize_params(params, policy, plane_cache=plane_cache)
+            if policy.default.active
+            else params
+        )
         self.prefill = jax.jit(make_prefill_step(cfg, policy, max_len=max_len))
         self.step = jax.jit(make_serve_step(cfg, policy), donate_argnums=(1,))
 
@@ -64,6 +70,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument(
+        "--no-plane-cache",
+        action="store_true",
+        help="skip the load-time weight-plane decomposition cache",
+    )
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -75,7 +86,11 @@ def main():
         else PrecisionPolicy.off()
     )
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, policy, max_len=args.prompt_len + args.gen)
+    engine = Engine(
+        cfg, params, policy,
+        max_len=args.prompt_len + args.gen,
+        plane_cache=not args.no_plane_cache,
+    )
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32

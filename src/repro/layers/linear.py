@@ -72,6 +72,8 @@ def linear_apply(
             mode=policy.mode,
             backend=backend,
             accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
+            # decompose-once serving cache (None -> decompose per call)
+            w_planes=params.get("w_planes"),
         )
         out = acc.astype(jnp.float32) * xq.scale * params["w_scale"]
         return out.astype(x.dtype)

@@ -5,10 +5,20 @@ according to the PrecisionPolicy — the software analogue of loading
 pre-quantized weights into accelerator memory at their configured widths
 (the paper's weights-in-memory-at-b-bits deployment model). Halves (int8)
 the serving HBM footprint vs bf16, visible in the dry-run memory terms.
+
+With ``plane_cache=True`` each quantized weight is additionally decomposed
+into its bit/digit planes exactly once at load time (packed to int32 words
+at bit-plane level) and the result rides in the param tree as
+``'w_planes'`` — so the per-forward cost of the bit-serial path is only
+the activation-side decomposition. See DESIGN.md §"Weight-cache
+lifecycle".
 """
 
 from __future__ import annotations
 
+import jax
+
+from repro.core import bitplanes as bp
 from repro.core.precision import PrecisionPolicy
 from repro.core.quantize import quantize
 
@@ -17,8 +27,41 @@ def _is_linear(node) -> bool:
     return isinstance(node, dict) and "w" in node and getattr(node["w"], "ndim", 0) >= 2
 
 
-def quantize_params(params, policy: PrecisionPolicy):
-    """Walk the parameter pytree, converting policy-active linears."""
+def decompose_linear_weight(
+    w_q: jax.Array, *, w_bits: int, variant: str, level: str
+) -> bp.WeightPlanes:
+    """Decompose one stored-quantized weight into cached planes.
+
+    Stacked/scanned weights (leading layer/expert dims) are vmapped so the
+    cache leaves keep their leading axes scannable by ``lax.scan``. A
+    module-level function so load-time decomposition counts can be
+    observed (tests monkeypatch this).
+    """
+
+    def one(w):
+        return bp.make_weight_planes(w, w_bits=w_bits, variant=variant, level=level)
+
+    fn = one
+    for _ in range(w_q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w_q)
+
+
+def _cacheable(policy: PrecisionPolicy, prec) -> bool:
+    """The plane cache serves the int32-exact fully-serial kernel configs
+    (max 8 bits: wider configs accumulate in f32 and fall back anyway)."""
+    return (
+        policy.mode == "fully_serial"
+        and policy.level in ("bitplane", "digit")
+        and max(prec.w_bits, prec.a_bits) <= 8
+    )
+
+
+def quantize_params(params, policy: PrecisionPolicy, *, plane_cache: bool = False):
+    """Walk the parameter pytree, converting policy-active linears.
+
+    ``plane_cache=True`` also attaches the pre-decomposed weight planes
+    (the decompose-once serving cache)."""
 
     def rec(node, path):
         if _is_linear(node):
@@ -27,7 +70,15 @@ def quantize_params(params, policy: PrecisionPolicy):
                 # reduce over the input dim (axis -2; handles stacked/scanned
                 # leading dims) -> per-output-channel scales.
                 q = quantize(node["w"].astype("float32"), prec.w_bits, axis=-2)
-                return {"w_q": q.values, "w_scale": q.scale}
+                out = {"w_q": q.values, "w_scale": q.scale}
+                if plane_cache and _cacheable(policy, prec):
+                    out["w_planes"] = decompose_linear_weight(
+                        q.values,
+                        w_bits=prec.w_bits,
+                        variant=policy.variant,
+                        level=policy.level,
+                    )
+                return out
             return node
         if isinstance(node, dict):
             return {k: rec(v, f"{path}/{k}") for k, v in node.items()}

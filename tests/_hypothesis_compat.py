@@ -1,0 +1,109 @@
+"""Minimal drop-in for the slice of the hypothesis API these tests use.
+
+The CI/container image does not ship ``hypothesis`` and the project rule is
+to never add dependencies, so the property tests fall back to seeded random
+sampling with the same ``@given``/``@settings``/``st.*`` surface. Shrinking
+and the database are (deliberately) not reproduced — a failure reports the
+drawn example so it can be replayed by hand.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:  # noqa: N801 - mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rnd: rnd.choice(seq))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            return [elements.example(rnd) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def data():
+        return _Strategy(lambda rnd: _DataObject(rnd))
+
+
+st = strategies
+
+
+class _DataObject:
+    """Interactive draw handle (the `st.data()` strategy)."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.example(self._rnd)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    """Attach run settings to a ``@given`` test (decorator)."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test repeatedly with freshly drawn examples.
+
+    Seeded deterministically per test so failures reproduce run-to-run.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above or below @given: check both functions.
+            n = getattr(
+                wrapper, "_compat_max_examples",
+                getattr(fn, "_compat_max_examples", 25),
+            )
+            rnd = random.Random(f"compat:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn_args = tuple(s.example(rnd) for s in arg_strategies)
+                drawn_kw = {k: s.example(rnd) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"property test failed on example {i}: "
+                        f"args={drawn_args} kwargs={drawn_kw}"
+                    ) from e
+
+        # pytest must not see the wrapped signature (the drawn parameters
+        # would be mistaken for fixtures).
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bitplanes as bp
 from repro.core import bitserial as bs

@@ -74,6 +74,127 @@ def test_plane_mm_unroll_variant(rng):
     np.testing.assert_array_equal(got, a @ w)
 
 
+# -- packed planes ------------------------------------------------------------
+
+
+def _plane_range(variant, bits):
+    if variant == "unsigned":
+        return 0, (1 << bits) - 1
+    return bp.signed_range(bits)
+
+
+@pytest.mark.parametrize("variant", ["unsigned", "sbmwc", "booth"])
+@pytest.mark.parametrize("bits", [1, 2, 3, 5, 8, 11, 16])
+@pytest.mark.parametrize("k", [1, 31, 32, 33, 95, 128])
+def test_pack_unpack_roundtrip(variant, bits, k, rng):
+    """Packed storage is exact for every alphabet × width × ragged K."""
+    lo, hi = _plane_range(variant, bits)
+    x = jnp.asarray(rng.integers(lo, hi + 1, (3, k)), jnp.int32)
+    dec = bp.to_bitplanes(x, bits, variant)
+    packed = bp.pack_decomposition(dec, axis=-1, variant=variant)
+    np.testing.assert_array_equal(bp.unpack_planes(packed), dec.planes)
+    assert packed.weights == dec.weights
+    # weight-side layout (K on the rows)
+    w = jnp.asarray(rng.integers(lo, hi + 1, (k, 4)), jnp.int32)
+    dw = bp.to_bitplanes(w, bits, variant)
+    pw = bp.pack_decomposition(dw, axis=-2, variant=variant)
+    np.testing.assert_array_equal(bp.unpack_planes(pw), dw.planes)
+
+
+@pytest.mark.parametrize("variant", ["unsigned", "sbmwc", "booth"])
+def test_pack_bytes_shrink(variant):
+    """8 binary planes pack to 1 byte per element (8×); ternary adds the
+    sign word (4×)."""
+    x = jnp.zeros((64, 64), jnp.int32)
+    dec = bp.to_bitplanes(x, 8, variant)
+    packed = bp.pack_decomposition(dec, axis=-1, variant=variant)
+    unpacked_bytes = dec.planes.size  # int8 planes
+    factor = 4 if variant == "booth" else 8
+    assert unpacked_bytes // packed.nbytes == factor
+
+
+def test_pack_rejects_planes_axis():
+    with pytest.raises(ValueError):
+        bp.pack_planes(jnp.zeros((4, 8), jnp.int8), axis=0)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (17, 70, 33), (1, 33, 8), (5, 100, 3)])
+@pytest.mark.parametrize("variant", ["sbmwc", "booth"])
+@pytest.mark.parametrize("a_bits,w_bits", [(4, 4), (8, 8), (2, 6), (1, 8)])
+def test_packed_mm_vs_ref(m, k, n, variant, a_bits, w_bits, rng):
+    """Packed kernel (interpret) is bit-exact vs plane_matmul_ref on the
+    unpacked planes, across shapes including ragged K."""
+    alo, ahi = bp.signed_range(a_bits)
+    wlo, whi = bp.signed_range(w_bits)
+    a = jnp.asarray(rng.integers(alo, ahi + 1, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(wlo, whi + 1, (k, n)), jnp.int32)
+    da = bp.to_bitplanes(a, a_bits, variant)
+    dw = bp.to_bitplanes(w, w_bits, variant)
+    pw = jnp.asarray([x * y for x in da.weights for y in dw.weights], jnp.int32)
+    pa = bp.pack_decomposition(da, axis=-1, variant=variant)
+    pk = bp.pack_decomposition(dw, axis=-2, variant=variant)
+    want = ref.plane_matmul_ref(da.planes, dw.planes, pw)
+    got = ops.plane_matmul_packed(pa, pk, pw, backend="interpret", bm=8, bn=8, bk=32)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(want, a @ w)
+    # jnp parity path (unpack + ref) agrees too
+    got_jnp = ops.plane_matmul_packed(pa, pk, pw, backend="jnp")
+    np.testing.assert_array_equal(got_jnp, want)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("variant", ["sbmwc", "booth"])
+def test_bitserial_matmul_packed_dispatch(bits, variant, rng):
+    """ops.bitserial_matmul(packed=True) == unpacked == a @ w."""
+    lo, hi = bp.signed_range(bits)
+    a = jnp.asarray(rng.integers(lo, hi + 1, (12, 70)), jnp.int32)
+    w = jnp.asarray(rng.integers(lo, hi + 1, (70, 9)), jnp.int32)
+    kw = dict(a_bits=bits, w_bits=bits, variant=variant, level="bitplane",
+              backend="interpret", bm=8, bn=8, bk=32)
+    got_packed = ops.bitserial_matmul(a, w, packed=True, **kw)
+    got_plain = ops.bitserial_matmul(a, w, packed=False, **kw)
+    np.testing.assert_array_equal(got_packed, a @ w)
+    np.testing.assert_array_equal(got_plain, got_packed)
+
+
+def test_packed_true_rejected_for_unpackable_configs(rng):
+    """Explicit packed=True must not silently fall back (digit planes
+    don't bit-pack; non-int32 accumulation has no packed kernel)."""
+    a = jnp.zeros((4, 32), jnp.int32)
+    w = jnp.zeros((32, 4), jnp.int32)
+    with pytest.raises(ValueError, match="packed=True"):
+        ops.bitserial_matmul(
+            a, w, a_bits=8, w_bits=8, variant="booth", level="digit",
+            backend="jnp", packed=True,
+        )
+    with pytest.raises(ValueError, match="packed=True"):
+        ops.bitserial_matmul(
+            a, w, a_bits=8, w_bits=8, variant="booth", level="bitplane",
+            backend="jnp", packed=True, mode="serial_parallel",
+        )
+
+
+def test_packed_mm_multi_k_blocks(rng):
+    """K spanning several packed word blocks exercises grid accumulation."""
+    a = jnp.asarray(rng.integers(-8, 8, (8, 200)), jnp.int32)
+    w = jnp.asarray(rng.integers(-8, 8, (200, 8)), jnp.int32)
+    got = ops.bitserial_matmul(
+        a, w, a_bits=4, w_bits=4, variant="booth", level="bitplane",
+        backend="interpret", packed=True, bm=8, bn=8, bk=64,
+    )
+    np.testing.assert_array_equal(got, a @ w)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "jnp"])
+def test_packed_mm_mismatched_k_raises(backend):
+    da = bp.pack_planes(jnp.zeros((2, 8, 32), jnp.int8), axis=-1)
+    dw = bp.pack_planes(jnp.zeros((2, 64, 8), jnp.int8), axis=-2)
+    with pytest.raises(ValueError):
+        ops.plane_matmul_packed(
+            da, dw, jnp.zeros((4,), jnp.int32), backend=backend
+        )
+
+
 # -- flash attention ----------------------------------------------------------
 
 
@@ -103,6 +224,40 @@ def test_flash_attention_unaligned_q(rng):
     got = ops.flash_attention(q, k, v, causal=False, backend="interpret",
                               block_q=16, block_k=16)
     want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal_padded_kv(rng):
+    """Regression: padded KV columns must not leak attention mass when
+    causal=False (the causal path masks them as a side effect)."""
+    b, h, s, d = 1, 2, 50, 8
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, backend="interpret",
+                              block_q=16, block_k=16)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_causal_query_past_kv_len(rng):
+    """Causal rows at q_pos >= kv_len must still ignore padded KV columns
+    (causal masking alone only covers rows left of the padding)."""
+    from repro.kernels.flash_attention import flash_attention as raw_flash
+
+    b, h, d = 1, 2, 8
+    sq, kv_len, sk_pad = 64, 50, 64
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, kv_len, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, kv_len, d)), jnp.float32)
+    pad = [(0, 0), (0, 0), (0, sk_pad - kv_len), (0, 0)]
+    got = raw_flash(q, jnp.pad(k, pad), jnp.pad(v, pad), causal=True,
+                    kv_len=kv_len, block_q=16, block_k=16, interpret=True)
+    # reference over the real columns only: rows >= kv_len see all of them
+    mask = jnp.arange(sq)[:, None] >= jnp.arange(kv_len)[None, :]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * d**-0.5
+    p = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+    want = jnp.einsum("bhqk,bhkd->bhqd", p, v)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 

@@ -99,3 +99,64 @@ def test_quantize_params_stacked_leading_dim():
     q = quantize_params({"mlp": {"up_proj": {"w": w}}}, PrecisionPolicy.uniform(8))
     assert q["mlp"]["up_proj"]["w_q"].shape == (3, 8, 4)
     assert q["mlp"]["up_proj"]["w_scale"].shape == (3, 1, 4)
+
+
+# -- weight-plane cache -------------------------------------------------------
+
+
+@pytest.mark.parametrize("level", ("bitplane", "digit"))
+@pytest.mark.parametrize("variant", ("booth", "sbmwc"))
+def test_plane_cache_matches_uncached(setup, level, variant):
+    params, x = setup
+    pol = PrecisionPolicy.uniform(8, 8, variant=variant, level=level)
+    plain = quantize_params({"l": params}, pol)["l"]
+    cached = quantize_params({"l": params}, pol, plane_cache=True)["l"]
+    assert "w_planes" in cached
+    y0 = linear_apply(plain, x, name="l", policy=pol)
+    y1 = linear_apply(cached, x, name="l", policy=pol)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_plane_cache_stacked_weights_scan_sliceable():
+    """Stacked caches keep the layer dim leading on every leaf, so lax.scan
+    slicing yields per-layer caches."""
+    w = jnp.asarray(np.random.default_rng(0).integers(-50, 50, (3, 32, 8)), jnp.float32)
+    pol = PrecisionPolicy.uniform(8, level="bitplane")
+    q = quantize_params({"up": {"w": w}}, pol, plane_cache=True)["up"]
+    wp = q["w_planes"]
+    leaves = jax.tree_util.tree_leaves(wp)
+    assert all(leaf.shape[0] == 3 for leaf in leaves)
+    one = jax.tree_util.tree_map(lambda leaf: leaf[0], wp)
+    assert one.packed.mag.ndim == 3  # (P, KW, N): a per-layer cache
+
+
+def test_plane_cache_skips_wide_configs(setup):
+    """>8-bit configs accumulate in f32 and bypass the int32 cache."""
+    params, _ = setup
+    pol = PrecisionPolicy.uniform(12, 12)
+    q = quantize_params({"l": params}, pol, plane_cache=True)["l"]
+    assert "w_planes" not in q
+
+
+def test_plane_cache_decomposes_once(setup, monkeypatch):
+    """Serving decomposes/packs each weight matrix exactly once at load;
+    forward passes never re-decompose the (static) weights."""
+    from repro.models import quant as quant_mod
+
+    calls = {"n": 0}
+    real = quant_mod.decompose_linear_weight
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(quant_mod, "decompose_linear_weight", counting)
+    params, x = setup
+    tree = {"a": dict(params), "b": dict(params), "dense_kept": {"w": params["w"]}}
+    pol = PrecisionPolicy.uniform(8, 8, level="bitplane", keep_dense=("dense_kept",))
+    q = quantize_params(tree, pol, plane_cache=True)
+    assert calls["n"] == 2  # one per quantized matrix; the dense one skipped
+    for _ in range(3):  # forwards reuse the cache — no further decompositions
+        linear_apply(q["a"], x, name="a", policy=pol)
+        linear_apply(q["b"], x, name="b", policy=pol)
+    assert calls["n"] == 2
