@@ -2,14 +2,21 @@
 variants and bit-widths (wall time on this host + MXU-pass accounting),
 plus the quantization-error sweep behind the paper's precision dial.
 
-``packed_plane_bench`` additionally sweeps packed vs. unpacked bit-plane
-storage (operand bytes moved + wall time on this host's backend) and the
-decompose-once weight-plane cache, and dumps the machine-readable
-``BENCH_kernel.json`` that tracks the perf trajectory across PRs.
+``packed_plane_bench`` sweeps packed vs. unpacked bit-plane storage
+(operand bytes moved + wall time on this host's backend) and the
+decompose-once weight-plane cache; ``fused_linear_bench`` compares the
+staged serving linear (plane decomposition in HBM + packed kernel + XLA
+dequant) against the fully-fused kernel at prefill and decode shapes.
+Both dump their sections into the machine-readable ``BENCH_kernel.json``
+that tracks the perf trajectory across PRs.
+
+CLI: ``--smoke`` runs a seconds-scale subset (CI uses it to publish the
+JSON as a per-PR artifact); ``--json PATH`` overrides the output file.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import platform
@@ -33,6 +40,26 @@ PM, PK, PN = 128, 256, 128
 # per-call weight decomposition is the largest fraction of the matmul.
 DM, DK, DN = 4, 512, 512
 JSON_PATH = os.environ.get("BENCH_KERNEL_JSON", "BENCH_kernel.json")
+
+
+def _write_bench_section(json_path: str, name: str, payload: dict) -> None:
+    """Merge one bench's payload into the shared BENCH_kernel.json (each
+    bench owns a key under "benches" so sections accumulate across PRs)."""
+    doc = {}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            doc = {}
+    if "benches" not in doc:  # migrate the PR-1 single-bench schema
+        doc = {"benches": ({doc["bench"]: doc} if "bench" in doc else {})}
+    doc["host"] = platform.node()
+    doc["jax_backend"] = jax.default_backend()
+    doc["benches"][name] = payload
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
 
 
 def _time(fn, *args, iters=5, repeats=3, **kw) -> float:
@@ -163,8 +190,6 @@ def packed_plane_bench(json_path: str = JSON_PATH) -> list[tuple[str, float, str
             })
     payload = {
         "bench": "packed_plane_matmul",
-        "host": platform.node(),
-        "jax_backend": jax.default_backend(),
         "kernel_backend": kernel_backend,
         "note": (
             "bytes are exact operand-traffic accounting; interpret-mode wall "
@@ -174,9 +199,131 @@ def packed_plane_bench(json_path: str = JSON_PATH) -> list[tuple[str, float, str
         ),
         "configs": records,
     }
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    _write_bench_section(json_path, "packed_plane_matmul", payload)
+    return rows
+
+
+# -- fused linear: staged vs fully-fused --------------------------------------
+
+
+def _fused_linear_bytes(
+    variant: str, a_bits: int, w_bits: int, m: int, k: int, n: int, block: int
+) -> dict:
+    """HBM bytes per serving linear call, staged vs fused.
+
+    Staged (plane cache, packed kernel, XLA epilogue): the activation
+    planes + packed activation words are materialized in HBM (write+read
+    each), the int32 accumulator does a write + re-read for the dequant,
+    and the bf16 result is written. Fused: int8 activations + packed
+    weight words + scales in, bf16 out — nothing else touches HBM.
+    """
+    pv = 2 if variant == "booth" else 1  # ternary planes carry a sign word
+    # ``block`` is the cache's actual (already clamped) pack block
+    kw_words = -(-k // block) * (block // bp.WORD_BITS)
+    w_packed = 4 * pv * w_bits * kw_words * n
+    a_planes = a_bits * m * k  # int8 plane tensor
+    a_packed = 4 * pv * a_bits * m * -(-k // bp.WORD_BITS)
+    scales = 4 * (m + n) + 4 * n  # a_scale + w_scale + bias (f32 reads)
+    out_bf16 = 2 * m * n
+    staged = (
+        m * k              # read int8 x_q
+        + 2 * a_planes     # write + read decomposed activation planes
+        + 2 * a_packed     # write + read packed activation words
+        + w_packed         # read packed weight planes
+        + 8 * m * n        # int32 accumulator write + re-read
+        + scales
+        + out_bf16
+    )
+    fused = m * k + w_packed + scales + out_bf16
+    return {
+        "staged_hbm_bytes": staged,
+        "fused_hbm_bytes": fused,
+        "reduction_x": round(staged / fused, 2),
+    }
+
+
+def fused_linear_bench(
+    json_path: str = JSON_PATH, smoke: bool = False
+) -> list[tuple[str, float, str]]:
+    """Staged vs fully-fused serving linear at prefill and decode shapes.
+
+    Wall time on this host's kernel backend (pallas on TPU; the interpret
+    emulator elsewhere — relative cost only) plus the exact HBM-byte
+    accounting that is the TPU-relevant win. Configs mirror the serving
+    path: blocked plane cache, per-token/per-channel scales, bias + silu
+    epilogue.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    kernel_backend = "pallas" if on_tpu else "interpret"
+    if smoke:
+        shapes = {"prefill": (64, 128, 128), "decode": (8, 128, 128)}
+        configs = [("booth", 4)]
+    elif on_tpu:
+        shapes = {"prefill": (2048, 512, 512), "decode": (8, 512, 512)}
+        configs = [("booth", 4), ("sbmwc", 8)]
+    else:
+        shapes = {"prefill": (256, 256, 256), "decode": (8, 256, 256)}
+        configs = [("booth", 4), ("sbmwc", 8)]
+    rng = np.random.default_rng(3)
+    rows: list[tuple[str, float, str]] = []
+    records = []
+    for variant, bits in configs:
+        lo, hi = bp.signed_range(bits)
+        for shape_name, (m, k, n) in shapes.items():
+            a = jnp.asarray(rng.integers(lo, hi + 1, (m, k)), jnp.int8)
+            w = jnp.asarray(rng.integers(lo, hi + 1, (k, n)), jnp.int32)
+            wp = bp.make_weight_planes(w, w_bits=bits, variant=variant,
+                                       level="bitplane", store="packed")
+            ep = ops.Epilogue(
+                a_scale=jnp.asarray(rng.uniform(0.01, 0.1, (m, 1)), jnp.float32),
+                w_scale=jnp.asarray(rng.uniform(0.01, 0.1, (1, n)), jnp.float32),
+                bias=jnp.asarray(rng.standard_normal(n), jnp.float32),
+                activation="silu",
+            )
+            kw = dict(
+                a_bits=bits, w_bits=bits, variant=variant, level="bitplane",
+                backend=kernel_backend, w_planes=wp, epilogue=ep, packed=True,
+            )
+            us_staged = _time(ops.bitserial_matmul, a, w, fused=False,
+                              iters=1, repeats=2, **kw)
+            us_fused = _time(ops.bitserial_matmul, a, w, fused=True,
+                             iters=1, repeats=2, **kw)
+            nbytes = _fused_linear_bytes(
+                variant, bits, bits, m, k, n, wp.packed.block
+            )
+            name = f"{shape_name}_{variant}_b{bits}"
+            rows.append((
+                f"kernel/fused_{name}", round(us_fused, 1),
+                f"bytes_x{nbytes['reduction_x']}_vs_staged_{round(us_staged, 1)}us",
+            ))
+            records.append({
+                "name": name,
+                "shape": [m, k, n],
+                "variant": variant,
+                "a_bits": bits,
+                "w_bits": bits,
+                "pack_block": wp.packed.block,
+                "mxu_passes": bs.plane_pass_count(bits, bits, "bitplane", "fully_serial"),
+                "bytes": nbytes,
+                "wall_us": {
+                    f"{kernel_backend}_staged": round(us_staged, 1),
+                    f"{kernel_backend}_fused": round(us_fused, 1),
+                },
+            })
+    payload = {
+        "bench": "fused_linear",
+        "kernel_backend": kernel_backend,
+        "smoke": smoke,
+        "note": (
+            "staged = plane decomposition + packed kernel + XLA dequant "
+            "epilogue (int32 accumulator round-trips HBM); fused = one "
+            "launch, in-kernel activation bit-slicing + epilogue, bf16 out. "
+            "bytes are exact HBM-traffic accounting; interpret wall times "
+            "emulate the kernels on CPU and do not see HBM bandwidth"
+        ),
+        "configs": records,
+    }
+    _write_bench_section(json_path, "fused_linear", payload)
     return rows
 
 
@@ -190,14 +337,25 @@ def precision_sweep() -> list[tuple[str, float, str]]:
     return out
 
 
-def run(json_path: str | None = None) -> list[tuple[str, float, str]]:
+def run(json_path: str | None = None, smoke: bool = False) -> list[tuple[str, float, str]]:
+    path = json_path or JSON_PATH
+    if smoke:
+        # CI-scale subset: the fused-vs-staged comparison is the per-PR
+        # regression signal; everything else runs in the full sweep.
+        return fused_linear_bench(path, smoke=True)
     return (
         matmul_bench()
-        + packed_plane_bench(json_path or JSON_PATH)
+        + packed_plane_bench(path)
+        + fused_linear_bench(path)
         + precision_sweep()
     )
 
 
 if __name__ == "__main__":
-    for name, val, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset (CI artifact mode)")
+    ap.add_argument("--json", default=None, help="output JSON path")
+    args = ap.parse_args()
+    for name, val, derived in run(args.json, smoke=args.smoke):
         print(f"{name},{val},{derived}")

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 Variant = Literal["unsigned", "sbmwc", "booth"]
 
 WORD_BITS = 32  # plane values per packed int32 word
+DEFAULT_BLOCK = 512  # K values per pack block in the blocked (fused-kernel) layout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,19 +73,33 @@ def signed_range(bits: int) -> tuple[int, int]:
     return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
 
 
+def plane_weights(bits: int, variant: Variant) -> tuple[int, ...]:
+    """Plane weights of :func:`to_bitplanes` without computing the planes.
+
+    Lets the fused kernel path build pair weights from ``(a_bits, variant)``
+    alone — the activation planes themselves are sliced on-chip.
+    """
+    _check_bits(bits)
+    if variant in ("unsigned", "booth"):
+        return tuple(1 << i for i in range(bits))
+    if variant == "sbmwc":
+        return tuple(1 << i for i in range(bits - 1)) + (-(1 << (bits - 1)),)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
 def to_bitplanes(x: jax.Array, bits: int, variant: Variant = "sbmwc") -> PlaneDecomposition:
     """Decompose integer tensor ``x`` into ``bits`` binary/ternary planes.
 
-    ``x`` must be representable in ``bits``-bit two's complement (for
+    ``x`` (any integer dtype — int8 quantized activations pass straight
+    through) must be representable in ``bits``-bit two's complement (for
     ``sbmwc``/``booth``) or unsigned ``bits``-bit (for ``unsigned``).
     """
-    _check_bits(bits)
+    weights = plane_weights(bits, variant)
     x = x.astype(jnp.int32)
 
     if variant == "unsigned":
         shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * x.ndim)
         planes = ((x[None] >> shifts) & 1).astype(jnp.int8)
-        weights = tuple(1 << i for i in range(bits))
         return PlaneDecomposition(planes, weights)
 
     if variant == "sbmwc":
@@ -93,7 +108,6 @@ def to_bitplanes(x: jax.Array, bits: int, variant: Variant = "sbmwc") -> PlaneDe
         u = x & ((1 << bits) - 1) if bits < 32 else x.view(jnp.uint32).astype(jnp.int32)
         shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * x.ndim)
         planes = ((u[None] >> shifts) & 1).astype(jnp.int8)
-        weights = tuple(1 << i for i in range(bits - 1)) + (-(1 << (bits - 1)),)
         return PlaneDecomposition(planes, weights)
 
     if variant == "booth":
@@ -103,7 +117,6 @@ def to_bitplanes(x: jax.Array, bits: int, variant: Variant = "sbmwc") -> PlaneDe
         cur = ((u[None] >> shifts) & 1).astype(jnp.int8)
         prev = jnp.concatenate([jnp.zeros_like(cur[:1]), cur[:-1]], axis=0)
         planes = (prev - cur).astype(jnp.int8)  # {-1, 0, +1}
-        weights = tuple(1 << i for i in range(bits))
         return PlaneDecomposition(planes, weights)
 
     raise ValueError(f"unknown variant {variant!r}")
@@ -201,6 +214,14 @@ class PackedPlanes:
     ``axis``:    which axis of the *unpacked* plane array was packed
                  (normalized non-negative; never 0, the planes axis).
     ``weights``: plane weights carried through from the decomposition.
+    ``block``:   ``None`` for the global planar layout (word j bit t holds
+                 k = t*W + j over the whole padded extent); an int for the
+                 *blocked* layout, where K is split into chunks of ``block``
+                 values and each chunk is planar-packed independently. A
+                 word slice covering whole blocks then unpacks to K values
+                 in natural order — the layout the fused linear kernel
+                 needs, since its activation operand is raw (unpermuted)
+                 int8. Must be a multiple of ``WORD_BITS``.
     """
 
     mag: jax.Array
@@ -208,6 +229,7 @@ class PackedPlanes:
     k: int
     axis: int
     weights: tuple[int, ...]
+    block: Optional[int] = None
 
     @property
     def n_planes(self) -> int:
@@ -229,13 +251,15 @@ class PackedPlanes:
 
 
 def _packed_flatten(p: PackedPlanes):
-    return (p.mag, p.sign), (p.k, p.axis, p.weights)
+    return (p.mag, p.sign), (p.k, p.axis, p.weights, p.block)
 
 
 def _packed_unflatten(aux, children):
     mag, sign = children
-    k, axis, weights = aux
-    return PackedPlanes(mag=mag, sign=sign, k=k, axis=axis, weights=weights)
+    k, axis, weights, block = aux
+    return PackedPlanes(
+        mag=mag, sign=sign, k=k, axis=axis, weights=weights, block=block
+    )
 
 
 jax.tree_util.register_pytree_node(PackedPlanes, _packed_flatten, _packed_unflatten)
@@ -279,12 +303,42 @@ def _from_words(words: jax.Array, axis: int, k: int) -> jax.Array:
     return jax.lax.slice_in_dim(bits, 0, k, axis=axis)
 
 
+def _to_words_blocked(bits01: jax.Array, axis: int, block: int) -> jax.Array:
+    """Blocked planar pack: split the extent into ``block``-value chunks and
+    planar-pack each chunk independently (word layout local to the chunk)."""
+    bkw = block // WORD_BITS
+    k = bits01.shape[axis]
+    nkb = -(-k // block)
+    pad = nkb * block - k
+    x = bits01
+    if pad:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, pad)
+        x = jnp.pad(x, pads)
+    sh = x.shape
+    x = x.reshape(sh[:axis] + (nkb, block) + sh[axis + 1 :])
+    w = _to_words(x, axis + 1, bkw)  # (..., nkb, bkw, ...)
+    return w.reshape(sh[:axis] + (nkb * bkw,) + sh[axis + 1 :])
+
+
+def _from_words_blocked(words: jax.Array, axis: int, k: int, block: int) -> jax.Array:
+    """Inverse of :func:`_to_words_blocked`."""
+    bkw = block // WORD_BITS
+    sh = words.shape
+    nkb = sh[axis] // bkw
+    w = words.reshape(sh[:axis] + (nkb, bkw) + sh[axis + 1 :])
+    vals = _from_words(w, axis + 1, block)  # (..., nkb, block, ...)
+    vals = vals.reshape(sh[:axis] + (nkb * block,) + sh[axis + 1 :])
+    return jax.lax.slice_in_dim(vals, 0, k, axis=axis)
+
+
 def pack_planes(
     planes: jax.Array,
     *,
     axis: int = -1,
     ternary: bool = False,
     weights: tuple[int, ...] = (),
+    block: Optional[int] = None,
 ) -> PackedPlanes:
     """Bit-pack plane values along ``axis`` into int32 words.
 
@@ -294,36 +348,73 @@ def pack_planes(
     from traced values. Digit planes (radix > 2) are not packable.
     ``axis`` may not be 0 (the planes axis). Ragged extents pad with zero
     plane values, which are exactly inert in the plane matmul.
+
+    ``block=None`` gives the global planar layout; an int gives the blocked
+    layout (see :class:`PackedPlanes`), clamped so a small K never pads up
+    to a full oversized block.
     """
     axis = axis % planes.ndim
     if axis == 0:
         raise ValueError("cannot pack along the planes axis (axis 0)")
     k = planes.shape[axis]
-    n_words = -(-k // WORD_BITS)
     v = planes.astype(jnp.int32)
-    if ternary:
-        mag = _to_words(jnp.abs(v), axis, n_words)
-        sign = _to_words((v < 0).astype(jnp.int32), axis, n_words)
+    if block is not None:
+        if block % WORD_BITS:
+            raise ValueError(f"block must be a multiple of {WORD_BITS}, got {block}")
+        # The clamp for small K rounds to the TPU lane width (128): the
+        # fused kernel uses the pack block as its K tile, and a last-dim
+        # tile that is not a lane multiple would not lower on Mosaic.
+        # (An explicitly sub-lane caller-chosen block is left alone.)
+        lane = 4 * WORD_BITS
+        if block > lane:
+            block = min(block, -(-k // lane) * lane)
+
+        def towords(x):
+            return _to_words_blocked(x, axis, block)
+
     else:
-        mag = _to_words(v, axis, n_words)
+        n_words = -(-k // WORD_BITS)
+
+        def towords(x):
+            return _to_words(x, axis, n_words)
+
+    if ternary:
+        mag = towords(jnp.abs(v))
+        sign = towords((v < 0).astype(jnp.int32))
+    else:
+        mag = towords(v)
         sign = None
-    return PackedPlanes(mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights))
+    return PackedPlanes(
+        mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights), block=block
+    )
 
 
 def unpack_planes(packed: PackedPlanes, dtype=jnp.int8) -> jax.Array:
     """Exact inverse of :func:`pack_planes` (round-trip guarantee)."""
-    vals = _from_words(packed.mag, packed.axis, packed.k)
+    if packed.block is not None:
+        def fromwords(w):
+            return _from_words_blocked(w, packed.axis, packed.k, packed.block)
+    else:
+        def fromwords(w):
+            return _from_words(w, packed.axis, packed.k)
+
+    vals = fromwords(packed.mag)
     if packed.sign is not None:
-        vals = vals - 2 * _from_words(packed.sign, packed.axis, packed.k)
+        vals = vals - 2 * fromwords(packed.sign)
     return vals.astype(dtype)
 
 
 def pack_decomposition(
-    dec: PlaneDecomposition, *, axis: int = -1, variant: Variant = "sbmwc"
+    dec: PlaneDecomposition,
+    *,
+    axis: int = -1,
+    variant: Variant = "sbmwc",
+    block: Optional[int] = None,
 ) -> PackedPlanes:
     """Pack a bit-plane :class:`PlaneDecomposition` (carries its weights)."""
     return pack_planes(
-        dec.planes, axis=axis, ternary=variant == "booth", weights=dec.weights
+        dec.planes, axis=axis, ternary=variant == "booth", weights=dec.weights,
+        block=block,
     )
 
 
@@ -379,6 +470,7 @@ def make_weight_planes(
     level: str = "digit",
     radix_bits: int = 8,
     store: str = "auto",
+    block: Optional[int] = DEFAULT_BLOCK,
 ) -> WeightPlanes:
     """Decompose (and, at bit-plane level, pack) a quantized weight matrix.
 
@@ -390,6 +482,12 @@ def make_weight_planes(
     (the HBM-lean serving format); ``"both"`` additionally keeps the raw
     int8 planes so the jnp scan path pays zero per-call weight-side work;
     ``"auto"`` = packed-only on TPU, both elsewhere.
+
+    ``block``: pack block size for the bit-plane cache. The default stores
+    the *blocked* layout the fused linear kernel consumes directly (raw
+    int8 activations, no K permutation); ``None`` stores the global planar
+    layout of the staged packed kernel. Both are valid operands for
+    ``plane_matmul_packed`` — the activation side is packed to match.
     """
     if w_q.ndim != 2:
         raise ValueError(f"make_weight_planes expects (K, N), got {w_q.shape}")
@@ -399,7 +497,7 @@ def make_weight_planes(
         store = "packed" if jax.default_backend() == "tpu" else "both"
     if level == "bitplane":
         dec = to_bitplanes(w_q, w_bits, variant)
-        packed = pack_decomposition(dec, axis=-2, variant=variant)
+        packed = pack_decomposition(dec, axis=-2, variant=variant, block=block)
         return WeightPlanes(
             packed=packed,
             planes=dec.planes if store == "both" else None,

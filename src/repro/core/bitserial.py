@@ -141,8 +141,10 @@ def bitserial_matmul(
     """Exact integer matmul of quantized operands via plane decomposition.
 
     ``a``: integer array ``(..., K)`` holding ``a_bits``-bit two's-complement
-    values; ``w``: ``(K, N)`` with ``w_bits``-bit values. Returns
-    ``(..., N)`` in ``accum_dtype``.
+    values; ``w``: ``(K, N)`` with ``w_bits``-bit values. Both are accepted
+    at their quantized storage width (int8/int16 — the decompositions widen
+    on-chip), so callers never expand operands to int32 in HBM just to call
+    this. Returns ``(..., N)`` in ``accum_dtype``.
     """
     if a.shape[-1] != w.shape[0]:
         raise ValueError(f"contraction mismatch {a.shape} @ {w.shape}")

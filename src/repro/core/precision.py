@@ -47,6 +47,12 @@ class PrecisionPolicy:
     wins. Layer names are hierarchical, e.g. ``"layers/attn/q_proj"``,
     ``"layers/moe/expert"``, ``"lm_head"``.
     ``variant``/``level``/``mode``: how matmuls lower (see core.bitserial).
+    ``fuse_epilogue``: ``None`` = auto (the fully-fused linear kernel —
+    in-kernel activation bit-slicing + dequant/bias/activation epilogue —
+    on the TPU bitplane path); ``False`` forces the staged kernels + XLA
+    epilogue (bit-identical, for A/B comparison); ``True`` raises for
+    configs the fused kernel cannot serve (on the kernel-less jnp backend
+    it computes the bit-identical staged parity result instead).
     """
 
     default: LayerPrecision = LayerPrecision()
@@ -54,6 +60,7 @@ class PrecisionPolicy:
     variant: str = "booth"
     level: str = "digit"
     mode: str = "fully_serial"
+    fuse_epilogue: Optional[bool] = None
 
     @staticmethod
     def off() -> "PrecisionPolicy":
@@ -69,6 +76,7 @@ class PrecisionPolicy:
         level: str = "digit",
         mode: str = "fully_serial",
         keep_dense: Tuple[str, ...] = (),
+        fuse_epilogue: Optional[bool] = None,
     ) -> "PrecisionPolicy":
         """Same precision everywhere except ``keep_dense`` layer patterns."""
         a_bits = w_bits if a_bits is None else a_bits
@@ -79,6 +87,7 @@ class PrecisionPolicy:
             variant=variant,
             level=level,
             mode=mode,
+            fuse_epilogue=fuse_epilogue,
         )
 
     @staticmethod

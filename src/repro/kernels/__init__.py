@@ -5,6 +5,11 @@
 * ``plane_mm_packed`` — the same contraction over bit-packed plane words,
                         unpacked on-chip (8× less HBM traffic per operand
                         at 8×8-bit SBMwC);
+* ``plane_mm_fused``  — the fully-fused bit-serial linear: raw int8
+                        activations bit-sliced on-chip, packed weight
+                        planes, int32 VMEM accumulation and the
+                        dequant/bias/activation epilogue in one launch
+                        (plane tensors and accumulators never touch HBM);
 * ``flash_attention`` — blockwise online-softmax attention for the
                         long-sequence shape cells.
 
@@ -14,6 +19,14 @@
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.plane_mm import plane_matmul
+from repro.kernels.plane_mm_fused import fused_plane_linear
 from repro.kernels.plane_mm_packed import plane_matmul_packed
 
-__all__ = ["ops", "ref", "flash_attention", "plane_matmul", "plane_matmul_packed"]
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "plane_matmul",
+    "plane_matmul_packed",
+    "fused_plane_linear",
+]

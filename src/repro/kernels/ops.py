@@ -6,11 +6,16 @@ Backend selection:
                       interpreter on CPU (used by tests);
   * ``"jnp"``       — the pure-jnp path from repro.core / ref.py;
   * ``"auto"``      — pallas on TPU, jnp elsewhere.
+
+Operands are accepted at their quantized storage width (int8/int16): the
+decompose helpers widen internally, so callers never round-trip int32
+operand tensors through HBM just to satisfy the kernel signature.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +25,8 @@ from repro.core import bitserial as bs
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.plane_mm import plane_matmul as _plane_mm_pallas
+from repro.kernels.plane_mm_fused import ACTIVATIONS
+from repro.kernels.plane_mm_fused import fused_plane_linear as _fused_pallas
 from repro.kernels.plane_mm_packed import plane_matmul_packed as _plane_mm_packed
 from repro.kernels.plane_mm_packed import validate_packed_operands
 
@@ -41,6 +48,26 @@ def _resolve_packed(packed, backend: str, level: str) -> bool:
     return bool(packed)
 
 
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
+
+
+def auto_tiles(m: int, k: int, bm: Optional[int], bk: Optional[int]) -> tuple[int, int]:
+    """Decode-shape block heuristic.
+
+    The fixed ``bm=128`` tile wastes 16x+ of every MXU pass on an M=1..8
+    decode step (127/128 rows are padding). ``bm=None`` auto-selects the
+    smallest legal sublane multiple covering M (power of two, >= 8, capped
+    at 128); ``bk=None`` takes the 512 default capped to K rounded up to
+    the 128 lane width (also a whole number of packed words).
+    """
+    if bm is None:
+        bm = min(128, max(8, _pow2_ceil(m)))
+    if bk is None:
+        bk = min(512, max(128, -(-k // 128) * 128))
+    return bm, bk
+
+
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
     pads = []
     for dim, mult in zip(x.shape, multiples):
@@ -51,15 +78,52 @@ def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
     return x
 
 
+# ---------------------------------------------------------------------------
+# Fused epilogue
+# ---------------------------------------------------------------------------
+
+
+class Epilogue(NamedTuple):
+    """Dequant/bias/activation epilogue of a quantized linear layer.
+
+    ``a_scale``: per-token activation scales, broadcastable against the
+    accumulator's leading dims (``lead + (1,)``); ``w_scale``: per-channel
+    weight scales, broadcastable against the output features. On the fused
+    kernel path this runs in-kernel and the int32 accumulator never
+    reaches HBM; every other path applies the identical math in XLA via
+    :func:`apply_epilogue`.
+    """
+
+    a_scale: jax.Array
+    w_scale: jax.Array
+    bias: Optional[jax.Array] = None
+    activation: str = "none"
+    out_dtype: Any = jnp.bfloat16
+
+
+def apply_epilogue(acc: jax.Array, ep: Epilogue) -> jax.Array:
+    """XLA reference of the in-kernel epilogue (same op order and dtypes)."""
+    out = acc.astype(jnp.float32) * ep.a_scale * ep.w_scale
+    if ep.bias is not None:
+        out = out + ep.bias.astype(jnp.float32)
+    out = ACTIVATIONS[ep.activation](out)
+    return out.astype(ep.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel wrappers (padding + backend dispatch)
+# ---------------------------------------------------------------------------
+
+
 def plane_matmul(
     a_planes: jax.Array,
     w_planes: jax.Array,
     pair_weights: jax.Array,
     *,
     backend: str = "auto",
-    bm: int = 128,
+    bm: Optional[int] = None,
     bn: int = 128,
-    bk: int = 512,
+    bk: Optional[int] = None,
 ) -> jax.Array:
     """Padding + dispatch wrapper for the plane-pair matmul kernel."""
     backend = resolve_backend(backend)
@@ -67,6 +131,7 @@ def plane_matmul(
         return ref.plane_matmul_ref(a_planes, w_planes, pair_weights)
     _, m, k = a_planes.shape
     _, _, n = w_planes.shape
+    bm, bk = auto_tiles(m, k, bm, bk)
     ap = _pad_to(a_planes, (0, bm, bk))
     wp = _pad_to(w_planes, (0, bk, bn))
     out = _plane_mm_pallas(
@@ -81,9 +146,9 @@ def plane_matmul_packed(
     pair_weights: jax.Array,
     *,
     backend: str = "auto",
-    bm: int = 128,
+    bm: Optional[int] = None,
     bn: int = 128,
-    bk: int = 512,
+    bk: Optional[int] = None,
 ) -> jax.Array:
     """Dispatch wrapper for the packed plane matmul kernel.
 
@@ -96,9 +161,57 @@ def plane_matmul_packed(
         return ref.plane_matmul_ref(
             bp.unpack_planes(packed_a), bp.unpack_planes(packed_w), pair_weights
         )
+    m = packed_a.mag.shape[1]
+    # auto bk is a 128 multiple (word-aligned); an explicit bk passes
+    # through untouched and the kernel rejects non-word multiples.
+    bm, bk = auto_tiles(m, packed_a.k, bm, bk)
     return _plane_mm_packed(
         packed_a, packed_w, pair_weights,
         bm=bm, bn=bn, bk=bk, interpret=backend == "interpret",
+    )
+
+
+def fused_linear(
+    x_q: jax.Array,
+    packed_w: bp.PackedPlanes,
+    epilogue: Optional[Epilogue],
+    *,
+    a_bits: int,
+    variant: str,
+    backend: str = "auto",
+    bm: Optional[int] = None,
+    bn: int = 128,
+) -> jax.Array:
+    """Fully-fused bit-serial linear over 2-D quantized activations.
+
+    ``x_q``: (M, K) int8; ``packed_w``: blocked-layout packed weight
+    planes (the pack block IS the kernel's K tile — there is no separate
+    ``bk`` knob here); ``epilogue``: the dequant epilogue (``None``
+    returns the raw int32 accumulator — the pre-epilogue parity mode).
+    The jnp backend is the staged parity oracle: decompose +
+    :func:`ref.plane_matmul_ref` + :func:`apply_epilogue`, bit-identical
+    pre-epilogue.
+    """
+    backend = resolve_backend(backend)
+    pair_w = bs._wrap_weights(
+        [x * y for x in bp.plane_weights(a_bits, variant) for y in packed_w.weights],
+        jnp.int32,
+    )
+    if backend == "jnp":
+        dec_a = bp.to_bitplanes(x_q, a_bits, variant)
+        acc = ref.plane_matmul_ref(dec_a.planes, bp.unpack_planes(packed_w), pair_w)
+        return acc if epilogue is None else apply_epilogue(acc, epilogue)
+    m = x_q.shape[0]
+    bm, _ = auto_tiles(m, x_q.shape[1], bm, None)
+    kw = dict(a_bits=a_bits, variant=variant, bm=bm, bn=bn,
+              interpret=backend == "interpret")
+    if epilogue is None:
+        return _fused_pallas(x_q, packed_w, pair_w, **kw)
+    return _fused_pallas(
+        x_q, packed_w, pair_w,
+        a_scale=epilogue.a_scale, w_scale=epilogue.w_scale, bias=epilogue.bias,
+        activation=epilogue.activation, out_dtype=jnp.dtype(epilogue.out_dtype),
+        **kw,
     )
 
 
@@ -152,9 +265,11 @@ def _matmul_cached(
     if level == "bitplane":
         dec_a = bp.to_bitplanes(a2, a_bits, variant)
         pw = _pair_weights(dec_a.weights, w_planes.weights)
-        if use_packed:
+        if use_packed and w_planes.packed is not None:
+            # the activation side must share the cache's word layout
             pa = bp.pack_planes(
-                dec_a.planes, axis=-1, ternary=variant == "booth"
+                dec_a.planes, axis=-1, ternary=variant == "booth",
+                block=w_planes.packed.block,
             )
             return plane_matmul_packed(
                 pa, w_planes.packed, pw, backend=backend, **tile_kw
@@ -193,6 +308,8 @@ def bitserial_matmul(
     accum_dtype=jnp.int32,
     packed: bool | None = None,
     w_planes: bp.WeightPlanes | None = None,
+    fused: bool | None = None,
+    epilogue: Optional[Epilogue] = None,
     **tile_kw,
 ) -> jax.Array:
     """Kernel-dispatching version of :func:`repro.core.bitserial_matmul`.
@@ -200,7 +317,9 @@ def bitserial_matmul(
     The Pallas path covers the int8-plane configurations (bitplane level
     for both variants; digit level for Booth — SBMwC's unsigned digits
     exceed int8, the software echo of its two-adder hardware cost) and
-    falls back to the jnp path otherwise.
+    falls back to the jnp path otherwise. ``a``/``w`` are consumed at
+    their quantized storage width (int8 for <= 8 bits) — no int32 operand
+    round trip.
 
     ``packed``: bit-pack the plane operands and unpack in-kernel (32 plane
     values per int32 word — up to 8× less HBM traffic per operand at
@@ -213,6 +332,21 @@ def bitserial_matmul(
     (:func:`repro.core.bitplanes.make_weight_planes`); used when its
     level/variant/bits match the requested config, so the static weight is
     never re-decomposed per call.
+
+    ``epilogue``: dequant/bias/activation epilogue. When given, the return
+    value is ``epilogue.out_dtype`` instead of the raw accumulator — and
+    on the fused path the whole linear (in-kernel activation bit-slicing,
+    plane-pair passes, epilogue) runs in **one Pallas launch**: activation
+    plane tensors and the int32 accumulator never touch HBM.
+
+    ``fused``: ``None`` = auto (fused kernel on the pallas/interpret
+    bitplane path whenever an epilogue is given; a cache stored in the
+    global planar layout keeps the staged decompose-once path rather than
+    re-packing the weight per call); ``True`` raises for *configs* the
+    fused kernel cannot serve — on the jnp backend it computes the
+    bit-identical staged parity fallback instead (there is no jnp
+    "kernel" to fuse); ``False`` keeps the staged kernels and applies the
+    epilogue in XLA (bit-identical result).
     """
     backend = resolve_backend(backend)
     serial = mode == "fully_serial"
@@ -228,6 +362,24 @@ def bitserial_matmul(
             f"accum_dtype={jnp.dtype(accum_dtype).name}"
         )
 
+    fused_ok = (
+        epilogue is not None
+        and serial
+        and int32_acc
+        and level == "bitplane"
+        and variant in ("sbmwc", "booth")
+        and a_bits <= 8
+        and w_bits <= 8
+    )
+    if fused and not fused_ok:
+        raise ValueError(
+            "fused=True requires an epilogue, level='bitplane', "
+            "mode='fully_serial', int32 accumulation and <=8-bit operands; "
+            f"got epilogue={'set' if epilogue is not None else None}, "
+            f"level={level!r}, mode={mode!r}, a_bits={a_bits}, w_bits={w_bits}"
+        )
+    use_fused = fused_ok and backend != "jnp" and (fused is None or fused)
+
     cache_ok = (
         w_planes is not None
         and serial
@@ -236,22 +388,58 @@ def bitserial_matmul(
         and w_planes.variant == variant
         and w_planes.w_bits == w_bits
     )
+
+    lead = a.shape[:-1]
+    a2 = a.reshape((-1, a.shape[-1]))
+
+    def finish(out2):
+        out = out2.reshape(lead + (out2.shape[-1],))
+        return out if epilogue is None else apply_epilogue(out, epilogue)
+
+    fused_cache_ok = (
+        cache_ok
+        and w_planes.packed is not None
+        and w_planes.packed.block is not None
+    )
+    if use_fused and cache_ok and not fused_cache_ok and fused is None:
+        # A cache in the global planar layout can't feed the fused kernel
+        # (its K permutation breaks against raw activations). Auto mode
+        # keeps the decompose-once staged path instead of silently
+        # re-packing the static weight on every call; explicit fused=True
+        # accepts the per-call repack below.
+        use_fused = False
+
+    if use_fused:
+        if fused_cache_ok:
+            packed_w = w_planes.packed
+        else:
+            dec_w = bp.to_bitplanes(w, w_bits, variant)
+            _, bk = auto_tiles(a2.shape[0], a2.shape[-1], None, tile_kw.get("bk"))
+            packed_w = bp.pack_decomposition(
+                dec_w, axis=-2, variant=variant, block=bk
+            )
+        n = packed_w.mag.shape[-1]
+        ep2 = epilogue._replace(a_scale=epilogue.a_scale.reshape(-1, 1))
+        out2 = fused_linear(
+            a2, packed_w, ep2, a_bits=a_bits, variant=variant, backend=backend,
+            bm=tile_kw.get("bm"), bn=tile_kw.get("bn", 128),
+        )
+        return out2.reshape(lead + (n,))
+
     if cache_ok:
-        lead = a.shape[:-1]
-        a2 = a.reshape((-1, a.shape[-1]))
-        out = _matmul_cached(
+        out2 = _matmul_cached(
             a2, w_planes, a_bits=a_bits, variant=variant, level=level,
             backend=backend, use_packed=use_packed, tile_kw=tile_kw,
         )
-        return out.reshape(lead + (w_planes.n_out,))
+        return finish(out2)
 
     if (backend == "jnp" and not use_packed) or not kernel_ok or not serial:
-        return bs.bitserial_matmul(
+        acc = bs.bitserial_matmul(
             a, w, a_bits=a_bits, w_bits=w_bits, variant=variant, level=level,
             mode=mode, accum_dtype=accum_dtype,
         )
-    lead = a.shape[:-1]
-    a2 = a.reshape((-1, a.shape[-1]))
+        return acc if epilogue is None else apply_epilogue(acc, epilogue)
+
     if level == "bitplane":
         dec_a = bp.to_bitplanes(a2, a_bits, variant)
         dec_w = bp.to_bitplanes(w, w_bits, variant)
@@ -263,16 +451,16 @@ def bitserial_matmul(
         ternary = variant == "booth"
         pa = bp.pack_planes(dec_a.planes, axis=-1, ternary=ternary)
         pwk = bp.pack_planes(dec_w.planes, axis=-2, ternary=ternary)
-        out = plane_matmul_packed(pa, pwk, pw, backend=backend, **tile_kw)
+        out2 = plane_matmul_packed(pa, pwk, pw, backend=backend, **tile_kw)
     else:
-        out = plane_matmul(
+        out2 = plane_matmul(
             dec_a.planes.astype(jnp.int8),
             dec_w.planes.astype(jnp.int8),
             pw,
             backend=backend,
             **tile_kw,
         )
-    return out.reshape(lead + (w.shape[1],))
+    return finish(out2)
 
 
 def flash_attention(

@@ -97,19 +97,26 @@ def validate_packed_operands(
             f"operands packed against different K: "
             f"{packed_a.k}/{packed_a.n_words} vs {packed_w.k}/{packed_w.n_words}"
         )
+    if packed_a.block != packed_w.block:
+        # Any *shared* word layout contracts matching K subsets per word
+        # slice; mixing global-planar with blocked operands would not.
+        raise ValueError(
+            f"operands packed with different layouts: block="
+            f"{packed_a.block} vs {packed_w.block}"
+        )
     n_a = packed_a.mag.shape[0]
     n_w = packed_w.mag.shape[0]
     if pair_weights.shape != (n_a * n_w,):
         raise ValueError("pair_weights must have shape (P_a * P_w,)")
 
 
-def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+def _pad_dim(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     rem = (-x.shape[axis]) % mult
     if not rem:
         return x
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, rem)
-    return jnp.pad(x, pads)
+    return jnp.pad(x, pads, constant_values=value)
 
 
 @functools.partial(

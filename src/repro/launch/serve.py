@@ -75,13 +75,23 @@ def main():
         action="store_true",
         help="skip the load-time weight-plane decomposition cache",
     )
+    ap.add_argument(
+        "--no-fused",
+        action="store_true",
+        help="stage the linear (separate plane kernel + XLA dequant) instead "
+        "of the fully-fused kernel; prefill and decode default to fused "
+        "wherever the backend supports it",
+    )
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if not cfg.is_decoder:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
     policy = (
-        PrecisionPolicy.uniform(args.bits, args.bits, variant=args.variant, level=args.level)
+        PrecisionPolicy.uniform(
+            args.bits, args.bits, variant=args.variant, level=args.level,
+            fuse_epilogue=False if args.no_fused else None,
+        )
         if args.bits
         else PrecisionPolicy.off()
     )

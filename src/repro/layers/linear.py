@@ -13,6 +13,13 @@ Three parameter/execution regimes, selected by the
   per-token and the product runs through
   :func:`repro.kernels.ops.bitserial_matmul` at the policy's
   level/variant/mode (bitplane = paper-faithful, digit = TPU-native).
+
+The dequant (``acc * a_scale * w_scale``), optional ``bias`` and optional
+``activation`` ride into the matmul as an :class:`repro.kernels.ops.Epilogue`
+— on the fused TPU path they execute inside the kernel and the int32
+accumulator never reaches HBM; elsewhere the identical math runs in XLA.
+Operands stay at their quantized storage width (int8 for <= 8 bits): no
+int32 round trip between the quantizer and the kernel.
 """
 
 from __future__ import annotations
@@ -46,6 +53,19 @@ def quantize_linear(params: dict, w_bits: int) -> dict:
     return {"w_q": q.values, "w_scale": q.scale}
 
 
+def _finish_dense(y: jax.Array, bias, activation: str, out_dtype) -> jax.Array:
+    """Epilogue for the dense/QAT paths — same order and dtypes as the
+    fused kernel / :func:`ops.apply_epilogue`: bias added in f32, then the
+    activation, then one cast to the output dtype."""
+    if bias is None and activation == "none":
+        return y
+    out = y.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = ops.ACTIVATIONS[activation](out)
+    return out.astype(out_dtype)
+
+
 def linear_apply(
     params: dict,
     x: jax.Array,
@@ -54,17 +74,26 @@ def linear_apply(
     policy: PrecisionPolicy,
     training: bool = False,
     backend: str = "auto",
+    bias: jax.Array | None = None,
+    activation: str = "none",
 ) -> jax.Array:
-    """Apply a (possibly bit-serial) linear layer. x: (..., d_in)."""
+    """Apply a (possibly bit-serial) linear layer. x: (..., d_in).
+
+    ``bias``/``activation`` are part of the layer's epilogue and fuse into
+    the bit-serial kernel on the quantized inference paths (callers should
+    pass them here rather than applying them outside — that is what keeps
+    the int32 accumulator off HBM).
+    """
     prec = policy.lookup(name)
+    fused = policy.fuse_epilogue
 
     if "w_q" in params:  # stored-quantized weights (serving path)
         if not prec.active:
             raise ValueError(f"layer {name}: quantized params but inactive policy")
         xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
-        acc = ops.bitserial_matmul(
-            xq.values.astype(jnp.int32),
-            params["w_q"].astype(jnp.int32),
+        return ops.bitserial_matmul(
+            xq.values,
+            params["w_q"],
             a_bits=prec.a_bits,
             w_bits=prec.w_bits,
             variant=policy.variant,
@@ -74,13 +103,19 @@ def linear_apply(
             accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
             # decompose-once serving cache (None -> decompose per call)
             w_planes=params.get("w_planes"),
+            fused=fused,
+            epilogue=ops.Epilogue(
+                a_scale=xq.scale,
+                w_scale=params["w_scale"],
+                bias=bias,
+                activation=activation,
+                out_dtype=x.dtype,
+            ),
         )
-        out = acc.astype(jnp.float32) * xq.scale * params["w_scale"]
-        return out.astype(x.dtype)
 
     w = params["w"]
     if not prec.active:
-        return x @ w.astype(x.dtype)
+        return _finish_dense(x @ w.astype(x.dtype), bias, activation, x.dtype)
 
     if training:
         # QAT: fake-quant both operands with straight-through gradients.
@@ -88,14 +123,15 @@ def linear_apply(
         # force f32 FSDP all-gathers and f32 MXU matmuls everywhere.
         wq = fake_quant(w.astype(jnp.float32), prec.w_bits, axis=0).astype(w.dtype)
         xq = fake_quant(x.astype(jnp.float32), prec.a_bits, axis=-1).astype(x.dtype)
-        return (xq @ wq.astype(x.dtype)).astype(x.dtype)
+        y = (xq @ wq.astype(x.dtype)).astype(x.dtype)
+        return _finish_dense(y, bias, activation, x.dtype)
 
     # On-the-fly quantized inference from dense weights.
     wq = quantize(w.astype(jnp.float32), prec.w_bits, axis=0)
     xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
-    acc = ops.bitserial_matmul(
-        xq.values.astype(jnp.int32),
-        wq.values.astype(jnp.int32),
+    return ops.bitserial_matmul(
+        xq.values,
+        wq.values,
         a_bits=prec.a_bits,
         w_bits=prec.w_bits,
         variant=policy.variant,
@@ -103,6 +139,12 @@ def linear_apply(
         mode=policy.mode,
         backend=backend,
         accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
+        fused=fused,
+        epilogue=ops.Epilogue(
+            a_scale=xq.scale,
+            w_scale=wq.scale,
+            bias=bias,
+            activation=activation,
+            out_dtype=x.dtype,
+        ),
     )
-    out = acc.astype(jnp.float32) * xq.scale * wq.scale
-    return out.astype(x.dtype)

@@ -28,9 +28,21 @@ def _is_linear(node) -> bool:
 
 
 def decompose_linear_weight(
-    w_q: jax.Array, *, w_bits: int, variant: str, level: str
+    w_q: jax.Array,
+    *,
+    w_bits: int,
+    variant: str,
+    level: str,
+    block: int | None = bp.DEFAULT_BLOCK,
 ) -> bp.WeightPlanes:
     """Decompose one stored-quantized weight into cached planes.
+
+    At bit-plane level the cache stores the *blocked* packed layout
+    (``block`` K values planar-packed per chunk) — the format the fused
+    linear kernel consumes directly against raw int8 activations; the
+    staged packed kernel accepts it too (the activation side is packed to
+    match). Only the packed words and the per-channel scales ride in the
+    serving tree.
 
     Stacked/scanned weights (leading layer/expert dims) are vmapped so the
     cache leaves keep their leading axes scannable by ``lax.scan``. A
@@ -39,7 +51,9 @@ def decompose_linear_weight(
     """
 
     def one(w):
-        return bp.make_weight_planes(w, w_bits=w_bits, variant=variant, level=level)
+        return bp.make_weight_planes(
+            w, w_bits=w_bits, variant=variant, level=level, block=block
+        )
 
     fn = one
     for _ in range(w_q.ndim - 2):
