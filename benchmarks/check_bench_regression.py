@@ -1,0 +1,125 @@
+"""CI bench regression gate.
+
+Compares a freshly generated ``--smoke`` BENCH_kernel.json against the
+committed baseline and fails (exit 1) when:
+
+* the fused-vs-staged speedup of any config present in both files
+  regresses by more than ``--threshold`` (default 15%) — speedups are
+  wall-time *ratios* on the same host/run, so they transfer across
+  machines far better than absolute microseconds;
+* any ``parity`` entry in the fresh file reports something other than
+  ``"ok"`` — bit-exactness (continuous batching vs lockstep, int8-KV
+  first tokens) is a hard invariant, not a tolerance.
+
+Sections are matched by (bench section, config name, shape): the smoke
+sweep writes ``fused_linear_smoke`` so CI compares smoke shapes against
+committed smoke shapes, never against the full sweep's larger shapes.
+
+Usage:
+    python benchmarks/check_bench_regression.py \
+        --fresh BENCH_fresh.json --baseline BENCH_kernel.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fused_speedups(doc: dict, section: str) -> dict[tuple, float]:
+    """(name, shape) -> staged/fused wall-time speedup."""
+    out: dict[tuple, float] = {}
+    bench = doc.get("benches", {}).get(section)
+    if not bench:
+        return out
+    for cfg in bench.get("configs", []):
+        wall = cfg.get("wall_us", {})
+        staged = fused = None
+        for key, val in wall.items():
+            if key.endswith("_staged"):
+                staged = val
+            elif key.endswith("_fused"):
+                fused = val
+        if staged and fused:
+            out[(cfg["name"], tuple(cfg.get("shape", ())))] = staged / fused
+    return out
+
+
+def _parity_failures(doc: dict) -> list[str]:
+    fails = []
+    for section, bench in doc.get("benches", {}).items():
+        for check, verdict in bench.get("parity", {}).items():
+            if verdict != "ok":
+                fails.append(f"{section}.parity.{check} = {verdict!r}")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="just-generated smoke JSON")
+    ap.add_argument("--baseline", required=True, help="committed BENCH_kernel.json")
+    ap.add_argument(
+        "--threshold", type=float, default=0.15,
+        help="max tolerated relative speedup regression (0.15 = 15%%)",
+    )
+    ap.add_argument(
+        "--section", default="fused_linear_smoke",
+        help="bench section holding the fused-vs-staged comparison",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures: list[str] = []
+
+    base_sp = _fused_speedups(baseline, args.section)
+    fresh_sp = _fused_speedups(fresh, args.section)
+    compared = 0
+    for key, base in sorted(base_sp.items()):
+        if key not in fresh_sp:
+            print(f"[gate] WARN: {key} in baseline but not in fresh run")
+            continue
+        got = fresh_sp[key]
+        floor = base * (1.0 - args.threshold)
+        verdict = "ok" if got >= floor else "REGRESSED"
+        print(
+            f"[gate] {args.section} {key}: speedup {got:.2f}x "
+            f"(baseline {base:.2f}x, floor {floor:.2f}x) {verdict}"
+        )
+        compared += 1
+        if got < floor:
+            failures.append(
+                f"{key}: fused-vs-staged speedup {got:.2f}x regressed "
+                f">{args.threshold:.0%} below baseline {base:.2f}x"
+            )
+    if not compared:
+        # a gate that silently compares nothing is worse than no gate
+        failures.append(
+            f"no overlapping '{args.section}' configs between fresh and "
+            "baseline — regenerate the committed BENCH_kernel.json with "
+            "--smoke so CI has a baseline to gate against"
+        )
+
+    parity = _parity_failures(fresh)
+    for p in parity:
+        print(f"[gate] PARITY FAIL: {p}")
+    failures.extend(parity)
+    if not parity:
+        n = sum(len(b.get("parity", {})) for b in fresh.get("benches", {}).values())
+        print(f"[gate] parity: {n} checks ok")
+
+    if failures:
+        print(f"[gate] FAILED ({len(failures)} problem(s)):")
+        for f_ in failures:
+            print(f"[gate]   - {f_}")
+        return 1
+    print("[gate] PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
 """
 
 import argparse
-import dataclasses
 
 import jax
 

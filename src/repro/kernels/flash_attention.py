@@ -7,6 +7,19 @@ re-tiled for the TPU (128-aligned blocks, MXU matmuls, VMEM scratch).
 
 Supports causal masking (with whole-block skipping above the diagonal)
 and GQA via a query-head -> kv-head index map (no KV broadcast in HBM).
+
+Serving extensions (the continuous-batching cache path):
+
+* ``kv_lens`` — per-sequence valid KV lengths, an SMEM-resident (B, 1)
+  int32 operand. Each batch lane masks its own length inside the same
+  grid, so one launch covers a slot array with mixed sequence lengths
+  (the jit static ``kv_len`` remains for fixed wrapper padding).
+* int8 K/V with ``k_scale``/``v_scale`` — the int8-quantized KV cache is
+  consumed *as stored*: K/V blocks stream from HBM at 1 byte/value and
+  the per-(position, head) scales are folded into the scores (K) and the
+  softmax probabilities (V) in VMEM, so a dequantized cache tile never
+  exists anywhere. This is the kernel half of the cache's
+  quantize-on-append contract (models.cache.quantize_kv).
 """
 
 from __future__ import annotations
@@ -21,21 +34,24 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref,
-    k_ref,
-    v_ref,
-    o_ref,
-    m_scratch,
-    l_scratch,
-    acc_scratch,
-    *,
+    *refs,
     sm_scale: float,
     causal: bool,
     block_q: int,
     block_k: int,
     kv_steps: int,
     kv_len: int,
+    has_lens: bool,
+    has_k_scale: bool,
+    has_v_scale: bool,
 ):
+    it = iter(refs)
+    q_ref, k_ref, v_ref = next(it), next(it), next(it)
+    lens_ref = next(it) if has_lens else None
+    k_scale_ref = next(it) if has_k_scale else None
+    v_scale_ref = next(it) if has_v_scale else None
+    o_ref, m_scratch, l_scratch, acc_scratch = next(it), next(it), next(it), next(it)
+
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -56,12 +72,21 @@ def _flash_kernel(
         k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
         v = v_ref[0, 0].astype(jnp.float32)  # (block_k, d)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        if has_k_scale:
+            # int8 K: fold the per-(position, head) scale into the scores —
+            # (q . k_q) * scale == q . dequant(k), no dequant tile needed.
+            s = s * k_scale_ref[0, 0][None, :]
 
         if causal:
             q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
             s = jnp.where(q_pos >= k_pos, s, NEG_INF)
-        if kv_len < kv_steps * block_k:
+        if has_lens:
+            # Per-sequence valid length from SMEM: the mask-aware serving
+            # path (mixed slot lengths share one launch).
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos < lens_ref[0, 0], s, NEG_INF)
+        elif kv_len < kv_steps * block_k:
             # Padded KV columns must not receive attention mass. Applied
             # under causal masking too: query rows at q_pos >= kv_len would
             # otherwise attend padded columns on the diagonal's far side.
@@ -75,6 +100,10 @@ def _flash_kernel(
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
         l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        if has_v_scale:
+            # int8 V: weight the probabilities instead of dequantizing V —
+            # (p * scale) . v_q == p . dequant(v).
+            p = p * v_scale_ref[0, 0][None, :]
         acc_scratch[...] = acc_scratch[...] * alpha + jnp.dot(
             p, v, preferred_element_type=jnp.float32
         )
@@ -90,7 +119,8 @@ def _flash_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "sm_scale", "block_q", "block_k", "kv_len", "interpret"
+        "causal", "sm_scale", "block_q", "block_k", "kv_len", "out_dtype",
+        "interpret",
     ),
 )
 def flash_attention(
@@ -103,6 +133,10 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     kv_len: int | None = None,
+    kv_lens: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0 (GQA).
@@ -112,9 +146,21 @@ def flash_attention(
     padding and are masked out of the softmax. NOTE: ``kv_len`` is a jit
     *static* argument — each distinct value compiles a new kernel. It is
     meant for fixed wrapper padding (ops.flash_attention passes the
-    constant unpadded length), not as a per-step decode cursor; a growing
-    cache should round its length to block_k multiples.
-    Returns (B, Hq, Sq, D) in q.dtype.
+    constant unpadded length), not as a per-step decode cursor.
+
+    ``kv_lens``: (B,) int32 *array* of per-sequence valid lengths — the
+    dynamic counterpart for the slot-array decode/prefill path (one
+    compiled kernel serves every mix of lengths; mutually exclusive with
+    ``kv_len``). Lanes with length 0 produce finite garbage (free decode
+    slots), never NaN — NEG_INF is a finite sentinel.
+
+    ``k_scale``/``v_scale``: (B, Hkv, Sk) f32 per-(position, head) scales
+    of an int8-quantized K/V (see models.cache.quantize_kv); K/V then
+    stream at int8 and are dequantized implicitly in VMEM. ``out_dtype``
+    overrides the output dtype (defaults to q.dtype — pass e.g. bfloat16
+    when q itself is int8).
+
+    Returns (B, Hq, Sq, D).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -125,11 +171,22 @@ def flash_attention(
         sm_scale = d**-0.5
     if sq % block_q or sk % block_k:
         raise ValueError(f"seq lens ({sq},{sk}) must tile by ({block_q},{block_k})")
+    if kv_lens is not None and kv_len is not None:
+        raise ValueError("kv_len (static) and kv_lens (per-sequence) are exclusive")
+    if kv_lens is not None and kv_lens.shape != (b,):
+        raise ValueError(f"kv_lens must be ({b},), got {kv_lens.shape}")
+    for name, scale in (("k_scale", k_scale), ("v_scale", v_scale)):
+        if scale is not None and scale.shape != (b, hkv, sk):
+            raise ValueError(
+                f"{name} must be ({b},{hkv},{sk}), got {scale.shape}"
+            )
+
+    import jax.experimental.pallas.tpu as pltpu  # CPU-safe (interpret mode)
 
     kv_steps = sk // block_k
-    kv_len = sk if kv_len is None else kv_len
-    if not 0 < kv_len <= sk:
-        raise ValueError(f"kv_len {kv_len} out of range (0, {sk}]")
+    static_kv_len = sk if kv_len is None else kv_len
+    if not 0 < static_kv_len <= sk:
+        raise ValueError(f"kv_len {static_kv_len} out of range (0, {sk}]")
     grid = (b, hq, sq // block_q, kv_steps)
     kernel = functools.partial(
         _flash_kernel,
@@ -138,24 +195,44 @@ def flash_attention(
         block_q=block_q,
         block_k=block_k,
         kv_steps=kv_steps,
-        kv_len=kv_len,
+        kv_len=static_kv_len,
+        has_lens=kv_lens is not None,
+        has_k_scale=k_scale is not None,
+        has_v_scale=v_scale is not None,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        pl.BlockSpec(
+            (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+        ),
+        pl.BlockSpec(
+            (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
+        ),
+    ]
+    operands = [q, k, v]
+    if kv_lens is not None:
+        in_specs.append(
+            pl.BlockSpec(
+                (1, 1), lambda bi, hi, qi, ki: (bi, 0), memory_space=pltpu.SMEM
+            )
+        )
+        operands.append(kv_lens.reshape(b, 1).astype(jnp.int32))
+    scale_spec = pl.BlockSpec(
+        (1, 1, block_k), lambda bi, hi, qi, ki: (bi, hi // group, ki)
+    )
+    for scale in (k_scale, v_scale):
+        if scale is not None:
+            in_specs.append(scale_spec)
+            operands.append(scale.astype(jnp.float32))
+    out_dtype = q.dtype if out_dtype is None else out_dtype
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-            pl.BlockSpec(
-                (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
-            ),
-            pl.BlockSpec(
-                (1, 1, block_k, d), lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)
         ),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct(q.shape, out_dtype),
         scratch_shapes=[
             _scratch(block_q, 1),
             _scratch(block_q, 1),
@@ -169,7 +246,7 @@ def flash_attention(
         if not interpret
         else None,
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)
 
 
 def _scratch(rows: int, cols: int):

@@ -68,6 +68,14 @@ def auto_tiles(m: int, k: int, bm: Optional[int], bk: Optional[int]) -> tuple[in
     return bm, bk
 
 
+def _int8_bm(bm: int) -> int:
+    """Mosaic's minimum int8 tile is (32, 128): an auto-selected bm below
+    32 is legal for the int32/f32 operands auto_tiles was written for but
+    not for int8 blocks — the kernel-facing int8 dispatchers floor it here
+    (explicit bm passes through to fail loudly in the kernel instead)."""
+    return max(bm, 32)
+
+
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
     pads = []
     for dim, mult in zip(x.shape, multiples):
@@ -131,7 +139,10 @@ def plane_matmul(
         return ref.plane_matmul_ref(a_planes, w_planes, pair_weights)
     _, m, k = a_planes.shape
     _, _, n = w_planes.shape
+    auto_bm = bm is None
     bm, bk = auto_tiles(m, k, bm, bk)
+    if auto_bm:
+        bm = _int8_bm(bm)  # the plane operands are int8 tiles
     ap = _pad_to(a_planes, (0, bm, bk))
     wp = _pad_to(w_planes, (0, bk, bn))
     out = _plane_mm_pallas(
@@ -202,7 +213,10 @@ def fused_linear(
         acc = ref.plane_matmul_ref(dec_a.planes, bp.unpack_planes(packed_w), pair_w)
         return acc if epilogue is None else apply_epilogue(acc, epilogue)
     m = x_q.shape[0]
+    auto_bm = bm is None
     bm, _ = auto_tiles(m, x_q.shape[1], bm, None)
+    if auto_bm:
+        bm = _int8_bm(bm)  # x_q is an int8 tile
     kw = dict(a_bits=a_bits, variant=variant, bm=bm, bn=bn,
               interpret=backend == "interpret")
     if epilogue is None:
@@ -473,14 +487,34 @@ def flash_attention(
     backend: str = "auto",
     block_q: int = 128,
     block_k: int = 128,
+    kv_lens: Optional[jax.Array] = None,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
+    """Padding + dispatch wrapper. ``kv_lens`` (B,) masks per-sequence
+    valid KV lengths (the slot-array serving path); ``k_scale``/``v_scale``
+    (B, Hkv, Sk) consume an int8-quantized KV cache as stored, folding the
+    dequant into the kernel (see kernels.flash_attention). The jnp path
+    dequantizes explicitly and runs the reference — the parity oracle."""
     backend = resolve_backend(backend)
     if backend == "jnp":
-        return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+        if k_scale is not None:
+            k = k.astype(jnp.float32) * k_scale[..., None]
+        if v_scale is not None:
+            v = v.astype(jnp.float32) * v_scale[..., None]
+        return ref.attention_ref(
+            q, k.astype(q.dtype), v.astype(q.dtype),
+            causal=causal, sm_scale=sm_scale, kv_lens=kv_lens,
+        )
     sq, sk = q.shape[2], k.shape[2]
     qp = _pad_to(q, (0, 0, block_q, 0))
     kp = _pad_to(k, (0, 0, block_k, 0))
     vp = _pad_to(v, (0, 0, block_k, 0))
+    quant_kw = {}
+    if k_scale is not None:
+        quant_kw["k_scale"] = _pad_to(k_scale, (0, 0, block_k))
+    if v_scale is not None:
+        quant_kw["v_scale"] = _pad_to(v_scale, (0, 0, block_k))
     out = _flash_pallas(
         qp,
         kp,
@@ -489,7 +523,11 @@ def flash_attention(
         sm_scale=sm_scale,
         block_q=block_q,
         block_k=block_k,
-        kv_len=sk,  # padded KV columns are masked out of the softmax
+        # padded KV columns are masked out of the softmax, either by the
+        # per-sequence lengths or by the static unpadded length
+        kv_len=None if kv_lens is not None else sk,
+        kv_lens=kv_lens,
         interpret=backend == "interpret",
+        **quant_kw,
     )
     return out[:, :, :sq, :]

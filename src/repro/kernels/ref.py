@@ -29,8 +29,10 @@ def attention_ref(
     *,
     causal: bool = True,
     sm_scale: float | None = None,
+    kv_lens: jax.Array | None = None,
 ) -> jax.Array:
-    """Naive softmax attention with GQA broadcast. q: (B,Hq,Sq,D)."""
+    """Naive softmax attention with GQA broadcast. q: (B,Hq,Sq,D).
+    ``kv_lens``: optional (B,) per-sequence valid KV lengths."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv
@@ -43,6 +45,9 @@ def attention_ref(
     if causal:
         mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
         s = jnp.where(mask, s, -1e30)
+    if kv_lens is not None:
+        valid = jnp.arange(sk)[None, :] < kv_lens[:, None]  # (B, Sk)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e per-chip constants (the assignment's hardware model).
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s

@@ -1,0 +1,57 @@
+"""Token sampling for the serving engines.
+
+``sample_fn`` is the hook :class:`repro.launch.serve.Engine` and the
+continuous-batching decode step thread their logits through: signature
+``sample_fn(logits, key) -> (B,) int32`` over vocab-masked f32 logits.
+:func:`greedy` is the deterministic default; :func:`sample_tokens` adds
+per-row temperatures so the scheduler can carry per-request sampling
+params through one jitted step (temperature 0 rows reduce to greedy
+exactly — the bit-parity guarantee the CI gate's serving section leans
+on).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_vocab(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """-inf the padded-vocab columns so no sampler can pick them."""
+    if logits.shape[-1] == vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < vocab_size, logits, -jnp.inf)
+
+
+def greedy(logits: jax.Array, key=None) -> jax.Array:
+    """Argmax sampling (ignores ``key``). logits: (B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(logits: jax.Array, temps: jax.Array, key) -> jax.Array:
+    """Per-row temperature sampling via the Gumbel-max trick.
+
+    ``temps``: (B,) f32; rows with ``temp == 0`` take the exact greedy
+    argmax (no noise enters their computation), so a greedy request is
+    bit-identical whether it shares a batch with sampled requests or not.
+    """
+    greedy_tok = greedy(logits)
+    lf = logits.astype(jnp.float32)
+    g = jax.random.gumbel(key, lf.shape, jnp.float32)
+    t = jnp.maximum(temps[:, None].astype(jnp.float32), 1e-6)
+    # -inf vocab-mask columns stay -inf under /t and +gumbel stays losing.
+    sampled = jnp.argmax(lf / t + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy_tok)
+
+
+def make_sample_fn(temperature: float = 0.0):
+    """Uniform-temperature ``sample_fn`` for the lockstep Engine hook."""
+    if temperature <= 0.0:
+        return greedy
+
+    def sample(logits, key):
+        temps = jnp.full((logits.shape[0],), temperature, jnp.float32)
+        return sample_tokens(logits, temps, key)
+
+    return sample

@@ -1,12 +1,25 @@
-"""Serving driver: quantized weights + batched prefill/decode engine.
+"""Serving driver: quantized weights + continuous-batching decode engine.
 
 This is where the paper's technique earns its keep: weights live in
 memory at their configured bit-width (quantize_params), activations are
-quantized per token at runtime, and every projection runs through the
-bit-serial matmul at the policy's level/variant.
+quantized per token at runtime, every projection runs through the
+bit-serial matmul at the policy's level/variant — and the KV cache
+extends the precision dial to decode state (int8, quantize-on-append).
+
+Two engines share the jitted steps:
+
+* :class:`Engine` — the lockstep baseline: one fixed batch, every row
+  prefills and decodes in unison. Kept as the bit-exact parity oracle
+  (``--no-cb``) and for homogeneous batch benchmarking.
+* :class:`ContinuousBatchingEngine` — slot-based serving: requests with
+  different prompt lengths and arrival times are admitted into free
+  decode slots mid-flight (prefill inserts into a slot while the other
+  slots keep decoding) and evicted the step they finish. One jitted
+  decode step covers the whole slot array at per-slot lengths; with
+  ``kv_quant`` the cache holds int8 KV (2x fewer KV bytes at bf16→int8).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --bits 8 --batch 4 --prompt-len 32 --gen 16
+        --bits 8 --prompt-lens 8,32,128 --gen 16 --stagger 2
 """
 
 from __future__ import annotations
@@ -20,15 +33,27 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.core.precision import PrecisionPolicy
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch import sampling
+from repro.launch.steps import make_cb_decode_step, make_prefill_step, make_serve_step
+from repro.models.cache import cache_kv_bytes, init_cache, insert_slot
 from repro.models.quant import quantize_params
 from repro.models.transformer import init_params
+from repro.runtime.scheduler import Request, SlotScheduler
 
 
 class Engine:
-    """Minimal batched generation engine over the serve steps."""
+    """Minimal lockstep batched generation engine over the serve steps."""
 
-    def __init__(self, cfg, params, policy, max_len: int = 256, plane_cache: bool = True):
+    def __init__(
+        self,
+        cfg,
+        params,
+        policy,
+        max_len: int = 256,
+        plane_cache: bool = True,
+        sample_fn=None,
+        seed: int = 0,
+    ):
         self.cfg = cfg
         self.policy = policy
         # Quantize AND pre-decompose/pack the weight planes exactly once at
@@ -38,26 +63,152 @@ class Engine:
             if policy.default.active
             else params
         )
+        self.sample_fn = sample_fn or sampling.greedy
+        self._base_key = jax.random.PRNGKey(seed)
         self.prefill = jax.jit(make_prefill_step(cfg, policy, max_len=max_len))
-        self.step = jax.jit(make_serve_step(cfg, policy), donate_argnums=(1,))
+        self.step = jax.jit(
+            make_serve_step(cfg, policy, sample_fn=self.sample_fn),
+            donate_argnums=(1,),
+        )
 
     def generate(self, prompts: jax.Array, n_tokens: int):
-        """prompts: (B, S) int32. Greedy-decodes ``n_tokens``; returns
-        (tokens (B, n), decode_tok_per_s)."""
+        """prompts: (B, S) int32. Decodes ``n_tokens`` via the engine's
+        ``sample_fn`` (greedy default); returns (tokens (B, n),
+        decode_tok_per_s)."""
         last_logits, cache = self.prefill(self.q_params, {"tokens": prompts})
-        tok = jnp.argmax(last_logits[:, : self.cfg.vocab_size], axis=-1).astype(
-            jnp.int32
-        )[:, None]
+        logits = sampling.mask_vocab(last_logits, self.cfg.vocab_size)
+        tok = self.sample_fn(logits, jax.random.fold_in(self._base_key, 0))[:, None]
         out = [tok]
         t0 = time.time()
-        for _ in range(n_tokens - 1):
-            tok, cache = self.step(self.q_params, cache, tok)
+        for i in range(n_tokens - 1):
+            key = jax.random.fold_in(self._base_key, i + 1)
+            tok, cache = self.step(self.q_params, cache, tok, key)
             out.append(tok)
         jax.block_until_ready(tok)
         dt = time.time() - t0
         tokens = jnp.concatenate(out, axis=1)
         tps = prompts.shape[0] * max(n_tokens - 1, 1) / max(dt, 1e-9)
         return tokens, tps
+
+
+class ContinuousBatchingEngine:
+    """Slot-scheduled serving over a shared, optionally int8, KV cache.
+
+    ``n_slots`` decode lanes share one slot-indexed cache of ``max_len``
+    positions per slot. :meth:`run` drives a :class:`SlotScheduler`:
+    each iteration admits pending requests into free slots (per-request
+    prefill + :func:`insert_slot` — jit re-specializes per distinct
+    prompt length, so prompts are *not* padded and SSM/recurrent state
+    stays exact), then executes one jitted decode step over the whole
+    slot array. With ``kv_quant`` (default) KV is stored int8 with
+    per-(position, head) scales; ``kv_quant=False`` is the bit-exact A/B
+    fallback the parity tests and the CI serving gate compare against
+    per-request lockstep runs.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        policy,
+        n_slots: int = 4,
+        max_len: int = 256,
+        kv_quant: bool = True,
+        plane_cache: bool = True,
+        seed: int = 0,
+    ):
+        if not cfg.is_decoder:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        self.cfg = cfg
+        self.policy = policy
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.kv_quant = kv_quant
+        self.q_params = (
+            quantize_params(params, policy, plane_cache=plane_cache)
+            if policy.default.active
+            else params
+        )
+        base = jax.random.PRNGKey(seed)
+        # disjoint streams: first-token sampling folds rid, decode folds step
+        self._prefill_key, self._decode_key = jax.random.split(base)
+        self._prefill = jax.jit(
+            make_prefill_step(cfg, policy, max_len=max_len, kv_quant=kv_quant)
+        )
+        self._insert = jax.jit(insert_slot, donate_argnums=(0,))
+        self._step = jax.jit(make_cb_decode_step(cfg, policy), donate_argnums=(1,))
+
+    def _first_token(self, logits, request: Request) -> jax.Array:
+        logits = sampling.mask_vocab(logits, self.cfg.vocab_size)
+        key = jax.random.fold_in(self._prefill_key, request.rid)
+        temps = jnp.full((logits.shape[0],), request.temperature, jnp.float32)
+        return sampling.sample_tokens(logits, temps, key)[0]
+
+    def run(self, requests: list[Request]):
+        """Serve ``requests`` to completion. Returns (results, stats):
+        ``results`` maps rid -> (max_new_tokens,) int32 generated tokens;
+        ``stats`` reports decode throughput, step counts and KV bytes."""
+        for r in requests:
+            if r.tokens.size + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.tokens.size} + gen "
+                    f"{r.max_new_tokens} exceeds max_len {self.max_len}"
+                )
+        sched = SlotScheduler(self.n_slots)
+        for r in sorted(requests, key=lambda r: r.arrival_step):
+            sched.submit(r)
+
+        cache = init_cache(
+            self.cfg, self.n_slots, self.max_len, self.cfg.dtype,
+            kv_quant=self.kv_quant,
+        )
+        tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        kv_bytes = cache_kv_bytes(cache)
+        step_i = 0
+        decode_steps = 0
+        decoded_tokens = 0
+        t0 = time.time()
+        while not sched.done:
+            for slot, req in sched.admissible(step_i):
+                logits, seq_cache = self._prefill(
+                    self.q_params, {"tokens": jnp.asarray(req.tokens)[None, :]}
+                )
+                tok = self._first_token(logits, req)
+                cache = self._insert(cache, seq_cache, jnp.int32(slot))
+                tokens = tokens.at[slot, 0].set(tok)
+                sched.start(slot, req, int(tok))
+            if sched.active_slots:
+                key = jax.random.fold_in(self._decode_key, step_i)
+                temps = jnp.asarray(sched.temperatures())
+                tokens, cache = self._step(self.q_params, cache, tokens, temps, key)
+                toks_np = np.asarray(tokens[:, 0])
+                for slot in sched.active_slots:
+                    sched.record(slot, int(toks_np[slot]))
+                    decoded_tokens += 1
+                decode_steps += 1
+                step_i += 1
+            else:
+                # nothing in flight: fast-forward to the next arrival
+                nxt = sched.next_arrival()
+                step_i = step_i + 1 if nxt is None else max(nxt, step_i + 1)
+        jax.block_until_ready(tokens)
+        wall = max(time.time() - t0, 1e-9)
+        s = sched.stats()
+        stats = {
+            "wall_s": wall,
+            "decode_steps": decode_steps,
+            "decoded_tokens": decoded_tokens,
+            "prefill_tokens": int(sum(r.tokens.size for r in requests)),
+            "tok_per_s": (decoded_tokens + s.admitted) / wall,
+            "kv_cache_bytes": kv_bytes,
+            "slot_utilization": (
+                decoded_tokens / max(decode_steps * self.n_slots, 1)
+            ),
+            "admitted": s.admitted,
+            "peak_occupancy": s.peak_occupancy,
+            "queue_steps": s.queue_steps,
+        }
+        return sched.finished, stats
 
 
 def main():
@@ -67,9 +218,20 @@ def main():
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--level", default="digit", choices=("bitplane", "digit", "fused"))
     ap.add_argument("--variant", default="booth", choices=("booth", "sbmwc"))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lockstep batch size (--no-cb) / default slot count")
+    ap.add_argument("--n-slots", type=int, default=None,
+                    help="continuous-batching decode slots (default: --batch)")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="lockstep prompt length (--no-cb)")
+    ap.add_argument("--prompt-lens", default=None,
+                    help="comma-separated mixed prompt lengths for the "
+                    "continuous-batching workload, e.g. 8,32,128")
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="decode steps between request arrivals")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
     ap.add_argument(
         "--no-plane-cache",
         action="store_true",
@@ -81,6 +243,18 @@ def main():
         help="stage the linear (separate plane kernel + XLA dequant) instead "
         "of the fully-fused kernel; prefill and decode default to fused "
         "wherever the backend supports it",
+    )
+    ap.add_argument(
+        "--no-kv-quant",
+        action="store_true",
+        help="keep the KV cache in bf16 (bit-exact fallback; int8 "
+        "quantize-on-append is the default)",
+    )
+    ap.add_argument(
+        "--no-cb",
+        action="store_true",
+        help="lockstep fixed-batch engine instead of continuous batching "
+        "(the pre-scheduler serving path, kept as the A/B baseline)",
     )
     args = ap.parse_args()
 
@@ -96,19 +270,58 @@ def main():
         else PrecisionPolicy.off()
     )
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(
+    rng = np.random.default_rng(0)
+    tag = f"{cfg.name} w{args.bits}a{args.bits} {args.level}/{args.variant}"
+
+    if args.no_cb:
+        engine = Engine(
+            cfg, params, policy,
+            max_len=args.prompt_len + args.gen,
+            plane_cache=not args.no_plane_cache,
+            sample_fn=sampling.make_sample_fn(args.temperature),
+        )
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+        )
+        tokens, tps = engine.generate(prompts, args.gen)
+        print(f"[serve] {tag} lockstep: generated {tokens.shape} at {tps:.1f} tok/s")
+        print("[serve] first row:", np.asarray(tokens[0]))
+        return
+
+    lens = (
+        [int(x) for x in args.prompt_lens.split(",")]
+        if args.prompt_lens
+        else [args.prompt_len]
+    )
+    n_slots = args.n_slots or args.batch
+    max_len = max(lens) + args.gen
+    engine = ContinuousBatchingEngine(
         cfg, params, policy,
-        max_len=args.prompt_len + args.gen,
+        n_slots=n_slots, max_len=max_len,
+        kv_quant=not args.no_kv_quant,
         plane_cache=not args.no_plane_cache,
     )
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    requests = [
+        Request(
+            rid=i,
+            tokens=rng.integers(0, cfg.vocab_size, (s,)),
+            max_new_tokens=args.gen,
+            temperature=args.temperature,
+            arrival_step=i * args.stagger,
+        )
+        for i, s in enumerate(lens)
+    ]
+    results, stats = engine.run(requests)
+    kv = "int8" if not args.no_kv_quant else "bf16"
+    print(
+        f"[serve] {tag} cb/{kv}: {len(results)} requests "
+        f"({stats['decoded_tokens'] + stats['admitted']} tokens) at "
+        f"{stats['tok_per_s']:.1f} tok/s, "
+        f"slot util {stats['slot_utilization']:.2f}, "
+        f"kv cache {stats['kv_cache_bytes'] / 1024:.1f} KiB"
     )
-    tokens, tps = engine.generate(prompts, args.gen)
-    print(f"[serve] {cfg.name} w{args.bits}a{args.bits} {args.level}/{args.variant}: "
-          f"generated {tokens.shape} at {tps:.1f} tok/s")
-    print("[serve] first row:", np.asarray(tokens[0]))
+    for rid in sorted(results):
+        print(f"[serve] rid {rid}:", results[rid])
 
 
 if __name__ == "__main__":

@@ -4,7 +4,6 @@ exactly these under the production mesh."""
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -96,9 +95,16 @@ def init_opt_state(cfg, opt_cfg: OptimConfig, params, compress_grads: bool = Fal
     return state
 
 
-def make_prefill_step(cfg: ModelConfig, policy=None, max_len: Optional[int] = None):
+def make_prefill_step(
+    cfg: ModelConfig,
+    policy=None,
+    max_len: Optional[int] = None,
+    kv_quant: bool = False,
+):
     """prefill_step(params, batch) -> (last_logits, cache). Cache zeros are
-    created inside the step so the dry-run captures their allocation."""
+    created inside the step so the dry-run captures their allocation.
+    ``kv_quant`` stores attention KV int8 + per-(position, head) scales
+    (quantize-on-append; see models.cache)."""
 
     def prefill_step(params, batch):
         if cfg.frontend == "audio":
@@ -107,7 +113,11 @@ def make_prefill_step(cfg: ModelConfig, policy=None, max_len: Optional[int] = No
             bsz, s = batch["tokens"].shape
             if cfg.frontend == "vision" and "patches" in batch:
                 s += batch["patches"].shape[1]
-        cache = init_cache(cfg, bsz, max_len or s, cfg.dtype) if cfg.is_decoder else None
+        cache = (
+            init_cache(cfg, bsz, max_len or s, cfg.dtype, kv_quant=kv_quant)
+            if cfg.is_decoder
+            else None
+        )
         logits, _aux, cache = forward(
             cfg, params, batch, policy=policy, cache=cache, last_only=cfg.is_decoder
         )
@@ -126,17 +136,43 @@ def make_decode_step(cfg: ModelConfig, policy=None):
     return decode_step
 
 
-def make_serve_step(cfg: ModelConfig, policy=None):
-    """One engine iteration: decode + greedy next token (the shape-cell
-    ``serve_step``: one new token against a seq_len-deep cache)."""
-    decode = make_decode_step(cfg, policy)
+def make_serve_step(cfg: ModelConfig, policy=None, sample_fn=None):
+    """One engine iteration: decode + sample next token (the shape-cell
+    ``serve_step``: one new token against a seq_len-deep cache).
 
-    def serve_step(params, cache, tokens):
+    ``sample_fn(logits, key) -> (B,) int32`` over vocab-masked logits;
+    defaults to greedy argmax (:func:`repro.launch.sampling.greedy`)."""
+    from repro.launch import sampling
+
+    decode = make_decode_step(cfg, policy)
+    sample_fn = sample_fn or sampling.greedy
+
+    def serve_step(params, cache, tokens, key=None):
         logits, cache = decode(params, cache, {"tokens": tokens})
-        if logits.shape[-1] != cfg.vocab_size:  # mask padded-vocab columns
-            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
-            logits = jnp.where(col < cfg.vocab_size, logits, -jnp.inf)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        logits = sampling.mask_vocab(logits, cfg.vocab_size)
+        next_tok = sample_fn(logits, key)[:, None]
         return next_tok, cache
 
     return serve_step
+
+
+def make_cb_decode_step(cfg: ModelConfig, policy=None):
+    """One continuous-batching engine iteration over the whole slot array.
+
+    cb_step(params, cache, tokens, temps, key) -> (next_tokens, cache):
+    every slot decodes one token against its own per-slot cache length and
+    position; ``temps`` (B,) carries per-request sampling temperatures
+    (0 = greedy, exactly). Free/finished slots still compute — their
+    lanes are garbage the scheduler never reads, which is what keeps the
+    step a single jit specialization regardless of occupancy."""
+    from repro.launch import sampling
+
+    decode = make_decode_step(cfg, policy)
+
+    def cb_step(params, cache, tokens, temps, key):
+        logits, cache = decode(params, cache, {"tokens": tokens})
+        logits = sampling.mask_vocab(logits, cfg.vocab_size)
+        next_tok = sampling.sample_tokens(logits, temps, key)[:, None]
+        return next_tok, cache
+
+    return cb_step

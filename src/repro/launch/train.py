@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -27,7 +26,7 @@ from repro.data import DataConfig, DataPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import init_opt_state, make_train_step
 from repro.models.transformer import init_params
-from repro.optim import OptimConfig, state_specs
+from repro.optim import OptimConfig
 from repro.runtime import StragglerDetector, retry_step
 from repro.sharding import rules as sh
 

@@ -28,6 +28,7 @@ from jax import lax
 from repro.layers.linear import linear_apply, linear_init
 from repro.layers.norms import rmsnorm_init, rmsnorm_apply
 from repro.layers.rotary import apply_rope
+from repro.models.cache import quantize_kv
 from repro.sharding.rules import constrain
 
 NEG_INF = -1e30
@@ -169,10 +170,18 @@ def _local_gqa(q, k, v, *, window: int, q_offset=0):
     return out
 
 
-def _decode_gqa(q, k_cache, v_cache, kv_len):
+def _decode_gqa(q, k_cache, v_cache, valid, k_scale=None, v_scale=None):
     """Single-token decode over an (S-sharded) cache. q: (B,1,Hq,D).
 
-    K/V stay in cache dtype (bf16): an f32 upcast here materializes a
+    ``valid``: (B, S) bool mask of live KV positions — per-slot lengths
+    for a full cache, the filled ring extent for a windowed one. With an
+    int8-quantized cache, ``k_scale``/``v_scale`` are the per-(position,
+    head) f32 scales: the K scale folds into the scores and the V scale
+    into the softmax weights, so the dequantized K/V tensors are never
+    materialized (the cache moves through memory at int8).
+
+    K/V stay in cache dtype (bf16, or int8 upcast to the query dtype —
+    exact, int8 fits bf16's mantissa): an f32 upcast here materializes a
     full-size f32 copy of the *stacked* cache, hoisted out of the layer
     scan by XLA (+7.9 GiB/dev on the 405B decode cell, EXPERIMENTS.md
     §Perf); scores accumulate f32 via preferred_element_type.
@@ -181,18 +190,23 @@ def _decode_gqa(q, k_cache, v_cache, kv_len):
     hkv = k_cache.shape[2]
     group = hq // hkv
     qf = q.reshape(b, hkv, group, d)
+    kc = k_cache.astype(q.dtype) if k_scale is not None else k_cache
     s = jnp.einsum(
-        "bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32
+        "bhgd,bkhd->bhgk", qf, kc, preferred_element_type=jnp.float32
     ) * (d**-0.5)
-    k_pos = jnp.arange(k_cache.shape[1])[None, None, None, :]
-    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+    if k_scale is not None:  # (B,S,Hkv) -> (B,Hkv,1,S)
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
+    vc = v_cache.astype(q.dtype) if v_scale is not None else v_cache
+    if v_scale is not None:
+        p = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
     out = jnp.einsum(
         "bhgk,bkhd->bhgd",
-        p.astype(v_cache.dtype),
-        v_cache,
+        p.astype(vc.dtype),
+        vc,
         preferred_element_type=jnp.float32,
     ) / jnp.maximum(l, 1e-30)
     return out.reshape(b, 1, hq, d)
@@ -255,41 +269,71 @@ def attention_apply(
 
     new_cache = cache
     if cache is not None and s == 1:  # decode step
-        pos = cache["len"]  # scalar int32: tokens already generated
-        s_max = cache["k"].shape[1]
+        quantized = "k_q" in cache
+        pos = cache["len"]  # (B,) int32 per-slot: tokens already generated
+        s_max = (cache["k_q"] if quantized else cache["k"]).shape[1]
         # Windowed caches are ring buffers of size `window` (long_500k decode
         # keeps O(window) state); full caches are written at `pos` directly.
-        write_idx = pos % s_max if window else pos
-        k_cache = lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, write_idx, 0, 0)
-        )
-        v_cache = lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, write_idx, 0, 0)
-        )
+        # Per-slot write positions differ, so the append is a masked select
+        # over the position axis rather than one dynamic_update_slice.
+        write_pos = pos % s_max if window else pos
+        write_row = jnp.arange(s_max)[None, :] == write_pos[:, None]  # (B,S)
         kv_len = pos + 1
         if window:
             # softmax is permutation-invariant over KV and RoPE is already
             # applied to k, so ring order does not matter — mask to the
             # filled slots only.
-            valid = jnp.minimum(kv_len, s_max)
-            in_window = jnp.arange(s_max) < valid
-            out = _decode_window(q, k_cache, v_cache, in_window)
+            valid = jnp.arange(s_max)[None, :] < jnp.minimum(kv_len, s_max)[:, None]
         else:
-            out = _decode_gqa(q, k_cache, v_cache, kv_len)
-        new_cache = {"k": k_cache, "v": v_cache, "len": kv_len}
+            valid = jnp.arange(s_max)[None, :] < kv_len[:, None]
+        if quantized:
+            # quantize-on-append: one int8 vector + f32 scale per (slot, head)
+            k_new, ks_new = quantize_kv(k)
+            v_new, vs_new = quantize_kv(v)
+            k_cache = jnp.where(write_row[:, :, None, None], k_new, cache["k_q"])
+            v_cache = jnp.where(write_row[:, :, None, None], v_new, cache["v_q"])
+            k_scale = jnp.where(write_row[:, :, None], ks_new, cache["k_scale"])
+            v_scale = jnp.where(write_row[:, :, None], vs_new, cache["v_scale"])
+            out = _decode_gqa(q, k_cache, v_cache, valid, k_scale, v_scale)
+            new_cache = {
+                "k_q": k_cache, "k_scale": k_scale,
+                "v_q": v_cache, "v_scale": v_scale, "len": kv_len,
+            }
+        else:
+            k_cache = jnp.where(
+                write_row[:, :, None, None], k.astype(cache["k"].dtype), cache["k"]
+            )
+            v_cache = jnp.where(
+                write_row[:, :, None, None], v.astype(cache["v"].dtype), cache["v"]
+            )
+            out = _decode_gqa(q, k_cache, v_cache, valid)
+            new_cache = {"k": k_cache, "v": v_cache, "len": kv_len}
     else:
         if cache is not None:  # prefill into cache
-            s_max = cache["k"].shape[1]
+            quantized = "k_q" in cache
+            s_max = (cache["k_q"] if quantized else cache["k"]).shape[1]
             kw, vw = k, v
             if s > s_max:  # windowed ring cache: keep only the last s_max
                 kw, vw = k[:, -s_max:], v[:, -s_max:]
-            k_cache = lax.dynamic_update_slice(
-                cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
-            )
-            v_cache = lax.dynamic_update_slice(
-                cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
-            )
-            new_cache = {"k": k_cache, "v": v_cache, "len": jnp.int32(s)}
+            new_len = jnp.full((b,), s, jnp.int32)
+            if quantized:
+                kq, ks = quantize_kv(kw)
+                vq, vs = quantize_kv(vw)
+                new_cache = {
+                    "k_q": lax.dynamic_update_slice(cache["k_q"], kq, (0, 0, 0, 0)),
+                    "k_scale": lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, 0)),
+                    "v_q": lax.dynamic_update_slice(cache["v_q"], vq, (0, 0, 0, 0)),
+                    "v_scale": lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, 0)),
+                    "len": new_len,
+                }
+            else:
+                k_cache = lax.dynamic_update_slice(
+                    cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
+                )
+                v_cache = lax.dynamic_update_slice(
+                    cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
+                )
+                new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
         if window:
             out = _local_gqa(q, k, v, window=window)
         else:
@@ -301,25 +345,3 @@ def attention_apply(
     elif s > 1:
         out = constrain(out, ("batch", "seq", None))
     return la(params["o_proj"], out, name=f"{name}/o_proj"), new_cache
-
-
-def _decode_window(q, k_cache, v_cache, in_window):
-    b, _, hq, d = q.shape
-    hkv = k_cache.shape[2]
-    group = hq // hkv
-    qf = q.reshape(b, hkv, group, d)
-    s = jnp.einsum(
-        "bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32
-    ) * (d**-0.5)
-    s = jnp.where(in_window[None, None, None, :], s, NEG_INF)
-    m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum(
-        "bhgk,bkhd->bhgd",
-        p.astype(v_cache.dtype),
-        v_cache,
-        preferred_element_type=jnp.float32,
-    )
-    out = out / jnp.maximum(l, 1e-30)
-    return out.reshape(b, 1, hq, d)

@@ -88,7 +88,11 @@ def rglru_apply(
         _, hs = lax.associative_scan(comb, (a, gated_x), axis=1)
         new_cache = None
         if cache is not None:
-            new_cache = {"conv": new_conv, "h": hs[:, -1], "len": jnp.int32(x.shape[1])}
+            new_cache = {
+                "conv": new_conv,
+                "h": hs[:, -1],
+                "len": jnp.full((x.shape[0],), x.shape[1], jnp.int32),
+            }
 
     out = (hs * y_branch).astype(x.dtype)
     return la(params["out"], out, name=f"{name}/out"), new_cache

@@ -191,7 +191,11 @@ def ssm_apply(
         y = constrain(y, ("batch", None, "model", None))
         new_cache = None
         if cache is not None:  # prefill fills the recurrent state
-            new_cache = {"conv": new_conv, "state": final_state, "len": jnp.int32(s)}
+            new_cache = {
+                "conv": new_conv,
+                "state": final_state,
+                "len": jnp.full((bsz,), s, jnp.int32),
+            }
 
     y = y.reshape(bsz, s, d_inner)
     y = y * jax.nn.silu(z.astype(jnp.float32))

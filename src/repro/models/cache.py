@@ -1,25 +1,74 @@
-"""Decode-state (KV / SSM / LRU) cache construction.
+"""Decode-state (KV / SSM / LRU) cache construction — slot-indexed.
 
 Cache layout mirrors the parameter layout: a ``periods`` pytree stacked
 over the scanned layer groups plus an unstacked ``tail``, so the layer
 scan can carry per-layer caches as scan inputs/outputs. Attention caches
 for windowed layers are ring buffers of size ``window`` (this is what
-makes the 500k-token cell O(window) instead of O(S))."""
+makes the 500k-token cell O(window) instead of O(S)).
+
+The leading ``batch`` axis of every leaf is a **slot** axis for the
+continuous-batching engine: each slot holds one in-flight sequence with
+its own length, so ``len``/``step`` are per-slot ``(B,)`` vectors rather
+than scalars (a lockstep batch is the special case where every entry
+agrees). :func:`insert_slot` scatters a batch-1 prefill cache into one
+slot of a slot-array cache; eviction is pure host bookkeeping because an
+insert overwrites the slot's entire extent.
+
+With ``kv_quant=True`` attention KV is stored int8 with per-(position,
+head) float32 scales (``k_q``/``k_scale``/``v_q``/``v_scale``) and is
+quantized on append — see DESIGN.md §6 for the layout and the HBM-byte
+accounting (``cache_kv_bytes``).
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
 from repro.models.config import ModelConfig
 
+# Guards the per-(position, head) amax against all-zero vectors; real
+# activation rows are orders of magnitude above this.
+KV_SCALE_EPS = 1e-8
+KV_QMAX = 127.0
 
-def _attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int, dtype):
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization over the trailing (head_dim) axis.
+
+    x: (..., D) -> (int8 values (..., D), float32 scales (...,)). One
+    scale per (position, head) vector — the append granularity, so a
+    decode step quantizes exactly the vector it writes.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, KV_SCALE_EPS) / KV_QMAX
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv` (reference; hot paths fold the
+    scale into scores/probabilities instead of materializing this)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _attn_cache(
+    cfg: ModelConfig, batch: int, max_len: int, window: int, dtype, kv_quant: bool
+):
     s = min(window, max_len) if window else max_len
-    return {
-        "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "len": jnp.int32(0),
-    }
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"len": jnp.zeros((batch,), jnp.int32)}
+    if kv_quant:
+        cache.update(
+            k_q=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_q=jnp.zeros(shape, jnp.int8),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32),
+        )
+    else:
+        cache.update(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+    return cache
 
 
 def _ssm_cache(cfg: ModelConfig, batch: int):
@@ -29,7 +78,7 @@ def _ssm_cache(cfg: ModelConfig, batch: int):
         "state": jnp.zeros(
             (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
         ),
-        "len": jnp.int32(0),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -37,15 +86,17 @@ def _rec_cache(cfg: ModelConfig, batch: int):
     return {
         "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), jnp.float32),
         "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
-        "len": jnp.int32(0),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def _block_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype, kv_quant: bool
+):
     if kind in ("dense", "moe"):
-        return _attn_cache(cfg, batch, max_len, cfg.local_window if kind == "attn" else 0, dtype)
+        return _attn_cache(cfg, batch, max_len, 0, dtype, kv_quant)
     if kind == "attn":  # hybrid local-attention layer
-        return _attn_cache(cfg, batch, max_len, cfg.local_window, dtype)
+        return _attn_cache(cfg, batch, max_len, cfg.local_window, dtype, kv_quant)
     if kind == "ssm":
         return _ssm_cache(cfg, batch)
     if kind == "rec":
@@ -53,16 +104,28 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
     raise ValueError(kind)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Build the full decode cache for a model instance."""
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    kv_quant: bool = False,
+):
+    """Build the full decode cache for a model instance.
+
+    ``batch`` is the number of decode slots; ``kv_quant`` stores attention
+    KV as int8 + per-(position, head) scales (quantize-on-append).
+    """
     import jax
 
     kinds = cfg.layer_kinds()
+    step = jnp.zeros((batch,), jnp.int32)
     if not cfg.scan_layers:
         return {
-            "step": jnp.int32(0),
+            "step": step,
             "layers": [
-                _block_cache(cfg, kind, batch, max_len, dtype) for kind in kinds
+                _block_cache(cfg, kind, batch, max_len, dtype, kv_quant)
+                for kind in kinds
             ],
         }
     period = cfg.period if cfg.period else (kinds[0],)
@@ -72,7 +135,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
     def one_period():
         return {
-            f"b{j}_{kind}": _block_cache(cfg, kind, batch, max_len, dtype)
+            f"b{j}_{kind}": _block_cache(cfg, kind, batch, max_len, dtype, kv_quant)
             for j, kind in enumerate(period)
         }
 
@@ -81,6 +144,65 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     ) if n_full > 0 else {}
 
     tail = [
-        _block_cache(cfg, kind, batch, max_len, dtype) for kind in tail_kinds
+        _block_cache(cfg, kind, batch, max_len, dtype, kv_quant)
+        for kind in tail_kinds
     ]
-    return {"step": jnp.int32(0), "periods": periods, "tail": tail}
+    return {"step": step, "periods": periods, "tail": tail}
+
+
+def insert_slot(cache, seq_cache, slot):
+    """Scatter a batch-1 sequence cache into slot ``slot`` of a slot cache.
+
+    ``seq_cache`` must come from the same ``init_cache`` configuration at
+    ``batch=1`` (same ``max_len``/``kv_quant``), so the trees match leaf
+    for leaf. Every leaf of the slot's extent is overwritten — including
+    KV positions past the sequence length and the quantization scales —
+    which is what makes slot eviction + readmission leak-free by
+    construction (nothing of the previous tenant survives the insert).
+
+    The slot axis is 0 for ``step``/``tail``/``layers`` leaves and 1 for
+    ``periods`` leaves (axis 0 is the scanned layer-group stack). ``slot``
+    may be a traced int32 scalar (one jit specialization serves every
+    slot).
+    """
+    import jax
+
+    def upd(axis):
+        def one(g, p):
+            start = tuple(slot if i == axis else 0 for i in range(g.ndim))
+            return lax.dynamic_update_slice(g, p.astype(g.dtype), start)
+
+        return one
+
+    out = {"step": upd(0)(cache["step"], seq_cache["step"])}
+    if "layers" in cache:
+        out["layers"] = jax.tree_util.tree_map(
+            upd(0), cache["layers"], seq_cache["layers"]
+        )
+        return out
+    out["periods"] = jax.tree_util.tree_map(
+        upd(1), cache["periods"], seq_cache["periods"]
+    )
+    out["tail"] = jax.tree_util.tree_map(upd(0), cache["tail"], seq_cache["tail"])
+    return out
+
+
+_KV_LEAF_KEYS = frozenset({"k", "v", "k_q", "v_q", "k_scale", "v_scale"})
+
+
+def cache_kv_bytes(cache) -> int:
+    """Bytes of attention KV state (values + scales) held by ``cache``.
+
+    The serving bench's measured HBM-residency number: bf16 KV costs
+    ``2*D`` bytes per (position, head) vector per side; int8 + f32 scale
+    costs ``D + 4`` — a ``2*D/(D+4)`` reduction (1.94x at D=128).
+    """
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        last = path[-1]
+        key = getattr(last, "key", getattr(last, "name", None))
+        if key in _KV_LEAF_KEYS:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -13,7 +13,6 @@ full granularity (see examples/precision_sweep.py).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -249,8 +248,8 @@ def _embed_inputs(cfg: ModelConfig, params, batch, *, policy, training, cache):
         )
         x = jnp.concatenate([patch.astype(x.dtype), x], axis=1)
         s = x.shape[1]
-    if cache is not None and s == 1:  # decode
-        positions = jnp.broadcast_to(cache["step"][None, None], (b, 1)).astype(jnp.int32)
+    if cache is not None and s == 1:  # decode: per-slot positions
+        positions = cache["step"][:, None].astype(jnp.int32)
     else:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     return x, positions
@@ -296,7 +295,12 @@ def forward(
             new_layer_caches.append(nc)
         new_cache = None
         if cache is not None:
-            new_cache = {"step": cache["step"] + x.shape[1] if x.shape[1] == 1 else jnp.int32(x.shape[1]), "layers": new_layer_caches}
+            step = (
+                cache["step"] + 1
+                if x.shape[1] == 1
+                else jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+            )
+            new_cache = {"step": step, "layers": new_layer_caches}
     else:
         period = cfg.period if cfg.period else (kinds[0],)
         plen = len(period)
@@ -416,9 +420,11 @@ def forward(
 
         new_cache = None
         if cache is not None:
-            step = cache["step"] + (1 if x.shape[1] == 1 else 0)
-            if x.shape[1] > 1:
-                step = jnp.int32(x.shape[1])
+            step = (
+                cache["step"] + 1
+                if x.shape[1] == 1
+                else jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+            )
             new_cache = {"step": step, "periods": new_periods, "tail": new_tail}
 
     if last_only:

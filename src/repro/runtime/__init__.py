@@ -1,4 +1,8 @@
-"""Fault-tolerance runtime: retries, stragglers, elastic re-meshing."""
+"""Serving/training runtime: request scheduling, fault tolerance.
+
+Fault side: retries, stragglers, elastic re-meshing. Serving side: the
+slot-based request scheduler behind the continuous-batching engine.
+"""
 
 from repro.runtime.fault import (
     ElasticMesh,
@@ -6,5 +10,14 @@ from repro.runtime.fault import (
     StragglerDetector,
     retry_step,
 )
+from repro.runtime.scheduler import Request, SchedulerStats, SlotScheduler
 
-__all__ = ["ElasticMesh", "HealthMonitor", "StragglerDetector", "retry_step"]
+__all__ = [
+    "ElasticMesh",
+    "HealthMonitor",
+    "Request",
+    "SchedulerStats",
+    "SlotScheduler",
+    "StragglerDetector",
+    "retry_step",
+]

@@ -1,0 +1,159 @@
+"""Slot-based request scheduler for the continuous-batching engine.
+
+Pure host-side bookkeeping: the device never sees requests, only the
+fixed slot array. A :class:`Request` waits in an arrival-ordered queue
+until its ``arrival_step`` has passed and a decode slot is free; it is
+then *admitted* (prefilled into the slot mid-flight, while other slots
+keep decoding) and *evicted* the step it finishes, freeing the slot for
+the next pending request. Per-request state that must ride through the
+jitted decode step (sampling temperature) is exposed as a dense per-slot
+array; everything else (generated tokens, budgets) stays host-side.
+
+The scheduler is deliberately oblivious to KV state: eviction does not
+touch the device cache, because :func:`repro.models.cache.insert_slot`
+overwrites a slot's entire extent on admission — the invariant the
+slot-reuse property test (and the CI serving parity gate) enforces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``arrival_step`` is measured in engine iterations (decode steps) —
+    the unit the mixed-arrival scenarios are scripted in; a wall-clock
+    frontend would translate timestamps before submission.
+    """
+
+    rid: int
+    tokens: np.ndarray  # (S,) int32 prompt
+    max_new_tokens: int
+    temperature: float = 0.0
+    arrival_step: int = 0
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32)
+        if self.tokens.ndim != 1 or self.tokens.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class _InFlight:
+    request: Request
+    generated: list  # of int
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerStats:
+    admitted: int = 0
+    evicted: int = 0
+    peak_occupancy: int = 0
+    queue_steps: int = 0  # total steps requests spent waiting past arrival
+
+
+class SlotScheduler:
+    """Admits pending requests into free decode slots, evicts finished ones."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._pending: deque[Request] = deque()
+        self._active: dict[int, _InFlight] = {}
+        self._free: list[int] = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+        self.finished: dict[int, np.ndarray] = {}
+        self._admitted = 0
+        self._evicted = 0
+        self._peak = 0
+        self._queue_steps = 0
+
+    # -- queue side ---------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if any(r.rid == request.rid for r in self._pending) or any(
+            f.request.rid == request.rid for f in self._active.values()
+        ) or request.rid in self.finished:
+            raise ValueError(f"duplicate request id {request.rid}")
+        self._pending.append(request)
+
+    def admissible(self, step: int) -> Iterator[tuple[int, Request]]:
+        """Yield (slot, request) pairs to prefill at engine iteration
+        ``step``: arrival-ordered, as many as there are free slots. The
+        caller must follow each yield with :meth:`start`."""
+        while self._free and self._pending and self._pending[0].arrival_step <= step:
+            req = self._pending.popleft()
+            self._queue_steps += step - req.arrival_step
+            yield self._free[-1], req
+
+    def start(self, slot: int, request: Request, first_token: int) -> bool:
+        """Occupy ``slot`` with ``request`` whose prefill sampled
+        ``first_token``. Returns True if the request is already complete
+        (max_new_tokens == 1), in which case the slot is freed again."""
+        popped = self._free.pop()
+        if popped != slot:
+            raise RuntimeError(f"slot order violated: expected {popped}, got {slot}")
+        self._active[slot] = _InFlight(request, [int(first_token)])
+        self._admitted += 1
+        self._peak = max(self._peak, len(self._active))
+        if request.max_new_tokens == 1:
+            self._evict(slot)
+            return True
+        return False
+
+    # -- decode side --------------------------------------------------------
+
+    @property
+    def active_slots(self) -> list[int]:
+        return sorted(self._active)
+
+    def temperatures(self) -> np.ndarray:
+        """Dense per-slot temperature array for the jitted decode step
+        (free slots get 0 — their lanes are never read)."""
+        temps = np.zeros((self.n_slots,), np.float32)
+        for slot, inf in self._active.items():
+            temps[slot] = inf.request.temperature
+        return temps
+
+    def record(self, slot: int, token: int) -> bool:
+        """Append a decoded token for ``slot``; evict when the request's
+        budget is exhausted. Returns True on eviction."""
+        inf = self._active[slot]
+        inf.generated.append(int(token))
+        if len(inf.generated) >= inf.request.max_new_tokens:
+            self._evict(slot)
+            return True
+        return False
+
+    def _evict(self, slot: int) -> None:
+        inf = self._active.pop(slot)
+        self.finished[inf.request.rid] = np.asarray(inf.generated, np.int32)
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        self._evicted += 1
+
+    # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return not self._pending and not self._active
+
+    def next_arrival(self) -> Optional[int]:
+        return self._pending[0].arrival_step if self._pending else None
+
+    def stats(self) -> SchedulerStats:
+        return SchedulerStats(
+            admitted=self._admitted,
+            evicted=self._evicted,
+            peak_occupancy=self._peak,
+            queue_steps=self._queue_steps,
+        )

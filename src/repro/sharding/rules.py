@@ -232,8 +232,10 @@ def cache_spec(path: str, leaf) -> P:
         return P()
     name = path.split("/")[-1]
     lead = leaf.ndim  # may include a stacked periods dim
-    if name in ("k", "v"):
+    if name in ("k", "v", "k_q", "v_q"):
         base = ["batch", "seq_kv", None, None]
+    elif name in ("k_scale", "v_scale"):  # int8-KV per-(position, head) scales
+        base = ["batch", "seq_kv", None]
     elif name == "state":
         base = ["batch", "model", None, None]
     elif name == "conv":

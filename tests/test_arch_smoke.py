@@ -87,7 +87,9 @@ def test_prefill_decode_consistency(arch, rng):
     tok = jnp.argmax(last_logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
     nxt, cache2 = serve(params, cache, tok)
     assert nxt.shape == (B, 1)
-    assert int(cache2["step"]) == int(cache["step"]) + 1
+    np.testing.assert_array_equal(
+        np.asarray(cache2["step"]), np.asarray(cache["step"]) + 1
+    )
 
 
 @pytest.mark.parametrize("arch", ["yi-6b", "qwen3-moe-235b-a22b", "mamba2-1.3b", "recurrentgemma-2b"])
@@ -112,11 +114,11 @@ def test_decode_cache_contents_matter(arch, rng):
     cache = init_cache(cfg, B, 16)
     _, _, cache = forward(cfg, params, {"tokens": tok_a}, cache=cache)
     with_ctx, _, cache = forward(cfg, params, {"tokens": tok_b}, cache=cache)
-    assert int(cache["step"]) == 2
+    np.testing.assert_array_equal(np.asarray(cache["step"]), 2)
 
     fresh = init_cache(cfg, B, 16)
     # place B at the same absolute position (1) without A in the cache
-    fresh = dict(fresh, step=jnp.int32(1))
+    fresh = dict(fresh, step=jnp.full((B,), 1, jnp.int32))
     no_ctx, _, _ = forward(cfg, params, {"tokens": tok_b}, cache=fresh)
     assert not np.allclose(np.asarray(with_ctx), np.asarray(no_ctx))
 

@@ -1,10 +1,6 @@
 """Checkpoint manager: roundtrip (incl. bf16), atomic publish, GC, resume."""
 
-import json
-import pathlib
-import threading
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,6 @@ dot products — plus hypothesis property tests of the decomposition
 invariants.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import hlo_cost
 

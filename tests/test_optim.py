@@ -17,7 +17,6 @@ from repro.optim import (
     warmup_cosine,
 )
 from repro.optim import compress as gc
-from repro.sharding.rules import tree_param_specs
 
 
 def _quad_problem():

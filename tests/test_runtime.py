@@ -1,9 +1,7 @@
 """Fault-tolerance runtime: retries, stragglers, elastic re-meshing."""
 
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,297 @@
+"""Continuous-batching serving engine + quantized KV cache.
+
+The contract the CI serving gate enforces: with ``kv_quant=False`` the
+slot-scheduled engine decodes every request bit-identically to a
+per-request lockstep run — across mixed prompt lengths, staggered
+arrivals and slot reuse — and with ``kv_quant=True`` the KV cache
+shrinks >= 1.5x while the prefill-sampled first token stays exact.
+Plus the ``Engine.generate`` decode-path A/Bs (plane cache, fused
+epilogue, sample_fn hook) and the slot eviction/readmission leak
+property test.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core.precision import PrecisionPolicy
+from repro.kernels import ops
+from repro.launch import sampling
+from repro.launch.serve import ContinuousBatchingEngine, Engine
+from repro.models import init_params
+from repro.models.cache import cache_kv_bytes, init_cache, quantize_kv
+from repro.runtime.scheduler import Request, SlotScheduler
+
+KEY = jax.random.PRNGKey(0)
+ARCH = "granite-3-8b"
+GEN = 5
+
+
+_SETUP_CACHE: list = []
+
+
+def _setup():
+    """Module-singleton (cfg, params, policy) — also reachable from the
+    @given property test, where fixtures can't be injected (the
+    _hypothesis_compat shim hides the wrapped signature from pytest)."""
+    if not _SETUP_CACHE:
+        cfg = get_reduced(ARCH)
+        params = init_params(cfg, KEY)
+        policy = PrecisionPolicy.uniform(8, 8)
+        _SETUP_CACHE.append((cfg, params, policy))
+    return _SETUP_CACHE[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+def _requests(cfg, rng, lens, gen=GEN, stagger=2, temps=None):
+    return [
+        Request(
+            rid=i,
+            tokens=rng.integers(0, cfg.vocab_size, (s,)),
+            max_new_tokens=gen,
+            temperature=0.0 if temps is None else temps[i],
+            arrival_step=i * stagger,
+        )
+        for i, s in enumerate(lens)
+    ]
+
+
+def _lockstep_reference(cfg, params, policy, req, gen):
+    eng = Engine(cfg, params, policy, max_len=req.tokens.size + gen)
+    toks, _ = eng.generate(jnp.asarray(req.tokens)[None, :], gen)
+    return np.asarray(toks[0])
+
+
+# --------------------------------------------------------------------------
+# Engine.generate decode-path A/Bs
+# --------------------------------------------------------------------------
+
+
+def test_engine_plane_cache_parity(setup, rng):
+    """The decompose-once weight-plane cache must not change tokens."""
+    cfg, params, policy = setup
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    with_cache, _ = Engine(cfg, params, policy, max_len=16).generate(prompts, GEN)
+    without, _ = Engine(
+        cfg, params, policy, max_len=16, plane_cache=False
+    ).generate(prompts, GEN)
+    np.testing.assert_array_equal(np.asarray(with_cache), np.asarray(without))
+
+
+def test_engine_fused_epilogue_flag_parity(setup, rng):
+    """--no-fused (fuse_epilogue=False) is a bit-identical A/B switch."""
+    cfg, params, _ = setup
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    auto = PrecisionPolicy.uniform(8, 8, level="bitplane")
+    staged = PrecisionPolicy.uniform(8, 8, level="bitplane", fuse_epilogue=False)
+    t_auto, _ = Engine(cfg, params, auto, max_len=16).generate(prompts, GEN)
+    t_staged, _ = Engine(cfg, params, staged, max_len=16).generate(prompts, GEN)
+    np.testing.assert_array_equal(np.asarray(t_auto), np.asarray(t_staged))
+
+
+def test_engine_sample_fn_hook(setup, rng):
+    """Greedy default == explicit greedy; temperature sampling is
+    deterministic under a fixed seed and stays inside the real vocab."""
+    cfg, params, policy = setup
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    default, _ = Engine(cfg, params, policy, max_len=16).generate(prompts, GEN)
+    explicit, _ = Engine(
+        cfg, params, policy, max_len=16, sample_fn=sampling.greedy
+    ).generate(prompts, GEN)
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
+
+    hot = Engine(
+        cfg, params, policy, max_len=16,
+        sample_fn=sampling.make_sample_fn(1.0), seed=7,
+    )
+    t1, _ = hot.generate(prompts, GEN)
+    t2, _ = hot.generate(prompts, GEN)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert int(jnp.max(t1)) < cfg.vocab_size
+    assert not np.array_equal(np.asarray(t1), np.asarray(default))
+
+
+def test_sample_tokens_temp_zero_rows_exactly_greedy(rng):
+    logits = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    temps = jnp.asarray([0.0, 2.0, 0.0, 0.5], jnp.float32)
+    out = sampling.sample_tokens(logits, temps, jax.random.PRNGKey(3))
+    ref = sampling.greedy(logits)
+    np.testing.assert_array_equal(np.asarray(out)[[0, 2]], np.asarray(ref)[[0, 2]])
+
+
+# --------------------------------------------------------------------------
+# Continuous batching vs lockstep
+# --------------------------------------------------------------------------
+
+
+def test_cb_bit_identical_to_lockstep_mixed_lengths(setup, rng):
+    """The acceptance criterion: mixed prompt lengths arriving staggered,
+    fewer slots than requests (queueing + slot reuse), bf16 KV — every
+    request's tokens match its per-request lockstep run bit for bit."""
+    cfg, params, policy = setup
+    reqs = _requests(cfg, rng, lens=[4, 8, 16], stagger=2)
+    engine = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=2, max_len=16 + GEN, kv_quant=False
+    )
+    results, stats = engine.run(reqs)
+    assert stats["admitted"] == len(reqs)
+    assert stats["peak_occupancy"] <= 2
+    for req in reqs:
+        ref = _lockstep_reference(cfg, params, policy, req, GEN)
+        np.testing.assert_array_equal(results[req.rid], ref)
+
+
+def test_cb_kv_quant_shrinks_cache_and_keeps_prefill_exact(setup, rng):
+    """int8 KV: >= 1.5x fewer cache bytes; the first token comes from
+    prefill logits (raw-precision attention) so it must stay exact."""
+    cfg, params, policy = setup
+    reqs = _requests(cfg, rng, lens=[4, 8], stagger=1)
+    kw = dict(n_slots=2, max_len=8 + GEN)
+    quant = ContinuousBatchingEngine(cfg, params, policy, kv_quant=True, **kw)
+    exact = ContinuousBatchingEngine(cfg, params, policy, kv_quant=False, **kw)
+    rq, sq = quant.run(reqs)
+    rx, sx = exact.run(reqs)
+    assert sx["kv_cache_bytes"] / sq["kv_cache_bytes"] >= 1.5
+    for req in reqs:
+        assert rq[req.rid].shape == (GEN,)
+        assert rq[req.rid][0] == rx[req.rid][0]
+        assert int(rq[req.rid].max()) < cfg.vocab_size
+
+
+def test_cb_per_request_temperature(setup, rng):
+    """The scheduler carries per-request sampling params: a greedy request
+    batched with a hot one still decodes bit-identically to lockstep."""
+    cfg, params, policy = setup
+    reqs = _requests(cfg, rng, lens=[8, 8], stagger=0, temps=[0.0, 1.5])
+    engine = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=2, max_len=8 + GEN, kv_quant=False
+    )
+    results, _ = engine.run(reqs)
+    ref = _lockstep_reference(cfg, params, policy, reqs[0], GEN)
+    np.testing.assert_array_equal(results[0], ref)
+    assert int(results[1].max()) < cfg.vocab_size
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_cb_slot_eviction_readmission_no_kv_leak(seed, kv_quant):
+    """Property: a slot's previous tenant must never influence a later
+    one. With one slot, every request reuses the same KV/scale buffers;
+    running [filler, probe] must give the probe exactly the tokens it
+    gets running alone in a fresh engine (holds for int8 scales too —
+    insert_slot overwrites the slot's whole extent)."""
+    cfg, params, policy = _setup()
+    prng = np.random.default_rng(seed)
+    lens = [int(prng.integers(2, 9)), int(prng.integers(2, 9))]
+    gen = 3
+    filler, probe = _requests(cfg, prng, lens=lens, gen=gen, stagger=0)
+    kw = dict(n_slots=1, max_len=8 + gen, kv_quant=kv_quant)
+    alone, _ = ContinuousBatchingEngine(cfg, params, policy, **kw).run(
+        [Request(rid=probe.rid, tokens=probe.tokens, max_new_tokens=gen)]
+    )
+    shared, _ = ContinuousBatchingEngine(cfg, params, policy, **kw).run(
+        [filler, probe]
+    )
+    np.testing.assert_array_equal(shared[probe.rid], alone[probe.rid])
+
+
+def test_scheduler_admission_order_and_stats():
+    sched = SlotScheduler(2)
+    for i, (arr, gen) in enumerate([(0, 2), (0, 1), (1, 3)]):
+        sched.submit(
+            Request(rid=i, tokens=np.array([1, 2]), max_new_tokens=gen,
+                    arrival_step=arr)
+        )
+    admitted = []
+    for slot, req in sched.admissible(0):
+        admitted.append((slot, req.rid))
+        sched.start(slot, req, first_token=9)
+    assert admitted == [(0, 0), (1, 1)]  # FIFO into lowest free slots
+    # rid 1 (max_new_tokens=1) finished at start: slot 1 free again
+    assert sched.finished[1].tolist() == [9]
+    for slot, req in sched.admissible(1):
+        sched.start(slot, req, first_token=7)
+    assert sched.active_slots == [0, 1]
+    assert sched.record(0, 5)  # rid 0 hits its 2-token budget -> evicted
+    assert sched.finished[0].tolist() == [9, 5]
+    assert not sched.record(1, 4)
+    assert sched.record(1, 6)
+    assert sched.done
+    s = sched.stats()
+    assert (s.admitted, s.evicted, s.peak_occupancy) == (3, 3, 2)
+
+
+# --------------------------------------------------------------------------
+# Quantized KV flash-attention kernel (interpret mode = emulated TPU)
+# --------------------------------------------------------------------------
+
+
+def test_flash_attention_per_sequence_kv_lens(rng):
+    q = jnp.asarray(rng.standard_normal((3, 4, 8, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((3, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((3, 2, 32, 16)), jnp.bfloat16)
+    kv_lens = jnp.asarray([5, 32, 17], jnp.int32)
+    out = ops.flash_attention(
+        q, k, v, causal=False, backend="interpret", kv_lens=kv_lens,
+        block_q=8, block_k=16,
+    )
+    ref = ops.flash_attention(q, k, v, causal=False, backend="jnp", kv_lens=kv_lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_flash_attention_int8_kv_in_kernel_dequant(rng):
+    """int8 K/V + per-(position, head) scales inside the kernel must match
+    attending the explicitly dequantized cache."""
+    q = jnp.asarray(rng.standard_normal((2, 4, 8, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((2, 2, 32, 16)), jnp.bfloat16)
+    kv_lens = jnp.asarray([9, 26], jnp.int32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    out = ops.flash_attention(
+        q, kq, vq, causal=False, backend="interpret", kv_lens=kv_lens,
+        k_scale=ks, v_scale=vs, block_q=8, block_k=16,
+    )
+    kd = (kq.astype(jnp.float32) * ks[..., None]).astype(jnp.bfloat16)
+    vd = (vq.astype(jnp.float32) * vs[..., None]).astype(jnp.bfloat16)
+    ref = ops.flash_attention(
+        q, kd, vd, causal=False, backend="interpret", kv_lens=kv_lens,
+        block_q=8, block_k=16,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_quantize_kv_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((4, 7, 3, 32)), jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == x.shape[:-1]
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(s)[..., None] - np.asarray(x))
+    # symmetric int8: error bounded by half a quantization step per vector
+    assert np.all(err <= np.asarray(s)[..., None] * 0.5 + 1e-7)
+
+
+def test_cache_kv_bytes_accounting(setup):
+    cfg, _, _ = setup
+    bf16 = init_cache(cfg, 4, 32, jnp.bfloat16, kv_quant=False)
+    int8 = init_cache(cfg, 4, 32, jnp.bfloat16, kv_quant=True)
+    d = cfg.head_dim
+    assert cache_kv_bytes(bf16) / cache_kv_bytes(int8) == pytest.approx(
+        2 * d / (d + 4)
+    )

@@ -5,7 +5,6 @@ through the full model stack."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.core.precision import PrecisionPolicy

@@ -1,9 +1,6 @@
 """End-to-end trainer: loss goes down, resume is exact, variants run."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.core.precision import PrecisionPolicy
