@@ -9,7 +9,12 @@ committed baseline and fails (exit 1) when:
   machines far better than absolute microseconds;
 * any ``parity`` entry in the fresh file reports something other than
   ``"ok"`` — bit-exactness (continuous batching vs lockstep, int8-KV
-  first tokens) is a hard invariant, not a tolerance.
+  first tokens) and the no-requantization invariant of the runtime
+  precision sweep are hard invariants, not tolerances;
+* the serving ``precision_sweep`` (decode tok/s at 4-bit vs 8-bit from
+  one stored decomposition) falls below ``--sweep-floor`` — plane-prefix
+  truncation does 1/4 the plane-pair work at 4-bit, so the ratio
+  collapsing toward 1x means the dial silently stopped truncating.
 
 Sections are matched by (bench section, config name, shape): the smoke
 sweep writes ``fused_linear_smoke`` so CI compares smoke shapes against
@@ -46,6 +51,31 @@ def _fused_speedups(doc: dict, section: str) -> dict[tuple, float]:
     return out
 
 
+def _sweep_failures(doc: dict, floor: float) -> list[str]:
+    """Runtime-precision sweep: 4-bit decode throughput vs 8-bit, from one
+    decomposition. Self-contained ratio (same host, same run), so it is
+    checked against an absolute floor rather than a committed baseline."""
+    sweep = doc.get("benches", {}).get("serving", {}).get("precision_sweep")
+    if not sweep:
+        # mirror the fused gate's no-overlap rule: a gate with nothing to
+        # check must fail loudly, not pass vacuously
+        return [
+            "no serving.precision_sweep section in the fresh run — "
+            "serving_bench stopped emitting the runtime-precision sweep "
+            "the gate is supposed to floor-check"
+        ]
+    got = sweep.get("speedup_4_vs_8", 0.0)
+    verdict = "ok" if got >= floor else "REGRESSED"
+    print(f"[gate] serving.precision_sweep: 4-bit vs 8-bit decode "
+          f"{got:.2f}x (floor {floor:.2f}x) {verdict}")
+    if got < floor:
+        return [
+            f"precision_sweep speedup_4_vs_8 {got:.2f}x below floor "
+            f"{floor:.2f}x — runtime truncation is not paying for itself"
+        ]
+    return []
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -66,6 +96,12 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--section", default="fused_linear_smoke",
         help="bench section holding the fused-vs-staged comparison",
+    )
+    ap.add_argument(
+        "--sweep-floor", type=float, default=1.5,
+        help="min tolerated 4-bit-vs-8-bit decode speedup in the serving "
+        "precision sweep (measured 3x+ on dev hosts; ratio-based so it "
+        "transfers across machines)",
     )
     args = ap.parse_args(argv)
 
@@ -103,6 +139,8 @@ def main(argv=None) -> int:
             "baseline — regenerate the committed BENCH_kernel.json with "
             "--smoke so CI has a baseline to gate against"
         )
+
+    failures.extend(_sweep_failures(fresh, args.sweep_floor))
 
     parity = _parity_failures(fresh)
     for p in parity:

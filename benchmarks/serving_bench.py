@@ -14,9 +14,15 @@ Reports, into the ``serving`` section of BENCH_kernel.json:
   accounting — the TPU HBM-traffic win, 1.94x at head_dim 128);
 * a ``parity`` verdict: continuous batching with ``--no-kv-quant``
   semantics must reproduce every lockstep request bit for bit — the
-  invariant the CI regression gate fails the build on.
+  invariant the CI regression gate fails the build on;
+* a ``precision_sweep`` column: decode tok/s at 8/6/4-bit from ONE 8-bit
+  weight decomposition (``set_precision`` plane-prefix truncation — the
+  paper's runtime reconfiguration as a serving feature), with a gated
+  verdict that zero weight re-quantization/decomposition ran during the
+  sweep and every dialed plan resolved to a cache-consuming route.
 
-CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]``.
+CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]
+[--precision-sweep]`` (the sweep alone).
 """
 
 from __future__ import annotations
@@ -29,8 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.core import plan as plan_mod
 from repro.core.precision import PrecisionPolicy
 from repro.launch.serve import ContinuousBatchingEngine, Engine
+from repro.models import quant
 from repro.models.transformer import init_params
 from repro.runtime.scheduler import Request
 
@@ -56,6 +64,75 @@ def _lockstep_baseline(cfg, params, policy, requests, gen):
     wall = max(time.time() - t0, 1e-9)
     total = gen * len(requests)
     return outputs, total / wall
+
+
+def precision_sweep(cfg, params, smoke: bool = False) -> dict:
+    """Decode tok/s at 8/6/4 bits from one 8-bit bitplane decomposition.
+
+    The engine is built (weights quantized + decomposed) once; each tier
+    is just ``set_precision`` — a plan swap. A wrapped
+    ``decompose_linear_weight`` proves no weight re-decomposition runs
+    during the sweep, and the plan registry is audited to show every
+    dialed matmul resolved to a truncated-cache route (the "no
+    re-quantization step in the trace" acceptance criterion).
+    """
+    policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+    if smoke:
+        lens, gen, n_slots = [4, 8], 6, 2
+    else:
+        lens, gen, n_slots = [8, 8, 16, 16], 16, 4
+    engine = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=n_slots, max_len=max(lens) + gen
+    )
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (s,)),
+                    max_new_tokens=gen, arrival_step=0)
+            for i, s in enumerate(lens)
+        ]
+
+    decompose_calls = {"n": 0}
+    real_decompose = quant.decompose_linear_weight
+
+    def counting(*a, **kw):
+        decompose_calls["n"] += 1
+        return real_decompose(*a, **kw)
+
+    tok_per_s = {}
+    quant.decompose_linear_weight = counting
+    try:
+        for bits in (8, 6, 4):
+            engine.set_precision(None if bits == 8 else bits)
+            engine.run(requests())  # warm: compile this tier's steps
+            _, stats = engine.run(requests())
+            tok_per_s[f"w{bits}a{bits}"] = round(stats["tok_per_s"], 2)
+    finally:
+        quant.decompose_linear_weight = real_decompose
+
+    # Registry audit: every plan resolved at a dialed width must consume
+    # the stored decomposition (truncation), never requantize the weight.
+    dialed = [
+        p for p in plan_mod.DEFAULT_REGISTRY.plans()
+        if p.w_shift > 0
+    ]
+    routes = sorted({p.kernel for p in dialed})
+    truncated_ok = (
+        decompose_calls["n"] == 0
+        and bool(dialed)
+        and all(p.trunc_cache and not p.requant_w for p in dialed)
+    )
+    return {
+        "workload": {"prompt_lens": lens, "gen": gen, "n_slots": n_slots},
+        "stored_bits": 8,
+        "tok_per_s": tok_per_s,
+        "speedup_4_vs_8": round(tok_per_s["w4a4"] / tok_per_s["w8a8"], 2),
+        "speedup_6_vs_8": round(tok_per_s["w6a6"] / tok_per_s["w8a8"], 2),
+        "requantize_calls_during_sweep": decompose_calls["n"],
+        "truncated_plan_routes": routes,
+        "verdict": "ok" if truncated_ok else "requantized",
+    }
 
 
 def serving_bench(json_path: str | None = None, smoke: bool = False):
@@ -101,6 +178,8 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         if res_q[req.rid][0] != base[req.rid][0]:
             first_tok_parity = "mismatch"
 
+    sweep = precision_sweep(cfg, params, smoke=smoke)
+
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
     d, full_d = cfg.head_dim, 128
@@ -134,9 +213,11 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
             "reduction_x": round(kv_reduction, 3),
             "analytic": analytic,
         },
+        "precision_sweep": sweep,
         "parity": {
             "cb_bf16_vs_lockstep_tokens": parity,
             "cb_int8_first_token": first_tok_parity,
+            "sweep_uses_truncated_cache": sweep["verdict"],
         },
         "note": (
             "lockstep serves mixed lengths as sequential batch-1 runs (its "
@@ -151,6 +232,8 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
         ("serving/kv_bytes_reduction_x", payload["kv_bytes"]["reduction_x"],
          f"parity_{parity}"),
+        ("serving/precision_sweep_4v8_x", sweep["speedup_4_vs_8"],
+         f"truncation_{sweep['verdict']}"),
     ]
     return rows
 
@@ -159,6 +242,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--precision-sweep", action="store_true",
+                    help="run only the runtime-precision sweep and print it")
     args = ap.parse_args()
-    for name, val, derived in serving_bench(args.json, smoke=args.smoke):
-        print(f"{name},{val},{derived}")
+    if args.precision_sweep:
+        import json as _json
+
+        cfg = get_reduced(ARCH)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        print(_json.dumps(precision_sweep(cfg, params, smoke=args.smoke), indent=2))
+    else:
+        for name, val, derived in serving_bench(args.json, smoke=args.smoke):
+            print(f"{name},{val},{derived}")

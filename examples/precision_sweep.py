@@ -10,6 +10,12 @@ reproduces that argument end-to-end in the framework:
 2. Mixed policy: sensitive layers (first/last block, LM head) at 8 bits,
    the rest at 4 — the per-layer dial recovering most of the uniform-8
    quality at near-uniform-4 cost.
+3. The *runtime* dial (plan API): quantize + decompose ONCE at 8 bits,
+   then run the same weight tree at 8/6/4 via
+   ``policy.with_runtime_bits`` — the execution plans
+   (:mod:`repro.core.plan`) consume only the top planes of the stored
+   decomposition (MSB-prefix truncation, zero re-quantization), exactly
+   the accelerator's effective-width register.
 
 Quality metric: KL(dense || quantized) of next-token distributions on
 random prompts (random-init weights; the *relative* ordering is what the
@@ -25,10 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_reduced
+from repro.core import plan as plan_mod
 from repro.core.precision import PrecisionPolicy
 from repro.core.systolic import SAConfig, matmul_total_cycles
 from repro.launch.inputs import make_batch
 from repro.models import forward, init_params
+from repro.models.quant import quantize_params
 
 
 def kl_from_dense(cfg, params, batch, dense_logits, policy):
@@ -79,6 +87,27 @@ def main():
     print(f"  {'mixed 8/4 (ends at 8)':24s} {kl:9.4f}   {int(avg):>18,d}")
     print("[sweep] the mixed policy sits between uniform-4 cost and "
           "uniform-8 quality — the paper's layer-wise dial.")
+
+    # 3. Runtime dial: one 8-bit decomposition, executed at 8/6/4 by
+    # plane-prefix truncation (no re-quantization between rows).
+    base = PrecisionPolicy.uniform(
+        8, 8, variant="booth", level="bitplane",
+        keep_dense=("frontend", "router"),
+    )
+    q_params = quantize_params(params, base, plane_cache=True)
+    print("[sweep] runtime dial: ONE stored 8-bit decomposition, truncated")
+    print(f"  {'runtime bits':24s} {'KL':>9s}")
+    for bits in (8, 6, 4):
+        pol = base.with_runtime_bits(bits, bits)
+        kl = kl_from_dense(cfg, q_params, batch, dense, pol)
+        print(f"  w{bits} (truncated from 8){'':4s} {kl:9.4f}")
+    # what the registry resolved the dialed matmuls to
+    truncated = [p for p in plan_mod.DEFAULT_REGISTRY.plans() if p.w_shift]
+    if truncated:
+        print("[sweep] example truncated plan:", truncated[0].describe())
+    print(f"[sweep] plan registry: {len(plan_mod.DEFAULT_REGISTRY)} plans, "
+          f"{plan_mod.DEFAULT_REGISTRY.hits} hits / "
+          f"{plan_mod.DEFAULT_REGISTRY.misses} misses")
 
 
 if __name__ == "__main__":

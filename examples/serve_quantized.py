@@ -1,10 +1,16 @@
 """End-to-end quantized serving — the paper's own deployment scenario.
 
 Weights are stored at the policy bit-width, activations quantize per
-token at runtime, and every projection executes through the bit-serial
-matmul. Serves batched requests (prefill + greedy decode) and compares
-precision configurations, including the two MAC variants, which must
-produce IDENTICAL tokens (both are exact integer matmuls — paper §III).
+token at runtime, and every projection executes through a compile-once
+:class:`repro.core.plan.MatmulPlan` (see DESIGN.md §7). Serves batched
+requests (prefill + greedy decode) and demonstrates:
+
+* precision as a RUNTIME knob: one engine, one 8-bit weight
+  decomposition, decoded at 8/6/4 bits via ``engine.set_precision`` —
+  the plans truncate the stored plane prefix, nothing is re-quantized;
+* the two MAC variants producing IDENTICAL tokens (both are exact
+  integer matmuls — paper §III);
+* bit-plane vs digit level agreement at the same width.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
           [--arch yi-6b] [--batch 4] [--prompt-len 32] [--gen 24]
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_reduced
+from repro.core import plan as plan_mod
 from repro.core.precision import PrecisionPolicy
 from repro.launch.serve import Engine
 from repro.models.transformer import init_params
@@ -46,37 +53,44 @@ def main():
     print(f"  dense bf16          : {tps:7.1f} tok/s   tokens[0,:8]="
           f"{[int(t) for t in np.asarray(ref_tokens[0, :8])]}")
 
-    # Quantized configs: the paper's runtime-precision dial
+    # Runtime precision dial: ONE engine, ONE 8-bit decomposition. Each
+    # tier is a plan swap (set_precision), not a requantization.
+    pol8 = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane",
+                                   keep_dense=("frontend", "router"))
+    eng = Engine(cfg, params, pol8, max_len=max_len)
     results = {}
     for bits in (8, 6, 4):
-        pol = PrecisionPolicy.uniform(
-            bits, bits, variant="booth", level="digit",
-            keep_dense=("frontend", "router"),
-        )
-        eng = Engine(cfg, params, pol, max_len=max_len)
+        eng.set_precision(None if bits == 8 else bits)
         toks, tps = eng.generate(prompts, args.gen)
         agree = float(jnp.mean((toks == ref_tokens).astype(jnp.float32)))
         results[bits] = toks
-        print(f"  w{bits}a{bits} booth/digit   : {tps:7.1f} tok/s   "
+        trunc = "stored width " if bits == 8 else "truncated    "
+        print(f"  w{bits}a{bits} {trunc}  : {tps:7.1f} tok/s   "
               f"agreement with dense: {agree:5.1%}")
 
     # MAC-variant equivalence: both are exact integer matmul -> same tokens
-    pol_s = PrecisionPolicy.uniform(8, 8, variant="sbmwc", level="digit",
-                                    keep_dense=("frontend", "router"))
-    eng = Engine(cfg, params, pol_s, max_len=max_len)
-    toks_s, _ = eng.generate(prompts, args.gen)
-    same = bool(jnp.array_equal(toks_s, results[8]))
+    # (compared at the digit level, the TPU-native execution).
+    tok_by_variant = {}
+    for variant in ("booth", "sbmwc"):
+        level = "digit" if variant == "booth" else "bitplane"
+        pol = PrecisionPolicy.uniform(8, 8, variant=variant, level=level,
+                                      keep_dense=("frontend", "router"))
+        e = Engine(cfg, params, pol, max_len=max_len)
+        tok_by_variant[variant], _ = e.generate(prompts, args.gen)
+    same = bool(jnp.array_equal(tok_by_variant["booth"], tok_by_variant["sbmwc"]))
     print(f"  w8a8 sbmwc == booth : {same} (exactness, paper §III)")
     assert same, "MAC variants diverged — integer path broken"
+    # ...and both match the bitplane engine's stored-width row above
+    same8 = bool(jnp.array_equal(tok_by_variant["booth"], results[8]))
+    print(f"  w8a8 digit==bitplane: {same8} (level equivalence)")
+    assert same8, "bitplane and digit levels diverged"
 
-    # Paper-faithful bit-plane level at low precision (b*b plane passes)
-    pol_bp = PrecisionPolicy.uniform(4, 4, variant="booth", level="bitplane",
-                                     keep_dense=("frontend", "router"))
-    eng = Engine(cfg, params, pol_bp, max_len=max_len)
-    toks_bp, tps = eng.generate(prompts, args.gen)
-    same4 = bool(jnp.array_equal(toks_bp, results[4]))
-    print(f"  w4a4 bitplane       : {tps:7.1f} tok/s   == digit level: {same4}")
-    assert same4, "bitplane and digit levels diverged"
+    reg = plan_mod.DEFAULT_REGISTRY
+    truncated = [p for p in reg.plans() if p.w_shift]
+    print(f"[serve] plan registry: {len(reg)} plans resolved "
+          f"({len(truncated)} truncated tiers), {reg.hits} hits")
+    if truncated:
+        print("[serve] e.g.", truncated[0].describe())
     print("[serve] OK")
 
 

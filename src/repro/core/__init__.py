@@ -4,9 +4,11 @@ precision policy, quantizers, and the systolic-array model."""
 from repro.core.bitplanes import (
     PlaneDecomposition,
     booth_nonzero_digit_count,
+    shift_requantize,
     signed_range,
     to_bitplanes,
     to_digits,
+    truncate_weight_planes,
 )
 from repro.core.bitserial import (
     bitserial_matmul,
@@ -14,6 +16,14 @@ from repro.core.bitserial import (
     quantized_matmul,
 )
 from repro.core.precision import MAX_BITS, LayerPrecision, PrecisionPolicy
+from repro.core.plan import (
+    DEFAULT_REGISTRY,
+    MatmulPlan,
+    PlanKey,
+    PlanRegistry,
+    make_plan,
+    plan_for_operands,
+)
 from repro.core.quantize import (
     Quantized,
     dequantize,
@@ -26,15 +36,23 @@ from repro.core import systolic
 __all__ = [
     "PlaneDecomposition",
     "booth_nonzero_digit_count",
+    "shift_requantize",
     "signed_range",
     "to_bitplanes",
     "to_digits",
+    "truncate_weight_planes",
     "bitserial_matmul",
     "plane_pass_count",
     "quantized_matmul",
     "MAX_BITS",
     "LayerPrecision",
     "PrecisionPolicy",
+    "DEFAULT_REGISTRY",
+    "MatmulPlan",
+    "PlanKey",
+    "PlanRegistry",
+    "make_plan",
+    "plan_for_operands",
     "Quantized",
     "dequantize",
     "fake_quant",

@@ -117,6 +117,16 @@ def to_bitplanes(x: jax.Array, bits: int, variant: Variant = "sbmwc") -> PlaneDe
         cur = ((u[None] >> shifts) & 1).astype(jnp.int8)
         prev = jnp.concatenate([jnp.zeros_like(cur[:1]), cur[:-1]], axis=0)
         planes = (prev - cur).astype(jnp.int8)  # {-1, 0, +1}
+        if bits < 32:
+            # Closed-range extension: ternary digits represent the CLOSED
+            # interval [-2^(b-1), +2^(b-1)] — +2^(b-1) is (0,..,0,+1) —
+            # but the two's-complement recode above wraps it to -2^(b-1).
+            # Booth prefix truncation rounds half up, so its requantized
+            # values live on the closed interval (see shift_requantize);
+            # fix the single wrapped value so the truncation oracle is
+            # exact. In-range inputs are untouched.
+            top = jnp.int8(2) * (x[None] == (1 << (bits - 1))).astype(jnp.int8)
+            planes = planes.at[bits - 1].add(top[0])
         return PlaneDecomposition(planes, weights)
 
     raise ValueError(f"unknown variant {variant!r}")
@@ -511,6 +521,103 @@ def make_weight_planes(
             level=level, variant=variant, w_bits=w_bits,
         )
     raise ValueError(f"no weight-plane cache for level {level!r}")
+
+
+# ---------------------------------------------------------------------------
+# Prefix truncation (runtime precision reconfiguration; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# Bit-plane decompositions are MSB-first prefix-truncatable: the top
+# ``to_bits`` planes of a ``from_bits``-bit decomposition are, after
+# dividing the plane weights by 2^(from-to), themselves a complete
+# ``to_bits``-bit decomposition of a requantized value. The planes axis is
+# leading and planes are stored LSB-first, so truncation is one slice of
+# the plane (or packed-word) tensor — no re-quantization and no new
+# decomposition work. The requantized value the kept planes represent is
+# variant-specific (the truncation invariant, asserted by tests):
+#
+#   * unsigned / sbmwc:  x >> s            (floor; plane-identical to a
+#                                           fresh decomposition of x >> s)
+#   * booth:             (x >> s) + bit_(s-1)(x)   (round half up: the
+#         dropped digit d_{s-1} = x_{s-2} - x_{s-1} leaves a +2^s * x_{s-1}
+#         carry in the kept prefix; value-identical — the kept digit
+#         string differs from a fresh recode but reconstructs the same
+#         integer, so matmul results are bit-identical)
+#
+# Booth's round-half-up can land on +2^(to-1) (one past the two's-
+# complement max) — representable in ternary signed digits and by the
+# closed-range extension of :func:`to_bitplanes`.
+
+
+def shift_requantize(
+    x: jax.Array, from_bits: int, to_bits: int, variant: Variant = "sbmwc"
+) -> jax.Array:
+    """Requantize ``from_bits``-bit integers to ``to_bits`` by the exact
+    value the truncated plane prefix represents (see above). The effective
+    scale of the result is ``2^(from_bits - to_bits)`` times the original.
+    """
+    if to_bits > from_bits:
+        raise ValueError(f"cannot requantize {from_bits} bits up to {to_bits}")
+    s = from_bits - to_bits
+    if s == 0:
+        return x
+    x = x.astype(jnp.int32)
+    if variant == "booth":
+        return (x >> s) + ((x >> (s - 1)) & 1)
+    return x >> s  # arithmetic shift: floor division by 2^s
+
+
+def truncate_packed(packed: PackedPlanes, to_bits: int, variant: Variant) -> PackedPlanes:
+    """Top-``to_bits`` plane prefix of a packed decomposition.
+
+    A pure slice of the leading planes axis of the packed words — the
+    dropped planes are never read, so a kernel consuming the result moves
+    ``to_bits/from_bits`` of the weight bytes. Weights are reindexed to
+    the fresh ``to_bits`` plane weights (the 2^s factor moves into the
+    caller's dequant scale).
+    """
+    from_bits = packed.n_planes
+    if not 1 <= to_bits <= from_bits:
+        raise ValueError(f"to_bits must be in [1, {from_bits}], got {to_bits}")
+    s = from_bits - to_bits
+    if s == 0:
+        return packed
+    return PackedPlanes(
+        mag=packed.mag[s:],
+        sign=None if packed.sign is None else packed.sign[s:],
+        k=packed.k,
+        axis=packed.axis,
+        weights=plane_weights(to_bits, variant),
+        block=packed.block,
+    )
+
+
+def truncate_weight_planes(wp: WeightPlanes, to_bits: int) -> WeightPlanes:
+    """Truncate a bit-plane weight cache to its top ``to_bits`` planes.
+
+    The result is a valid ``to_bits`` :class:`WeightPlanes` consuming the
+    *same* stored arrays (sliced views — zero decomposition work), so one
+    8-bit decomposition serves every precision below it. Digit-level
+    caches (radix 256) are not prefix-truncatable.
+    """
+    if wp.level != "bitplane":
+        raise ValueError(
+            f"only bitplane caches are prefix-truncatable, got level={wp.level!r}"
+        )
+    if not 1 <= to_bits <= wp.w_bits:
+        raise ValueError(f"to_bits must be in [1, {wp.w_bits}], got {to_bits}")
+    if to_bits == wp.w_bits:
+        return wp
+    s = wp.w_bits - to_bits
+    return WeightPlanes(
+        packed=None if wp.packed is None
+        else truncate_packed(wp.packed, to_bits, wp.variant),  # type: ignore[arg-type]
+        planes=None if wp.planes is None else wp.planes[s:],
+        weights=plane_weights(to_bits, wp.variant),  # type: ignore[arg-type]
+        level=wp.level,
+        variant=wp.variant,
+        w_bits=to_bits,
+    )
 
 
 def booth_nonzero_digit_count(x: jax.Array, bits: int) -> jax.Array:

@@ -1,0 +1,680 @@
+"""Compile-once execution plans for the bit-serial matmul.
+
+The kernel-facing API grew one boolean flag per PR (``packed=``,
+``fused=``, ``w_planes=``, ``epilogue=``, ``backend=``, ``bm=``/``bk=``),
+all re-resolved on every call. This module replaces that with the
+plan/execute split of BISMO's instruction-generation layer: a
+:class:`MatmulPlan` resolves *once* — kernel variant (fused / packed /
+staged / jnp oracle), tile sizes, pack layout, epilogue fusion — and
+``plan(x, w)`` executes with zero per-call dispatch logic. Plans are
+interned in a :class:`PlanRegistry` keyed on shape / precision / backend /
+cache layout, so repeated traces of the same layer fetch the identical
+plan object.
+
+On top of the split, plans make precision a *runtime* knob — the paper's
+headline feature (a bitSMM MAC synthesized for 16 bits runs at any
+effective width 1–16). Packed bit-plane decompositions are MSB-first
+prefix-truncatable (:func:`repro.core.bitplanes.truncate_weight_planes`),
+so :meth:`MatmulPlan.with_precision` re-plans to consume only the top
+planes of the existing decomposition: no re-quantization, no new weight
+bytes — an 8-bit weight cache serves 1..8-bit execution, and the serving
+engines swap plans mid-flight (``set_precision``).
+
+Plan lifecycle (DESIGN.md §7):
+
+    policy + layer name + shapes ──make_plan──► PlanKey ──registry──► MatmulPlan
+                                                     │ miss
+                                                _build_plan (dispatch
+                                                resolution, runs once)
+    plan(x_q, w_q, w_planes=…, epilogue=…)  ──► resolved kernel call
+    plan.with_precision(a', w')             ──► sibling plan, same stored
+                                                operands, truncated planes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import bitplanes as bp
+from repro.core import bitserial as bs
+from repro.core.precision import LayerPrecision, PrecisionPolicy
+
+__all__ = [
+    "MatmulPlan",
+    "PlanKey",
+    "PlanRegistry",
+    "DEFAULT_REGISTRY",
+    "make_plan",
+    "plan_for_operands",
+    "plan_cacheable",
+]
+
+
+def _ops():
+    # repro.kernels.ops imports this module lazily (its bitserial_matmul is
+    # a compatibility shim over plans); importing it lazily here breaks the
+    # cycle without an import-time dependency in either direction.
+    from repro.kernels import ops
+
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Keys and registry
+# ---------------------------------------------------------------------------
+
+
+def _cache_spec(wp: Optional[bp.WeightPlanes]) -> Optional[tuple]:
+    """Static descriptor of a weight-plane cache (route resolution only
+    needs the layout, never the array contents)."""
+    if wp is None:
+        return None
+    packed = wp.packed
+    return (
+        wp.level,
+        wp.variant,
+        int(wp.w_bits),
+        packed is not None,
+        None if packed is None else packed.block,
+        wp.planes is not None,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Everything plan resolution depends on — all static Python values,
+    hashable, and independent of array contents."""
+
+    m: int
+    k: int
+    n: int
+    a_bits: int  # executed activation width
+    w_bits: int  # executed weight width
+    a_in_bits: int  # width activations are *provided* at (>= a_bits)
+    w_in_bits: int  # width weights are *provided*/stored at (>= w_bits)
+    variant: str
+    level: str
+    mode: str
+    backend: str  # resolved (never "auto")
+    accum: str  # accumulator dtype name
+    has_epilogue: bool
+    cache: Optional[tuple]  # _cache_spec of the weight-plane cache
+    fused: Optional[bool]  # requested flag (None = auto)
+    packed: Optional[bool]  # requested flag (None = auto)
+    bm: Optional[int]  # requested tiles (None = auto)
+    bn: int
+    bk: Optional[int]
+
+
+class PlanRegistry:
+    """Interning cache: ``PlanKey -> MatmulPlan``.
+
+    ``get`` returns the *identical* plan object for a repeated key (the
+    cache-hit contract the tests assert), so dispatch resolution runs once
+    per distinct (shape, precision, backend, layout) combination per
+    process. ``hits``/``misses`` are observability counters.
+    """
+
+    def __init__(self) -> None:
+        self._plans: dict[PlanKey, "MatmulPlan"] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: PlanKey) -> "MatmulPlan":
+        plan = self._plans.get(key)
+        if plan is None:
+            self.misses += 1
+            plan = _build_plan(key, self)
+            self._plans[key] = plan
+        else:
+            self.hits += 1
+        return plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def plans(self) -> tuple["MatmulPlan", ...]:
+        """Snapshot of every resolved plan (public enumeration — the bench
+        truncation audit and the examples introspect routes through this)."""
+        return tuple(self._plans.values())
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+
+#: Process-wide default registry (``make_plan`` / ``with_precision`` use it
+#: unless given another one; tests may instantiate private registries).
+DEFAULT_REGISTRY = PlanRegistry()
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution (the one-time dispatch logic)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_packed(packed: Optional[bool], backend: str, level: str) -> bool:
+    if level != "bitplane":
+        return False
+    if packed is None:
+        return backend == "pallas"
+    return bool(packed)
+
+
+def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
+    """Port of the per-call flag-resolution tree that used to live in
+    ``ops.bitserial_matmul`` — now run exactly once per PlanKey."""
+    ops = _ops()
+    serial = key.mode == "fully_serial"
+    int32_acc = key.accum == "int32"
+    kernel_ok = (
+        key.level == "bitplane" or (key.level == "digit" and key.variant == "booth")
+    ) and int32_acc
+    use_packed = serial and int32_acc and _resolve_packed(key.packed, key.backend, key.level)
+    if key.packed and not use_packed:
+        raise ValueError(
+            "packed=True requires level='bitplane', mode='fully_serial' and "
+            f"int32 accumulation; got level={key.level!r}, mode={key.mode!r}, "
+            f"accum_dtype={key.accum}"
+        )
+
+    fused_ok = (
+        key.has_epilogue
+        and serial
+        and int32_acc
+        and key.level == "bitplane"
+        and key.variant in ("sbmwc", "booth")
+        and key.a_bits <= 8
+        and key.w_bits <= 8
+    )
+    if key.fused and not fused_ok:
+        raise ValueError(
+            "fused=True requires an epilogue, level='bitplane', "
+            "mode='fully_serial', int32 accumulation and <=8-bit operands; "
+            f"got epilogue={'set' if key.has_epilogue else None}, "
+            f"level={key.level!r}, mode={key.mode!r}, "
+            f"a_bits={key.a_bits}, w_bits={key.w_bits}"
+        )
+    use_fused = fused_ok and key.backend != "jnp" and key.fused is not False
+
+    # Cache usability: the cache must hold the operand as *stored*
+    # (w_in_bits); executing below that width truncates its plane prefix
+    # (bitplane level only — radix-256 digits are not truncatable).
+    cache = key.cache
+    w_shift = key.w_in_bits - key.w_bits
+    cache_ok = (
+        cache is not None
+        and serial
+        and int32_acc
+        and cache[0] == key.level
+        and cache[1] == key.variant
+        and cache[2] == key.w_in_bits
+        and (w_shift == 0 or key.level == "bitplane")
+    )
+    fused_cache_ok = cache_ok and cache[3] and cache[4] is not None
+    if use_fused and cache_ok and not fused_cache_ok and key.fused is None:
+        # A cache in the global planar layout can't feed the fused kernel;
+        # auto mode keeps the decompose-once staged path instead of
+        # silently re-packing the static weight every call.
+        use_fused = False
+
+    # Route selection (static).
+    if use_fused:
+        kernel = "fused_cached" if fused_cache_ok else "fused_repack"
+    elif cache_ok:
+        if key.backend == "jnp" or (key.level == "digit" and key.variant != "booth"):
+            kernel = "cached_scan"
+        elif key.level == "bitplane" and use_packed and cache[3]:
+            kernel = "cached_packed"
+        else:
+            kernel = "cached_planes"
+    elif (key.backend == "jnp" and not use_packed) or not kernel_ok or not serial:
+        kernel = "oracle"
+    elif use_packed:
+        kernel = "staged_packed"
+    else:
+        kernel = "staged"
+
+    # Tile resolution (once; executors pass explicit tiles to the kernel
+    # wrappers, which never override explicit values).
+    bm, bk = ops.auto_tiles(key.m, key.k, key.bm, key.bk)
+    if key.bm is None and kernel in ("fused_cached", "fused_repack", "staged", "cached_planes"):
+        bm = ops._int8_bm(bm)  # these kernels consume int8 operand tiles
+    pack_block = bk  # fused_repack packs the weight with the K tile as block
+
+    a_shift = key.a_in_bits - key.a_bits
+    requant_w = w_shift > 0 and kernel in (
+        "fused_repack", "staged", "staged_packed", "oracle"
+    )
+    trunc_cache = w_shift > 0 and kernel.startswith(("cached", "fused_cached"))
+    return MatmulPlan(
+        key=key,
+        registry=registry,
+        kernel=kernel,
+        bm=bm,
+        bn=key.bn,
+        bk=bk,
+        pack_block=pack_block,
+        a_shift=a_shift,
+        w_shift=w_shift,
+        scale_mult=float(1 << (a_shift + w_shift)),
+        requant_w=requant_w,
+        trunc_cache=trunc_cache,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Executors — one per resolved kernel route, zero flag logic inside
+# ---------------------------------------------------------------------------
+
+
+def _shift_activations(x, from_bits: int, to_bits: int, variant: str):
+    """Runtime activation-width reduction for operands provided at a wider
+    quantization (``with_precision`` on an existing plan). Booth's round
+    half up saturates at the two's-complement max so the in-kernel
+    bit-slicer and the jnp oracle see identical values."""
+    q = bp.shift_requantize(x, from_bits, to_bits, variant)
+    if variant == "booth":
+        q = jnp.minimum(q, (1 << (to_bits - 1)) - 1)
+    return q.astype(jnp.int8 if to_bits <= 8 else jnp.int32)
+
+
+def _finish(plan: "MatmulPlan", out2, lead, ep):
+    ops = _ops()
+    out = out2.reshape(lead + (out2.shape[-1],))
+    return out if ep is None else ops.apply_epilogue(out, ep)
+
+
+def _trunc(plan: "MatmulPlan", wp: bp.WeightPlanes) -> bp.WeightPlanes:
+    return bp.truncate_weight_planes(wp, plan.key.w_bits) if plan.trunc_cache else wp
+
+
+def _exec_fused_cached(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    packed_w = _trunc(plan, wp).packed
+    ep2 = ep._replace(a_scale=ep.a_scale.reshape(-1, 1))
+    out2 = ops.fused_linear(
+        x2, packed_w, ep2, a_bits=key.a_bits, variant=key.variant,
+        backend=key.backend, bm=plan.bm, bn=plan.bn,
+    )
+    return out2.reshape(lead + (packed_w.mag.shape[-1],))
+
+
+def _exec_fused_repack(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    dec_w = bp.to_bitplanes(w, key.w_bits, key.variant)
+    packed_w = bp.pack_decomposition(
+        dec_w, axis=-2, variant=key.variant, block=plan.pack_block
+    )
+    ep2 = ep._replace(a_scale=ep.a_scale.reshape(-1, 1))
+    out2 = ops.fused_linear(
+        x2, packed_w, ep2, a_bits=key.a_bits, variant=key.variant,
+        backend=key.backend, bm=plan.bm, bn=plan.bn,
+    )
+    return out2.reshape(lead + (packed_w.mag.shape[-1],))
+
+
+def _exec_cached_packed(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    wp_eff = _trunc(plan, wp)
+    dec_a = bp.to_bitplanes(x2, key.a_bits, key.variant)
+    pw = ops._pair_weights(dec_a.weights, wp_eff.weights)
+    pa = bp.pack_planes(
+        dec_a.planes, axis=-1, ternary=key.variant == "booth",
+        block=wp_eff.packed.block,
+    )
+    out2 = ops.plane_matmul_packed(
+        pa, wp_eff.packed, pw, backend=key.backend,
+        bm=plan.bm, bn=plan.bn, bk=plan.bk,
+    )
+    return _finish(plan, out2, lead, ep)
+
+
+def _exec_cached_planes(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    wp_eff = _trunc(plan, wp)
+    if key.level == "bitplane":
+        dec_a = bp.to_bitplanes(x2, key.a_bits, key.variant)
+        wpl = (
+            wp_eff.planes
+            if wp_eff.planes is not None
+            else bp.unpack_planes(wp_eff.packed)
+        )
+    else:
+        dec_a = bp.to_digits(x2, key.a_bits, key.variant)
+        wpl = wp_eff.planes
+    pw = ops._pair_weights(dec_a.weights, wp_eff.weights)
+    out2 = ops.plane_matmul(
+        dec_a.planes.astype(jnp.int8), wpl.astype(jnp.int8), pw,
+        backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+    )
+    return _finish(plan, out2, lead, ep)
+
+
+def _exec_cached_scan(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    out2 = ops._matmul_cached_jnp(
+        x2, _trunc(plan, wp), a_bits=key.a_bits, variant=key.variant, level=key.level
+    )
+    return _finish(plan, out2, lead, ep)
+
+
+def _exec_staged(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if key.level == "bitplane":
+        dec_a = bp.to_bitplanes(x2, key.a_bits, key.variant)
+        dec_w = bp.to_bitplanes(w, key.w_bits, key.variant)
+    else:
+        dec_a = bp.to_digits(x2, key.a_bits, key.variant)
+        dec_w = bp.to_digits(w, key.w_bits, key.variant)
+    pw = ops._pair_weights(dec_a.weights, dec_w.weights)
+    if plan.kernel == "staged_packed":
+        ternary = key.variant == "booth"
+        pa = bp.pack_planes(dec_a.planes, axis=-1, ternary=ternary)
+        pwk = bp.pack_planes(dec_w.planes, axis=-2, ternary=ternary)
+        out2 = ops.plane_matmul_packed(
+            pa, pwk, pw, backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk
+        )
+    else:
+        out2 = ops.plane_matmul(
+            dec_a.planes.astype(jnp.int8), dec_w.planes.astype(jnp.int8), pw,
+            backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        )
+    return _finish(plan, out2, lead, ep)
+
+
+def _exec_oracle(plan, x, w, wp, ep):
+    ops = _ops()
+    key = plan.key
+    acc = bs.bitserial_matmul(
+        x, w, a_bits=key.a_bits, w_bits=key.w_bits, variant=key.variant,
+        level=key.level, mode=key.mode, accum_dtype=jnp.dtype(key.accum),
+    )
+    return acc if ep is None else ops.apply_epilogue(acc, ep)
+
+
+_EXECUTORS: dict[str, Callable] = {
+    "fused_cached": _exec_fused_cached,
+    "fused_repack": _exec_fused_repack,
+    "cached_packed": _exec_cached_packed,
+    "cached_planes": _exec_cached_planes,
+    "cached_scan": _exec_cached_scan,
+    "staged_packed": _exec_staged,
+    "staged": _exec_staged,
+    "oracle": _exec_oracle,
+}
+
+
+# ---------------------------------------------------------------------------
+# MatmulPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPlan:
+    """A fully-resolved bit-serial matmul: call it with operands.
+
+    ``plan(x_q, w_q, w_planes=…, epilogue=…)`` runs the route this plan
+    resolved to, with the tiles it resolved, period — no per-call flag
+    logic. Unused operands may be omitted (a cached-route plan never reads
+    ``w_q``; an uncached one never reads ``w_planes``).
+
+    ``with_precision(a_bits, w_bits)`` returns the sibling plan executing
+    at a lower width against the *same* stored operands: weight planes by
+    MSB-prefix truncation of the existing decomposition (or shift
+    requantization on cache-less routes), activations by shift. The
+    dequant correction ``2^(a_shift + w_shift)`` folds into the epilogue's
+    ``w_scale`` — exact in f32. Calls without an epilogue return the raw
+    truncated-precision accumulator (scales are then the caller's).
+    """
+
+    key: PlanKey
+    #: owning registry — with_precision interns sibling plans here, so a
+    #: private registry never leaks dialed plans into the global one
+    registry: "PlanRegistry" = dataclasses.field(compare=False, repr=False)
+    kernel: str
+    bm: int
+    bn: int
+    bk: int
+    pack_block: int
+    a_shift: int
+    w_shift: int
+    scale_mult: float
+    requant_w: bool
+    trunc_cache: bool
+
+    def __call__(self, x, w=None, *, w_planes=None, epilogue=None):
+        key = self.key
+        if key.has_epilogue != (epilogue is not None):
+            raise ValueError(
+                f"plan was resolved {'with' if key.has_epilogue else 'without'} "
+                f"an epilogue but called {'without' if epilogue is None else 'with'} "
+                "one; build a matching plan (has_epilogue=)"
+            )
+        if x.shape[-1] != key.k:
+            raise ValueError(f"plan expects K={key.k}, got x K={x.shape[-1]}")
+        if self.a_shift:
+            x = _shift_activations(x, key.a_in_bits, key.a_bits, key.variant)
+        if epilogue is not None and self.scale_mult != 1.0:
+            epilogue = epilogue._replace(w_scale=epilogue.w_scale * self.scale_mult)
+        if self.requant_w:
+            w = bp.shift_requantize(w, key.w_in_bits, key.w_bits, key.variant)
+        return _EXECUTORS[self.kernel](self, x, w, w_planes, epilogue)
+
+    def with_precision(
+        self, a_bits: Optional[int] = None, w_bits: Optional[int] = None
+    ) -> "MatmulPlan":
+        """Sibling plan at a lower runtime precision (same stored operands).
+
+        ``None`` keeps an operand at this plan's width. The ceiling is the
+        width the operands are *provided* at (``a_in_bits``/``w_in_bits``)
+        — the software analogue of the accelerator's synthesis-time
+        maximum. Repeated calls intern in the registry, so switching back
+        and forth costs nothing after the first resolution.
+        """
+        a = self.key.a_bits if a_bits is None else a_bits
+        w = self.key.w_bits if w_bits is None else w_bits
+        if not 1 <= a <= self.key.a_in_bits:
+            raise ValueError(
+                f"a_bits must be in [1, {self.key.a_in_bits}] "
+                f"(the provided operand width), got {a}"
+            )
+        if not 1 <= w <= self.key.w_in_bits:
+            raise ValueError(
+                f"w_bits must be in [1, {self.key.w_in_bits}] "
+                f"(the stored decomposition width), got {w}"
+            )
+        if (a, w) == (self.key.a_bits, self.key.w_bits):
+            return self
+        return self.registry.get(
+            dataclasses.replace(self.key, a_bits=a, w_bits=w)
+        )
+
+    def describe(self) -> str:
+        k = self.key
+        s = (
+            f"MatmulPlan[{k.m}x{k.k}x{k.n}] w{k.w_bits}a{k.a_bits} "
+            f"{k.level}/{k.variant} -> {self.kernel} backend={k.backend} "
+            f"tiles=(bm={self.bm}, bn={self.bn}, bk={self.bk})"
+        )
+        if self.a_shift or self.w_shift:
+            s += f" trunc(w {k.w_in_bits}->{k.w_bits}, a {k.a_in_bits}->{k.a_bits})"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _norm_shapes(shapes) -> Tuple[int, int, int]:
+    """(m, k, n) ints, or ((…, k), (k, n)) shape pair."""
+    if len(shapes) == 3 and all(isinstance(s, int) for s in shapes):
+        return tuple(shapes)  # type: ignore[return-value]
+    if len(shapes) == 2:
+        x_shape, w_shape = shapes
+        m = 1
+        for d in x_shape[:-1]:
+            m *= int(d)
+        return m, int(x_shape[-1]), int(w_shape[-1])
+    raise ValueError(f"shapes must be (m, k, n) or (x_shape, w_shape), got {shapes!r}")
+
+
+def plan_for_operands(
+    shapes,
+    *,
+    a_bits: int,
+    w_bits: int,
+    variant: str = "booth",
+    level: str = "digit",
+    mode: str = "fully_serial",
+    backend: str = "auto",
+    accum_dtype: Any = jnp.int32,
+    has_epilogue: bool = False,
+    w_planes: Optional[bp.WeightPlanes] = None,
+    a_in_bits: Optional[int] = None,
+    w_in_bits: Optional[int] = None,
+    fused: Optional[bool] = None,
+    packed: Optional[bool] = None,
+    bm: Optional[int] = None,
+    bn: int = 128,
+    bk: Optional[int] = None,
+    registry: Optional[PlanRegistry] = None,
+) -> MatmulPlan:
+    """Policy-free plan construction from explicit operand metadata (the
+    compatibility shim and kernel-level callers use this; model code goes
+    through :func:`make_plan`)."""
+    m, k, n = _norm_shapes(shapes)
+    key = PlanKey(
+        m=m, k=k, n=n,
+        a_bits=a_bits, w_bits=w_bits,
+        a_in_bits=a_bits if a_in_bits is None else a_in_bits,
+        w_in_bits=w_bits if w_in_bits is None else w_in_bits,
+        variant=variant, level=level, mode=mode,
+        backend=_ops().resolve_backend(backend),
+        accum=jnp.dtype(accum_dtype).name,
+        has_epilogue=has_epilogue,
+        cache=_cache_spec(w_planes),
+        fused=fused, packed=packed,
+        bm=bm, bn=bn, bk=bk,
+    )
+    return (DEFAULT_REGISTRY if registry is None else registry).get(key)
+
+
+def make_plan(
+    policy: PrecisionPolicy,
+    layer_name: str,
+    shapes,
+    backend: str = "auto",
+    *,
+    w_planes: Optional[bp.WeightPlanes] = None,
+    w_stored_bits: Optional[int] = None,
+    has_epilogue: bool = True,
+    accum_dtype: Any = None,
+    registry: Optional[PlanRegistry] = None,
+    bm: Optional[int] = None,
+    bn: int = 128,
+    bk: Optional[int] = None,
+) -> MatmulPlan:
+    """Resolve the execution plan for one layer of a policy.
+
+    ``shapes``: ``(m, k, n)`` or ``(x_shape, w_shape)``. ``w_stored_bits``
+    is the width the weights are stored/decomposed at (the configured
+    policy width on the serving path); when the policy's runtime dial
+    (:meth:`PrecisionPolicy.with_runtime_bits`) lowers the executed width
+    below it, the plan consumes the stored decomposition's plane prefix.
+    Activations are assumed quantized at the *effective* width by the
+    caller (they are re-quantized per token anyway).
+    """
+    configured = policy.lookup(layer_name)
+    if not configured.active:
+        raise ValueError(f"layer {layer_name!r}: policy is inactive — no plan to build")
+    eff = policy.effective(configured)
+    if accum_dtype is None:
+        accum_dtype = jnp.int32 if max(eff.w_bits, eff.a_bits) <= 8 else jnp.float32
+    return plan_for_operands(
+        shapes,
+        a_bits=eff.a_bits,
+        w_bits=eff.w_bits,
+        a_in_bits=eff.a_bits,
+        w_in_bits=configured.w_bits if w_stored_bits is None else w_stored_bits,
+        variant=policy.variant,
+        level=policy.level,
+        mode=policy.mode,
+        backend=backend,
+        accum_dtype=accum_dtype,
+        has_epilogue=has_epilogue,
+        w_planes=w_planes,
+        fused=policy.fuse_epilogue,
+        bm=bm, bn=bn, bk=bk,
+        registry=registry,
+    )
+
+
+def plan_cacheable(policy: PrecisionPolicy, prec: LayerPrecision) -> bool:
+    """Whether a layer at ``prec`` can use the decompose-once weight-plane
+    cache (and therefore plan-time truncation): the int32-exact
+    fully-serial kernel configs — wider configs accumulate in f32 and
+    resolve to the jnp oracle anyway."""
+    return (
+        policy.mode == "fully_serial"
+        and policy.level in ("bitplane", "digit")
+        and prec.active
+        and max(prec.w_bits, prec.a_bits) <= 8
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deprecation plumbing for the legacy flag API
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set[str] = set()
+
+_DEPRECATION_TEXT = {
+    "packed": "bitserial_matmul(packed=…) is deprecated; packing is resolved "
+    "once at plan time — use repro.core.plan.make_plan / plan_for_operands",
+    "fused": "bitserial_matmul(fused=…) is deprecated; epilogue fusion is "
+    "resolved once at plan time — use repro.core.plan.make_plan / "
+    "plan_for_operands",
+    "epilogue": "bitserial_matmul(epilogue=…) is deprecated; build a plan "
+    "with has_epilogue=True and pass the epilogue to the plan call",
+}
+
+
+def _warn_deprecated(kw: str) -> None:
+    """One DeprecationWarning per legacy kwarg per process (the shim keeps
+    working for one release; see ISSUE 4 satellite 1)."""
+    if kw in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(kw)
+    warnings.warn(_DEPRECATION_TEXT[kw], DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    _DEPRECATION_WARNED.clear()

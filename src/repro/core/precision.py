@@ -61,6 +61,21 @@ class PrecisionPolicy:
     level: str = "digit"
     mode: str = "fully_serial"
     fuse_epilogue: Optional[bool] = None
+    #: Runtime precision dial: ``(a_bits, w_bits)`` ceiling applied on top
+    #: of the configured per-layer bits (never raising them). The paper's
+    #: effective-width register: the *configured* bits are the synthesis/
+    #: storage width (weights are stored and decomposed at them), the
+    #: runtime bits are what a step actually consumes — weight planes by
+    #: MSB-prefix truncation of the existing decomposition, activations by
+    #: quantizing at the lower width directly (they are per-token anyway).
+    #: ``None`` entries leave that operand at its configured width.
+    runtime_bits: Optional[Tuple[Optional[int], Optional[int]]] = None
+
+    def __post_init__(self):
+        if self.runtime_bits is not None:
+            for b in self.runtime_bits:
+                if b is not None and not 1 <= b <= MAX_BITS:
+                    raise ValueError(f"runtime bits must be in [1, {MAX_BITS}], got {b}")
 
     @staticmethod
     def off() -> "PrecisionPolicy":
@@ -105,6 +120,34 @@ class PrecisionPolicy:
             if re.search(pattern, layer_name):
                 return prec
         return self.default
+
+    def with_runtime_bits(
+        self, a_bits: Optional[int], w_bits: Optional[int] = None
+    ) -> "PrecisionPolicy":
+        """Policy copy with the runtime precision dial set (pass ``None``
+        for both to clear it). ``w_bits`` defaults to ``a_bits``."""
+        if a_bits is None and w_bits is None:
+            return dataclasses.replace(self, runtime_bits=None)
+        return dataclasses.replace(
+            self, runtime_bits=(a_bits, a_bits if w_bits is None else w_bits)
+        )
+
+    def effective(self, prec: LayerPrecision) -> LayerPrecision:
+        """Apply the runtime dial to a configured layer precision: the
+        executed width is ``min(configured, runtime)`` per operand (a dial
+        can only lower precision — the stored decomposition has no planes
+        above the configured width)."""
+        if self.runtime_bits is None or not prec.active:
+            return prec
+        ra, rw = self.runtime_bits
+        return LayerPrecision(
+            w_bits=min(prec.w_bits, rw) if rw else prec.w_bits,
+            a_bits=min(prec.a_bits, ra) if ra else prec.a_bits,
+        )
+
+    def lookup_effective(self, layer_name: str) -> LayerPrecision:
+        """:meth:`lookup` with the runtime dial applied."""
+        return self.effective(self.lookup(layer_name))
 
     def describe(self) -> str:
         lines = [

@@ -37,17 +37,6 @@ def resolve_backend(backend: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
-def _resolve_packed(packed, backend: str, level: str) -> bool:
-    """``packed=None`` -> auto: packed slabs on the TPU kernel path for the
-    bit-plane level (where planes are binary/ternary and HBM traffic is the
-    bottleneck); off elsewhere. Digit planes (radix 256) are not packable."""
-    if level != "bitplane":
-        return False
-    if packed is None:
-        return backend == "pallas"
-    return bool(packed)
-
-
 def _pow2_ceil(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
 
@@ -259,56 +248,6 @@ def _matmul_cached_jnp(
     return bs._plane_pair_scan(dec_a, dec_w, jnp.int32)
 
 
-def _matmul_cached(
-    a2: jax.Array,
-    w_planes: bp.WeightPlanes,
-    *,
-    a_bits: int,
-    variant: str,
-    level: str,
-    backend: str,
-    use_packed: bool,
-    tile_kw,
-) -> jax.Array:
-    """Contract quantized activations against a pre-decomposed weight."""
-    if backend == "jnp" or (level == "digit" and variant != "booth"):
-        # SBMwC digits exceed int8 and take the jnp scan even on TPU.
-        return _matmul_cached_jnp(
-            a2, w_planes, a_bits=a_bits, variant=variant, level=level
-        )
-    if level == "bitplane":
-        dec_a = bp.to_bitplanes(a2, a_bits, variant)
-        pw = _pair_weights(dec_a.weights, w_planes.weights)
-        if use_packed and w_planes.packed is not None:
-            # the activation side must share the cache's word layout
-            pa = bp.pack_planes(
-                dec_a.planes, axis=-1, ternary=variant == "booth",
-                block=w_planes.packed.block,
-            )
-            return plane_matmul_packed(
-                pa, w_planes.packed, pw, backend=backend, **tile_kw
-            )
-        wpl = (
-            w_planes.planes
-            if w_planes.planes is not None
-            else bp.unpack_planes(w_planes.packed)
-        )
-        return plane_matmul(
-            dec_a.planes.astype(jnp.int8), wpl.astype(jnp.int8), pw,
-            backend=backend, **tile_kw,
-        )
-    # digit level (booth: int8-native planes)
-    dec_a = bp.to_digits(a2, a_bits, variant)
-    pw = _pair_weights(dec_a.weights, w_planes.weights)
-    return plane_matmul(
-        dec_a.planes.astype(jnp.int8),
-        w_planes.planes.astype(jnp.int8),
-        pw,
-        backend=backend,
-        **tile_kw,
-    )
-
-
 def bitserial_matmul(
     a: jax.Array,
     w: jax.Array,
@@ -326,155 +265,61 @@ def bitserial_matmul(
     epilogue: Optional[Epilogue] = None,
     **tile_kw,
 ) -> jax.Array:
-    """Kernel-dispatching version of :func:`repro.core.bitserial_matmul`.
+    """Kernel-dispatching bit-serial matmul — **legacy compatibility shim**.
 
-    The Pallas path covers the int8-plane configurations (bitplane level
-    for both variants; digit level for Booth — SBMwC's unsigned digits
-    exceed int8, the software echo of its two-adder hardware cost) and
-    falls back to the jnp path otherwise. ``a``/``w`` are consumed at
-    their quantized storage width (int8 for <= 8 bits) — no int32 operand
-    round trip.
+    This entry point predates the plan API and re-resolved every flag
+    (``packed=``, ``fused=``, ``epilogue=``, tiles, cache layout) on every
+    call. It now builds (or fetches, interned by shape/precision/backend)
+    a :class:`repro.core.plan.MatmulPlan` and executes it, preserving the
+    historical dispatch semantics exactly:
 
-    ``packed``: bit-pack the plane operands and unpack in-kernel (32 plane
-    values per int32 word — up to 8× less HBM traffic per operand at
-    8×8-bit). ``None`` = auto (on for the TPU bitplane path). Explicit
-    ``True`` raises for configs that cannot pack (digit-level planes,
-    non-serial modes, non-int32 accumulation) rather than silently
-    falling back.
+    * ``packed=True`` still raises for unpackable configs (digit planes,
+      non-serial modes, non-int32 accumulation) instead of silently
+      falling back; ``None`` = auto.
+    * ``fused=True`` still raises for configs the fused kernel cannot
+      serve; ``None`` = auto (fused on the TPU bitplane path whenever an
+      epilogue is given and the cache layout allows it); ``False`` keeps
+      the staged kernels + XLA epilogue.
+    * ``w_planes`` still supplies the decompose-once serving cache.
 
-    ``w_planes``: pre-decomposed weight operand from the serving cache
-    (:func:`repro.core.bitplanes.make_weight_planes`); used when its
-    level/variant/bits match the requested config, so the static weight is
-    never re-decomposed per call.
-
-    ``epilogue``: dequant/bias/activation epilogue. When given, the return
-    value is ``epilogue.out_dtype`` instead of the raw accumulator — and
-    on the fused path the whole linear (in-kernel activation bit-slicing,
-    plane-pair passes, epilogue) runs in **one Pallas launch**: activation
-    plane tensors and the int32 accumulator never touch HBM.
-
-    ``fused``: ``None`` = auto (fused kernel on the pallas/interpret
-    bitplane path whenever an epilogue is given; a cache stored in the
-    global planar layout keeps the staged decompose-once path rather than
-    re-packing the weight per call); ``True`` raises for *configs* the
-    fused kernel cannot serve — on the jnp backend it computes the
-    bit-identical staged parity fallback instead (there is no jnp
-    "kernel" to fuse); ``False`` keeps the staged kernels and applies the
-    epilogue in XLA (bit-identical result).
+    The ``packed=``/``fused=``/``epilogue=`` keywords are **deprecated**
+    (one :class:`DeprecationWarning` each per process, kept for one
+    release): new code should resolve a plan once via
+    :func:`repro.core.plan.make_plan` / ``plan_for_operands`` and call it
+    — which is also what unlocks runtime precision reconfiguration
+    (:meth:`~repro.core.plan.MatmulPlan.with_precision`).
     """
-    backend = resolve_backend(backend)
-    serial = mode == "fully_serial"
-    int32_acc = accum_dtype == jnp.int32
-    kernel_ok = (
-        level == "bitplane" or (level == "digit" and variant == "booth")
-    ) and int32_acc  # the Pallas kernels accumulate in int32
-    use_packed = serial and int32_acc and _resolve_packed(packed, backend, level)
-    if packed and not use_packed:
-        raise ValueError(
-            "packed=True requires level='bitplane', mode='fully_serial' and "
-            f"int32 accumulation; got level={level!r}, mode={mode!r}, "
-            f"accum_dtype={jnp.dtype(accum_dtype).name}"
-        )
+    from repro.core import plan as plan_mod
 
-    fused_ok = (
-        epilogue is not None
-        and serial
-        and int32_acc
-        and level == "bitplane"
-        and variant in ("sbmwc", "booth")
-        and a_bits <= 8
-        and w_bits <= 8
+    unknown = set(tile_kw) - {"bm", "bn", "bk"}
+    if unknown:
+        # the old signature forwarded **tile_kw into the kernel wrappers,
+        # where a typo raised TypeError; keep that fail-loud contract
+        raise TypeError(
+            f"bitserial_matmul got unexpected keyword argument(s) {sorted(unknown)}; "
+            "tile keywords are bm/bn/bk"
+        )
+    for kw_name, val in (("packed", packed), ("fused", fused), ("epilogue", epilogue)):
+        if val is not None:
+            plan_mod._warn_deprecated(kw_name)
+    plan = plan_mod.plan_for_operands(
+        (a.shape, w.shape),
+        a_bits=a_bits,
+        w_bits=w_bits,
+        variant=variant,
+        level=level,
+        mode=mode,
+        backend=backend,
+        accum_dtype=accum_dtype,
+        has_epilogue=epilogue is not None,
+        w_planes=w_planes,
+        fused=fused,
+        packed=packed,
+        bm=tile_kw.get("bm"),
+        bn=tile_kw.get("bn", 128),
+        bk=tile_kw.get("bk"),
     )
-    if fused and not fused_ok:
-        raise ValueError(
-            "fused=True requires an epilogue, level='bitplane', "
-            "mode='fully_serial', int32 accumulation and <=8-bit operands; "
-            f"got epilogue={'set' if epilogue is not None else None}, "
-            f"level={level!r}, mode={mode!r}, a_bits={a_bits}, w_bits={w_bits}"
-        )
-    use_fused = fused_ok and backend != "jnp" and (fused is None or fused)
-
-    cache_ok = (
-        w_planes is not None
-        and serial
-        and int32_acc
-        and w_planes.level == level
-        and w_planes.variant == variant
-        and w_planes.w_bits == w_bits
-    )
-
-    lead = a.shape[:-1]
-    a2 = a.reshape((-1, a.shape[-1]))
-
-    def finish(out2):
-        out = out2.reshape(lead + (out2.shape[-1],))
-        return out if epilogue is None else apply_epilogue(out, epilogue)
-
-    fused_cache_ok = (
-        cache_ok
-        and w_planes.packed is not None
-        and w_planes.packed.block is not None
-    )
-    if use_fused and cache_ok and not fused_cache_ok and fused is None:
-        # A cache in the global planar layout can't feed the fused kernel
-        # (its K permutation breaks against raw activations). Auto mode
-        # keeps the decompose-once staged path instead of silently
-        # re-packing the static weight on every call; explicit fused=True
-        # accepts the per-call repack below.
-        use_fused = False
-
-    if use_fused:
-        if fused_cache_ok:
-            packed_w = w_planes.packed
-        else:
-            dec_w = bp.to_bitplanes(w, w_bits, variant)
-            _, bk = auto_tiles(a2.shape[0], a2.shape[-1], None, tile_kw.get("bk"))
-            packed_w = bp.pack_decomposition(
-                dec_w, axis=-2, variant=variant, block=bk
-            )
-        n = packed_w.mag.shape[-1]
-        ep2 = epilogue._replace(a_scale=epilogue.a_scale.reshape(-1, 1))
-        out2 = fused_linear(
-            a2, packed_w, ep2, a_bits=a_bits, variant=variant, backend=backend,
-            bm=tile_kw.get("bm"), bn=tile_kw.get("bn", 128),
-        )
-        return out2.reshape(lead + (n,))
-
-    if cache_ok:
-        out2 = _matmul_cached(
-            a2, w_planes, a_bits=a_bits, variant=variant, level=level,
-            backend=backend, use_packed=use_packed, tile_kw=tile_kw,
-        )
-        return finish(out2)
-
-    if (backend == "jnp" and not use_packed) or not kernel_ok or not serial:
-        acc = bs.bitserial_matmul(
-            a, w, a_bits=a_bits, w_bits=w_bits, variant=variant, level=level,
-            mode=mode, accum_dtype=accum_dtype,
-        )
-        return acc if epilogue is None else apply_epilogue(acc, epilogue)
-
-    if level == "bitplane":
-        dec_a = bp.to_bitplanes(a2, a_bits, variant)
-        dec_w = bp.to_bitplanes(w, w_bits, variant)
-    else:
-        dec_a = bp.to_digits(a2, a_bits, variant)
-        dec_w = bp.to_digits(w, w_bits, variant)
-    pw = _pair_weights(dec_a.weights, dec_w.weights)
-    if use_packed:
-        ternary = variant == "booth"
-        pa = bp.pack_planes(dec_a.planes, axis=-1, ternary=ternary)
-        pwk = bp.pack_planes(dec_w.planes, axis=-2, ternary=ternary)
-        out2 = plane_matmul_packed(pa, pwk, pw, backend=backend, **tile_kw)
-    else:
-        out2 = plane_matmul(
-            dec_a.planes.astype(jnp.int8),
-            dec_w.planes.astype(jnp.int8),
-            pw,
-            backend=backend,
-            **tile_kw,
-        )
-    return finish(out2)
+    return plan(a, w, w_planes=w_planes, epilogue=epilogue)
 
 
 def flash_attention(

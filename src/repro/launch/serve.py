@@ -10,7 +10,7 @@ Two engines share the jitted steps:
 
 * :class:`Engine` — the lockstep baseline: one fixed batch, every row
   prefills and decodes in unison. Kept as the bit-exact parity oracle
-  (``--no-cb``) and for homogeneous batch benchmarking.
+  (``--mode lockstep``) and for homogeneous batch benchmarking.
 * :class:`ContinuousBatchingEngine` — slot-based serving: requests with
   different prompt lengths and arrival times are admitted into free
   decode slots mid-flight (prefill inserts into a slot while the other
@@ -18,14 +18,28 @@ Two engines share the jitted steps:
   decode step covers the whole slot array at per-slot lengths; with
   ``kv_quant`` the cache holds int8 KV (2x fewer KV bytes at bf16→int8).
 
+Both engines expose the paper's runtime precision reconfiguration as a
+serving feature: :meth:`set_precision` swaps the compiled steps for ones
+executing at a lower bit-width *against the same weight tree* — the
+stored 8-bit plane decomposition is MSB-prefix truncated by the execution
+plans (repro.core.plan), so the switch moves no weight bytes and runs no
+re-quantization. In-flight slots keep decoding across the switch (their
+KV cache is unchanged); use it to shed precision under queue pressure or
+to serve per-tier traffic, e.g.::
+
+    engine.set_precision(4)                 # drop every projection to 4-bit
+    engine.run(requests, precision_schedule={12: 4})   # switch at step 12
+
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --bits 8 --prompt-lens 8,32,128 --gen 16 --stagger 2
+        --bits 8 --level bitplane --prompt-lens 8,32,128 --gen 16 \
+        --precision 8 --precision-switch 8:4
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +55,81 @@ from repro.models.transformer import init_params
 from repro.runtime.scheduler import Request, SlotScheduler
 
 
-class Engine:
+def _norm_precision(precision) -> Tuple[int, int]:
+    """``4`` or ``(a_bits, w_bits)`` -> (a_bits, w_bits)."""
+    if isinstance(precision, int):
+        return (precision, precision)
+    a, w = precision
+    return (int(a), int(w))
+
+
+class _PrecisionDial:
+    """Shared set_precision plumbing: one compiled (prefill, step) pair per
+    precision tier — subclasses provide ``_make_steps(precision)`` — with
+    the dial validated against the policy's storage width."""
+
+    def _init_dial(self) -> None:
+        self._precision: Optional[Tuple[int, int]] = None
+        self._compiled: dict = {}
+        self._prefill, self._step = self._steps_for(None)
+
+    def _steps_for(self, precision):
+        if precision not in self._compiled:
+            self._compiled[precision] = self._make_steps(precision)
+        return self._compiled[precision]
+
+    def set_precision(self, precision) -> None:
+        """Dial subsequent prefills/decodes to ``precision`` (an int or an
+        ``(a_bits, w_bits)`` pair; ``None`` restores the storage width).
+        The weight tree is untouched — plans truncate the stored plane
+        decomposition — so no weight bytes move, no re-quantization runs,
+        and (continuous batching) in-flight slots keep their KV state and
+        finish at the new precision from the next step."""
+        if precision is None:
+            self._precision = None
+        else:
+            p = _norm_precision(precision)
+            self._dial_check(p)
+            self._precision = p
+        self._prefill, self._step = self._steps_for(self._precision)
+
+    def _dial_check(self, precision: Tuple[int, int]) -> None:
+        pol = self.policy
+        w_widths = [
+            p.w_bits
+            for p in [pol.default] + [p for _, p in pol.overrides]
+            if p.active
+        ]
+        if not w_widths:
+            raise ValueError("set_precision needs an active quantization policy")
+        a, w = precision
+        if min(a, w) < 1:
+            raise ValueError(f"runtime precision must be >= 1 bit, got {precision}")
+        # Only the WEIGHT dial has a hard ceiling (the stored decomposition
+        # has no planes above it); activations quantize fresh per token, so
+        # an over-wide activation dial is merely clamped by
+        # policy.effective() and needs no rejection here.
+        if w > max(w_widths):
+            raise ValueError(
+                f"runtime weight precision {w} exceeds the stored width "
+                f"{max(w_widths)} — weights were quantized/decomposed at "
+                f"{max(w_widths)} bits; the dial can only truncate, never extend"
+            )
+        if pol.level != "bitplane":
+            raise ValueError(
+                "runtime precision reconfiguration needs level='bitplane' "
+                f"(got {pol.level!r}): radix-256 digit caches are not "
+                "prefix-truncatable — rebuild the engine with a bitplane "
+                "policy"
+            )
+
+    @property
+    def precision(self) -> Optional[Tuple[int, int]]:
+        """Current runtime (a_bits, w_bits) dial, or None (storage width)."""
+        return self._precision
+
+
+class Engine(_PrecisionDial):
     """Minimal lockstep batched generation engine over the serve steps."""
 
     def __init__(
@@ -56,33 +144,49 @@ class Engine:
     ):
         self.cfg = cfg
         self.policy = policy
+        self.plane_cache = plane_cache
         # Quantize AND pre-decompose/pack the weight planes exactly once at
-        # load time (plane_cache) — forwards only decompose activations.
+        # load time (plane_cache) — forwards only decompose activations,
+        # and every runtime precision tier truncates this one decomposition.
         self.q_params = (
             quantize_params(params, policy, plane_cache=plane_cache)
             if policy.default.active
             else params
         )
         self.sample_fn = sample_fn or sampling.greedy
+        self.max_len = max_len
         self._base_key = jax.random.PRNGKey(seed)
-        self.prefill = jax.jit(make_prefill_step(cfg, policy, max_len=max_len))
-        self.step = jax.jit(
-            make_serve_step(cfg, policy, sample_fn=self.sample_fn),
-            donate_argnums=(1,),
+        self._init_dial()
+
+    def _make_steps(self, precision):
+        return (
+            jax.jit(
+                make_prefill_step(
+                    self.cfg, self.policy, max_len=self.max_len,
+                    precision=precision,
+                )
+            ),
+            jax.jit(
+                make_serve_step(
+                    self.cfg, self.policy, sample_fn=self.sample_fn,
+                    precision=precision,
+                ),
+                donate_argnums=(1,),
+            ),
         )
 
     def generate(self, prompts: jax.Array, n_tokens: int):
         """prompts: (B, S) int32. Decodes ``n_tokens`` via the engine's
         ``sample_fn`` (greedy default); returns (tokens (B, n),
         decode_tok_per_s)."""
-        last_logits, cache = self.prefill(self.q_params, {"tokens": prompts})
+        last_logits, cache = self._prefill(self.q_params, {"tokens": prompts})
         logits = sampling.mask_vocab(last_logits, self.cfg.vocab_size)
         tok = self.sample_fn(logits, jax.random.fold_in(self._base_key, 0))[:, None]
         out = [tok]
         t0 = time.time()
         for i in range(n_tokens - 1):
             key = jax.random.fold_in(self._base_key, i + 1)
-            tok, cache = self.step(self.q_params, cache, tok, key)
+            tok, cache = self._step(self.q_params, cache, tok, key)
             out.append(tok)
         jax.block_until_ready(tok)
         dt = time.time() - t0
@@ -91,7 +195,7 @@ class Engine:
         return tokens, tps
 
 
-class ContinuousBatchingEngine:
+class ContinuousBatchingEngine(_PrecisionDial):
     """Slot-scheduled serving over a shared, optionally int8, KV cache.
 
     ``n_slots`` decode lanes share one slot-indexed cache of ``max_len``
@@ -104,6 +208,12 @@ class ContinuousBatchingEngine:
     per-(position, head) scales; ``kv_quant=False`` is the bit-exact A/B
     fallback the parity tests and the CI serving gate compare against
     per-request lockstep runs.
+
+    :meth:`set_precision` switches the decode/prefill steps to a lower
+    bit-width mid-serving (plane-prefix truncation of the same weight
+    tree); in-flight slots continue decoding across the switch. A
+    ``precision_schedule`` on :meth:`run` automates the switch at given
+    decode steps — the drop-8-to-4-under-pressure pattern.
     """
 
     def __init__(
@@ -124,6 +234,7 @@ class ContinuousBatchingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.kv_quant = kv_quant
+        self.plane_cache = plane_cache
         self.q_params = (
             quantize_params(params, policy, plane_cache=plane_cache)
             if policy.default.active
@@ -132,11 +243,22 @@ class ContinuousBatchingEngine:
         base = jax.random.PRNGKey(seed)
         # disjoint streams: first-token sampling folds rid, decode folds step
         self._prefill_key, self._decode_key = jax.random.split(base)
-        self._prefill = jax.jit(
-            make_prefill_step(cfg, policy, max_len=max_len, kv_quant=kv_quant)
-        )
         self._insert = jax.jit(insert_slot, donate_argnums=(0,))
-        self._step = jax.jit(make_cb_decode_step(cfg, policy), donate_argnums=(1,))
+        self._init_dial()
+
+    def _make_steps(self, precision):
+        return (
+            jax.jit(
+                make_prefill_step(
+                    self.cfg, self.policy, max_len=self.max_len,
+                    kv_quant=self.kv_quant, precision=precision,
+                )
+            ),
+            jax.jit(
+                make_cb_decode_step(self.cfg, self.policy, precision=precision),
+                donate_argnums=(1,),
+            ),
+        )
 
     def _first_token(self, logits, request: Request) -> jax.Array:
         logits = sampling.mask_vocab(logits, self.cfg.vocab_size)
@@ -144,16 +266,24 @@ class ContinuousBatchingEngine:
         temps = jnp.full((logits.shape[0],), request.temperature, jnp.float32)
         return sampling.sample_tokens(logits, temps, key)[0]
 
-    def run(self, requests: list[Request]):
+    def run(self, requests: list[Request], precision_schedule: Optional[dict] = None):
         """Serve ``requests`` to completion. Returns (results, stats):
         ``results`` maps rid -> (max_new_tokens,) int32 generated tokens;
-        ``stats`` reports decode throughput, step counts and KV bytes."""
+        ``stats`` reports decode throughput, step counts and KV bytes.
+
+        ``precision_schedule``: optional ``{decode_step: precision}``
+        mapping over the DECODE-step counter (idle fast-forwards between
+        sparse arrivals do not advance it) — at each threshold the engine
+        calls :meth:`set_precision` before executing that step
+        (``precision`` as accepted there). Switches are recorded in
+        ``stats['precision_switches']`` as (decode_step, (a, w))."""
         for r in requests:
             if r.tokens.size + r.max_new_tokens > self.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {r.tokens.size} + gen "
                     f"{r.max_new_tokens} exceeds max_len {self.max_len}"
                 )
+        schedule = dict(precision_schedule or {})
         sched = SlotScheduler(self.n_slots)
         for r in sorted(requests, key=lambda r: r.arrival_step):
             sched.submit(r)
@@ -167,8 +297,13 @@ class ContinuousBatchingEngine:
         step_i = 0
         decode_steps = 0
         decoded_tokens = 0
+        switches = []
         t0 = time.time()
         while not sched.done:
+            due = [s for s in schedule if s <= decode_steps]
+            for s in sorted(due):
+                self.set_precision(schedule.pop(s))
+                switches.append((decode_steps, self._precision))
             for slot, req in sched.admissible(step_i):
                 logits, seq_cache = self._prefill(
                     self.q_params, {"tokens": jnp.asarray(req.tokens)[None, :]}
@@ -207,23 +342,36 @@ class ContinuousBatchingEngine:
             "admitted": s.admitted,
             "peak_occupancy": s.peak_occupancy,
             "queue_steps": s.queue_steps,
+            "precision_switches": switches,
         }
         return sched.finished, stats
 
 
-def main():
-    ap = argparse.ArgumentParser()
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="bit-serial quantized serving (continuous batching by default)"
+    )
     ap.add_argument("--arch", choices=ARCH_NAMES, default="yi-6b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--level", default="digit", choices=("bitplane", "digit", "fused"))
+    ap.add_argument("--bits", type=int, default=8,
+                    help="storage precision: weights are quantized and "
+                    "decomposed at this width (0 disables quantization)")
+    ap.add_argument("--level", default="digit", choices=("bitplane", "digit"))
     ap.add_argument("--variant", default="booth", choices=("booth", "sbmwc"))
+    ap.add_argument("--mode", default="cb", choices=("cb", "lockstep"),
+                    help="serving mode: continuous batching (default) or the "
+                    "lockstep fixed-batch baseline engine")
     ap.add_argument("--batch", type=int, default=4,
-                    help="lockstep batch size (--no-cb) / default slot count")
+                    help="lockstep batch size / default slot count")
     ap.add_argument("--n-slots", type=int, default=None,
                     help="continuous-batching decode slots (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=32,
-                    help="lockstep prompt length (--no-cb)")
+                    help="lockstep prompt length")
     ap.add_argument("--prompt-lens", default=None,
                     help="comma-separated mixed prompt lengths for the "
                     "continuous-batching workload, e.g. 8,32,128")
@@ -232,31 +380,84 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
-    ap.add_argument(
-        "--no-plane-cache",
-        action="store_true",
-        help="skip the load-time weight-plane decomposition cache",
-    )
-    ap.add_argument(
-        "--no-fused",
-        action="store_true",
-        help="stage the linear (separate plane kernel + XLA dequant) instead "
-        "of the fully-fused kernel; prefill and decode default to fused "
-        "wherever the backend supports it",
-    )
-    ap.add_argument(
-        "--no-kv-quant",
-        action="store_true",
-        help="keep the KV cache in bf16 (bit-exact fallback; int8 "
-        "quantize-on-append is the default)",
-    )
-    ap.add_argument(
-        "--no-cb",
-        action="store_true",
-        help="lockstep fixed-batch engine instead of continuous batching "
-        "(the pre-scheduler serving path, kept as the A/B baseline)",
-    )
-    args = ap.parse_args()
+    ap.add_argument("--precision", type=int, default=None,
+                    help="runtime execution precision (<= --bits): serve at "
+                    "this width by plane-prefix truncation of the stored "
+                    "decomposition (requires --level bitplane)")
+    ap.add_argument("--precision-switch", default=None, metavar="STEP:BITS",
+                    help="mid-serving reconfiguration: at decode step STEP "
+                    "drop to BITS (continuous batching only), e.g. 8:4")
+    # legacy aliases (one release of backward compat; the consolidated
+    # surface is --mode / --precision)
+    ap.add_argument("--no-plane-cache", action="store_true",
+                    help="skip the load-time weight-plane decomposition cache")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="stage the linear (separate plane kernel + XLA "
+                    "dequant) instead of the fully-fused kernel")
+    ap.add_argument("--no-kv-quant", action="store_true",
+                    help="keep the KV cache in bf16 (bit-exact fallback; int8 "
+                    "quantize-on-append is the default)")
+    ap.add_argument("--no-cb", action="store_true",
+                    help="alias for --mode lockstep (deprecated)")
+    return ap
+
+
+def validate_args(args) -> None:
+    """Fail fast on mutually-inconsistent flag combinations (previously
+    several of these silently fell back to the jnp path or were ignored)."""
+
+    def die(msg):
+        raise SystemExit(f"[serve] invalid flags: {msg}")
+
+    if args.no_cb:
+        args.mode = "lockstep"
+    if args.bits and not 1 <= args.bits <= 16:
+        die("--bits must be in [1, 16] (the paper's synthesis-time maximum; "
+            "0 disables quantization)")
+    if args.mode == "lockstep" and args.prompt_lens:
+        die("--prompt-lens (mixed prompt lengths) needs --mode cb; the "
+            "lockstep engine serves one fixed shape")
+    if args.mode == "lockstep" and args.precision_switch:
+        die("--precision-switch is a continuous-batching feature (--mode cb)")
+    if not args.bits:
+        for flag, val in (("--no-fused", args.no_fused),
+                          ("--no-plane-cache", args.no_plane_cache),
+                          ("--precision", args.precision is not None),
+                          ("--precision-switch", args.precision_switch)):
+            if val:
+                die(f"{flag} needs an active quantization policy (--bits > 0)")
+    if args.level == "digit" and args.variant == "sbmwc":
+        die("--level digit --variant sbmwc has no TPU kernel (SBMwC radix-256 "
+            "digits exceed int8) and would silently run the jnp path; use "
+            "--variant booth or --level bitplane")
+    wants_precision = args.precision is not None or args.precision_switch
+    if wants_precision:
+        if args.level != "bitplane":
+            die("--precision/--precision-switch need --level bitplane "
+                "(digit-plane caches are not prefix-truncatable)")
+        if args.no_plane_cache:
+            die("--precision/--precision-switch need the weight-plane cache "
+                "(drop --no-plane-cache): runtime reconfiguration truncates "
+                "the stored decomposition instead of re-quantizing")
+    if args.precision is not None and not 1 <= args.precision <= args.bits:
+        die(f"--precision {args.precision} must be in [1, {args.bits}] — the "
+            "dial truncates the stored decomposition, never extends it")
+    if args.precision_switch:
+        try:
+            step_s, bits_s = args.precision_switch.split(":")
+            args.precision_switch = (int(step_s), int(bits_s))
+        except ValueError:
+            die("--precision-switch expects STEP:BITS, e.g. 8:4")
+        if not 1 <= args.precision_switch[1] <= args.bits:
+            die(f"--precision-switch bits {args.precision_switch[1]} must be "
+                f"in [1, {args.bits}] (the storage width)")
+        if args.precision_switch[0] < 0:
+            die("--precision-switch step must be >= 0")
+
+
+def main():
+    args = build_parser().parse_args()
+    validate_args(args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if not cfg.is_decoder:
@@ -271,15 +472,20 @@ def main():
     )
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    tag = f"{cfg.name} w{args.bits}a{args.bits} {args.level}/{args.variant}"
+    run_bits = args.precision or args.bits
+    tag = f"{cfg.name} w{run_bits}a{run_bits} {args.level}/{args.variant}"
+    if args.precision:
+        tag += f" (stored w{args.bits}, truncated)"
 
-    if args.no_cb:
+    if args.mode == "lockstep":
         engine = Engine(
             cfg, params, policy,
             max_len=args.prompt_len + args.gen,
             plane_cache=not args.no_plane_cache,
             sample_fn=sampling.make_sample_fn(args.temperature),
         )
+        if args.precision:
+            engine.set_precision(args.precision)
         prompts = jnp.asarray(
             rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
         )
@@ -301,6 +507,8 @@ def main():
         kv_quant=not args.no_kv_quant,
         plane_cache=not args.no_plane_cache,
     )
+    if args.precision:
+        engine.set_precision(args.precision)
     requests = [
         Request(
             rid=i,
@@ -311,7 +519,12 @@ def main():
         )
         for i, s in enumerate(lens)
     ]
-    results, stats = engine.run(requests)
+    schedule = (
+        {args.precision_switch[0]: args.precision_switch[1]}
+        if args.precision_switch
+        else None
+    )
+    results, stats = engine.run(requests, precision_schedule=schedule)
     kv = "int8" if not args.no_kv_quant else "bf16"
     print(
         f"[serve] {tag} cb/{kv}: {len(results)} requests "
@@ -320,6 +533,8 @@ def main():
         f"slot util {stats['slot_utilization']:.2f}, "
         f"kv cache {stats['kv_cache_bytes'] / 1024:.1f} KiB"
     )
+    for step_i, prec in stats["precision_switches"]:
+        print(f"[serve] precision switch at decode step {step_i}: -> {prec}")
     for rid in sorted(results):
         print(f"[serve] rid {rid}:", results[rid])
 

@@ -1,10 +1,21 @@
 """Jittable step functions: train (with gradient accumulation), prefill,
 decode. These are what the launcher jits/lowers — the dry-run AOT-compiles
-exactly these under the production mesh."""
+exactly these under the production mesh.
+
+The inference factories take an optional ``precision=(a_bits, w_bits)``
+runtime dial: the policy is re-stamped via
+:meth:`PrecisionPolicy.with_runtime_bits`, so every projection inside the
+step resolves its execution plan at the dialed width — weight planes by
+MSB-prefix truncation of the decompose-once cache, activations by
+quantizing at the lower width. Bit-widths are trace-time constants
+(exactly as the accelerator's effective width is a register programmed
+between matmuls), so each dialed precision is its own jit specialization;
+the serving engines keep one compiled step per precision and swap between
+them mid-flight (``set_precision``)."""
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,16 +106,26 @@ def init_opt_state(cfg, opt_cfg: OptimConfig, params, compress_grads: bool = Fal
     return state
 
 
+def _dial(policy, precision: Optional[Tuple[int, int]]):
+    """Apply a runtime precision override to the step's policy."""
+    if precision is None or policy is None:
+        return policy
+    return policy.with_runtime_bits(*precision)
+
+
 def make_prefill_step(
     cfg: ModelConfig,
     policy=None,
     max_len: Optional[int] = None,
     kv_quant: bool = False,
+    precision: Optional[Tuple[int, int]] = None,
 ):
     """prefill_step(params, batch) -> (last_logits, cache). Cache zeros are
     created inside the step so the dry-run captures their allocation.
     ``kv_quant`` stores attention KV int8 + per-(position, head) scales
-    (quantize-on-append; see models.cache)."""
+    (quantize-on-append; see models.cache). ``precision`` dials the
+    runtime bit-width of every projection (see module docstring)."""
+    policy = _dial(policy, precision)
 
     def prefill_step(params, batch):
         if cfg.frontend == "audio":
@@ -126,8 +147,9 @@ def make_prefill_step(
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, policy=None):
+def make_decode_step(cfg: ModelConfig, policy=None, precision: Optional[Tuple[int, int]] = None):
     """decode_step(params, cache, batch) -> (logits, new_cache)."""
+    policy = _dial(policy, precision)
 
     def decode_step(params, cache, batch):
         logits, _aux, cache = forward(cfg, params, batch, policy=policy, cache=cache)
@@ -136,7 +158,12 @@ def make_decode_step(cfg: ModelConfig, policy=None):
     return decode_step
 
 
-def make_serve_step(cfg: ModelConfig, policy=None, sample_fn=None):
+def make_serve_step(
+    cfg: ModelConfig,
+    policy=None,
+    sample_fn=None,
+    precision: Optional[Tuple[int, int]] = None,
+):
     """One engine iteration: decode + sample next token (the shape-cell
     ``serve_step``: one new token against a seq_len-deep cache).
 
@@ -144,7 +171,7 @@ def make_serve_step(cfg: ModelConfig, policy=None, sample_fn=None):
     defaults to greedy argmax (:func:`repro.launch.sampling.greedy`)."""
     from repro.launch import sampling
 
-    decode = make_decode_step(cfg, policy)
+    decode = make_decode_step(cfg, policy, precision=precision)
     sample_fn = sample_fn or sampling.greedy
 
     def serve_step(params, cache, tokens, key=None):
@@ -156,7 +183,9 @@ def make_serve_step(cfg: ModelConfig, policy=None, sample_fn=None):
     return serve_step
 
 
-def make_cb_decode_step(cfg: ModelConfig, policy=None):
+def make_cb_decode_step(
+    cfg: ModelConfig, policy=None, precision: Optional[Tuple[int, int]] = None
+):
     """One continuous-batching engine iteration over the whole slot array.
 
     cb_step(params, cache, tokens, temps, key) -> (next_tokens, cache):
@@ -164,10 +193,14 @@ def make_cb_decode_step(cfg: ModelConfig, policy=None):
     position; ``temps`` (B,) carries per-request sampling temperatures
     (0 = greedy, exactly). Free/finished slots still compute — their
     lanes are garbage the scheduler never reads, which is what keeps the
-    step a single jit specialization regardless of occupancy."""
+    step a single jit specialization regardless of occupancy.
+
+    ``precision=(a_bits, w_bits)`` dials the step's runtime precision
+    against the same weight tree (plane-prefix truncation); the engine
+    compiles one such step per precision tier and swaps mid-serving."""
     from repro.launch import sampling
 
-    decode = make_decode_step(cfg, policy)
+    decode = make_decode_step(cfg, policy, precision=precision)
 
     def cb_step(params, cache, tokens, temps, key):
         logits, cache = decode(params, cache, {"tokens": tokens})

@@ -2,7 +2,12 @@
 windowed-local variant, and a cache-consuming decode path.
 
 All projections route through :mod:`repro.layers.linear`
-(QuantizedLinear), so the bit-serial technique applies to QKV/O.
+(QuantizedLinear), so the bit-serial technique applies to QKV/O. The
+block binds one :func:`repro.layers.linear.projection` context instead of
+threading kernel flags: each projection's execution plan — kernel
+variant, tiles, runtime precision (prefill M=S vs decode M=1 resolve to
+different plans automatically) — comes from the plan registry at trace
+time.
 
 The train/prefill path is a pure-jnp online-softmax scan over KV chunks —
 mathematically the flash schedule — so it compiles on any backend (the
@@ -18,14 +23,13 @@ flash-decode collectives under GSPMD.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.layers.linear import linear_apply, linear_init
+from repro.layers.linear import linear_init, projection
 from repro.layers.norms import rmsnorm_init, rmsnorm_apply
 from repro.layers.rotary import apply_rope
 from repro.models.cache import quantize_kv
@@ -234,7 +238,7 @@ def attention_apply(
     """Returns (out, new_cache). ``cache`` (decode): {'k','v','len'} with
     k/v (B, S_max, Hkv, D); prefill with cache returns the filled cache."""
     b, s, _ = x.shape
-    la = functools.partial(linear_apply, policy=policy, training=training)
+    la = projection(policy=policy, training=training)
     q = la(params["q_proj"], x, name=f"{name}/q_proj").reshape(b, s, n_heads, head_dim)
     k = la(params["k_proj"], x, name=f"{name}/k_proj").reshape(b, s, n_kv_heads, head_dim)
     v = la(params["v_proj"], x, name=f"{name}/v_proj").reshape(b, s, n_kv_heads, head_dim)

@@ -10,12 +10,17 @@ Three parameter/execution regimes, selected by the
   values the bit-serial inference path will compute;
 * bit-serial inference (`{'w_q','w_scale'}` from :func:`quantize_params`
   or `{'w'}` + active policy) — activations are dynamically quantized
-  per-token and the product runs through
-  :func:`repro.kernels.ops.bitserial_matmul` at the policy's
-  level/variant/mode (bitplane = paper-faithful, digit = TPU-native).
+  per-token and the product executes through a
+  :class:`repro.core.plan.MatmulPlan` fetched at trace time from the plan
+  registry. The plan resolves kernel variant / tiles / pack layout once
+  per (shape, precision, backend) — no boolean-flag threading through the
+  layer stack — and honors the policy's runtime precision dial
+  (:meth:`PrecisionPolicy.with_runtime_bits`): weights execute at the
+  dialed width by MSB-prefix truncation of the stored decomposition,
+  activations simply quantize at the lower width.
 
 The dequant (``acc * a_scale * w_scale``), optional ``bias`` and optional
-``activation`` ride into the matmul as an :class:`repro.kernels.ops.Epilogue`
+``activation`` ride into the plan call as an :class:`repro.kernels.ops.Epilogue`
 — on the fused TPU path they execute inside the kernel and the int32
 accumulator never reaches HBM; elsewhere the identical math runs in XLA.
 Operands stay at their quantized storage width (int8 for <= 8 bits): no
@@ -24,9 +29,12 @@ int32 round trip between the quantizer and the kernel.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.core.precision import PrecisionPolicy
 from repro.core.quantize import fake_quant, quantize
 from repro.kernels import ops
@@ -66,6 +74,16 @@ def _finish_dense(y: jax.Array, bias, activation: str, out_dtype) -> jax.Array:
     return out.astype(out_dtype)
 
 
+def projection(*, policy: PrecisionPolicy, training: bool = False, backend: str = "auto"):
+    """Bind the per-model-call context once; layer code then applies
+    projections by (params, x, name) alone. This is the layer-facing face
+    of the plan API: blocks never thread kernel flags — the bound policy +
+    the trace-time shapes are everything plan resolution needs."""
+    return functools.partial(
+        linear_apply, policy=policy, training=training, backend=backend
+    )
+
+
 def linear_apply(
     params: dict,
     x: jax.Array,
@@ -85,25 +103,28 @@ def linear_apply(
     the int32 accumulator off HBM).
     """
     prec = policy.lookup(name)
-    fused = policy.fuse_epilogue
 
     if "w_q" in params:  # stored-quantized weights (serving path)
         if not prec.active:
             raise ValueError(f"layer {name}: quantized params but inactive policy")
-        xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
-        return ops.bitserial_matmul(
+        eff = policy.effective(prec)
+        xq = quantize(x.astype(jnp.float32), eff.a_bits, axis=-1)
+        # Compile-once execution plan, interned by (shape, precision,
+        # backend, cache layout). ``w_stored_bits`` is the width the
+        # checkpoint was quantized/decomposed at: when the runtime dial
+        # lowers eff.w_bits below it, the plan consumes the top planes of
+        # the existing decomposition (no re-quantization).
+        plan = plan_mod.make_plan(
+            policy, name, (x.shape, params["w_q"].shape), backend,
+            w_planes=params.get("w_planes"),
+            w_stored_bits=prec.w_bits,
+            has_epilogue=True,
+            accum_dtype=_accum_dtype(eff.w_bits, eff.a_bits),
+        )
+        return plan(
             xq.values,
             params["w_q"],
-            a_bits=prec.a_bits,
-            w_bits=prec.w_bits,
-            variant=policy.variant,
-            level=policy.level,
-            mode=policy.mode,
-            backend=backend,
-            accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
-            # decompose-once serving cache (None -> decompose per call)
             w_planes=params.get("w_planes"),
-            fused=fused,
             epilogue=ops.Epilogue(
                 a_scale=xq.scale,
                 w_scale=params["w_scale"],
@@ -126,20 +147,21 @@ def linear_apply(
         y = (xq @ wq.astype(x.dtype)).astype(x.dtype)
         return _finish_dense(y, bias, activation, x.dtype)
 
-    # On-the-fly quantized inference from dense weights.
-    wq = quantize(w.astype(jnp.float32), prec.w_bits, axis=0)
-    xq = quantize(x.astype(jnp.float32), prec.a_bits, axis=-1)
-    return ops.bitserial_matmul(
+    # On-the-fly quantized inference from dense weights: both operands
+    # quantize at the *effective* width directly (there is no stored
+    # decomposition to truncate), so the plan sees no width gap.
+    eff = policy.effective(prec)
+    wq = quantize(w.astype(jnp.float32), eff.w_bits, axis=0)
+    xq = quantize(x.astype(jnp.float32), eff.a_bits, axis=-1)
+    plan = plan_mod.make_plan(
+        policy, name, (x.shape, w.shape), backend,
+        w_stored_bits=eff.w_bits,
+        has_epilogue=True,
+        accum_dtype=_accum_dtype(eff.w_bits, eff.a_bits),
+    )
+    return plan(
         xq.values,
         wq.values,
-        a_bits=prec.a_bits,
-        w_bits=prec.w_bits,
-        variant=policy.variant,
-        level=policy.level,
-        mode=policy.mode,
-        backend=backend,
-        accum_dtype=_accum_dtype(prec.w_bits, prec.a_bits),
-        fused=fused,
         epilogue=ops.Epilogue(
             a_scale=xq.scale,
             w_scale=wq.scale,

@@ -1,13 +1,17 @@
-"""Gated/plain MLP blocks (SwiGLU / GeGLU / GELU)."""
+"""Gated/plain MLP blocks (SwiGLU / GeGLU / GELU).
+
+Projections go through :func:`repro.layers.linear.projection`: the block
+binds the policy/training context once and never threads kernel flags —
+each projection's execution plan (kernel variant, tiles, pack layout,
+runtime precision) is resolved from the plan registry at trace time.
+"""
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.layers.linear import linear_apply, linear_init
+from repro.layers.linear import linear_init, projection
 from repro.sharding.rules import constrain
 
 
@@ -26,7 +30,7 @@ def mlp_init(key, d_model: int, d_ff: int, act: str = "swiglu", dtype=jnp.bfloat
 
 
 def mlp_apply(params, x, *, act: str = "swiglu", policy, training=False, name="mlp"):
-    la = functools.partial(linear_apply, policy=policy, training=training)
+    la = projection(policy=policy, training=training)
     # The non-linearity rides into the projection's epilogue: on the fused
     # bit-serial path it is applied in-kernel to the freshly dequantized
     # accumulator — one HBM round trip fewer per MLP block.

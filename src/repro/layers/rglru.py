@@ -9,13 +9,12 @@ elementwise — kept fp32, like the paper's full-width accumulator.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.layers.linear import linear_apply, linear_init
+from repro.layers.linear import linear_init, projection
 from repro.layers.ssm import _causal_conv
 
 _C = 8.0  # RG-LRU temperature (Griffin)
@@ -51,7 +50,7 @@ def rglru_apply(
     cache=None,
 ):
     """x: (B, S, d). Returns (out, new_cache {'conv','h','len'})."""
-    la = functools.partial(linear_apply, policy=policy, training=training)
+    la = projection(policy=policy, training=training)
     y_branch = jax.nn.gelu(
         la(params["in_y"], x, name=f"{name}/in_y").astype(jnp.float32)
     )

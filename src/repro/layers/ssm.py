@@ -13,13 +13,12 @@ Decode is O(1): one state update per token (the long_500k cell).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.layers.linear import linear_apply, linear_init
+from repro.layers.linear import linear_init, projection
 from repro.sharding.rules import constrain
 
 
@@ -152,7 +151,7 @@ def ssm_apply(
 ):
     """x: (B, S, d_model). Returns (out, new_cache)."""
     bsz, s, _ = x.shape
-    la = functools.partial(linear_apply, policy=policy, training=training)
+    la = projection(policy=policy, training=training)
     conv_dim = d_inner + 2 * d_state
 
     zxbcdt = la(params["in_proj"], x, name=f"{name}/in_proj")

@@ -12,6 +12,15 @@ at bit-plane level) and the result rides in the param tree as
 ``'w_planes'`` — so the per-forward cost of the bit-serial path is only
 the activation-side decomposition. See DESIGN.md §"Weight-cache
 lifecycle".
+
+The cache is what makes precision a *runtime* knob (DESIGN.md §7): at
+bit-plane level the stored decomposition is MSB-prefix truncatable, so
+one quantization at the policy width serves every lower width — an
+execution plan fetched with a runtime-dialed policy
+(:meth:`PrecisionPolicy.with_runtime_bits`) consumes only the top planes,
+with zero re-quantization. Which layers are cacheable is the plan
+module's contract (:func:`repro.core.plan.plan_cacheable`), so quantize
+time and plan resolution can never disagree about cache usability.
 """
 
 from __future__ import annotations
@@ -19,6 +28,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import bitplanes as bp
+from repro.core.plan import plan_cacheable
 from repro.core.precision import PrecisionPolicy
 from repro.core.quantize import quantize
 
@@ -61,21 +71,14 @@ def decompose_linear_weight(
     return fn(w_q)
 
 
-def _cacheable(policy: PrecisionPolicy, prec) -> bool:
-    """The plane cache serves the int32-exact fully-serial kernel configs
-    (max 8 bits: wider configs accumulate in f32 and fall back anyway)."""
-    return (
-        policy.mode == "fully_serial"
-        and policy.level in ("bitplane", "digit")
-        and max(prec.w_bits, prec.a_bits) <= 8
-    )
-
-
 def quantize_params(params, policy: PrecisionPolicy, *, plane_cache: bool = False):
     """Walk the parameter pytree, converting policy-active linears.
 
     ``plane_cache=True`` also attaches the pre-decomposed weight planes
-    (the decompose-once serving cache)."""
+    (the decompose-once serving cache). Weights are quantized and
+    decomposed at the policy's *configured* width — the storage width the
+    runtime precision dial truncates from — never at the dialed width, so
+    the same tree serves every precision at or below it."""
 
     def rec(node, path):
         if _is_linear(node):
@@ -85,7 +88,7 @@ def quantize_params(params, policy: PrecisionPolicy, *, plane_cache: bool = Fals
                 # leading dims) -> per-output-channel scales.
                 q = quantize(node["w"].astype("float32"), prec.w_bits, axis=-2)
                 out = {"w_q": q.values, "w_scale": q.scale}
-                if plane_cache and _cacheable(policy, prec):
+                if plane_cache and plan_cacheable(policy, prec):
                     out["w_planes"] = decompose_linear_weight(
                         q.values,
                         w_bits=prec.w_bits,

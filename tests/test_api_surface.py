@@ -1,0 +1,124 @@
+"""Public-API snapshot (ISSUE 4 satellite): the exported names and
+signatures of ``repro.core.plan`` and ``repro.kernels.ops`` are a
+contract — the serving engines, benches, and external callers build plans
+against them. A signature drift must be a conscious decision: update the
+snapshot below in the same commit that changes the API, and say why in
+the message. Runs in the CI lint job (fast: imports + inspect only).
+"""
+
+import dataclasses
+import inspect
+
+import repro.core.plan as plan_mod
+import repro.kernels.ops as ops_mod
+
+
+def _sig(obj) -> str:
+    return str(inspect.signature(obj))
+
+
+def _describe(obj) -> str:
+    if dataclasses.is_dataclass(obj):
+        fields = tuple(f.name for f in dataclasses.fields(obj))
+        methods = tuple(
+            n for n, m in vars(obj).items()
+            if callable(m) and not n.startswith("_")
+        )
+        return f"dataclass{fields} methods{methods}"
+    if isinstance(obj, type) and hasattr(obj, "_fields"):
+        return f"NamedTuple{tuple(obj._fields)}"
+    if inspect.isclass(obj):
+        methods = tuple(
+            n for n, m in vars(obj).items()
+            if callable(m) and not n.startswith("_")
+        )
+        return f"class methods{methods}"
+    if callable(obj):
+        return _sig(obj)
+    return type(obj).__name__
+
+
+PLAN_SURFACE = {
+    "MatmulPlan": "dataclass('key', 'registry', 'kernel', 'bm', 'bn', 'bk', "
+    "'pack_block', 'a_shift', 'w_shift', 'scale_mult', 'requant_w', "
+    "'trunc_cache') methods('with_precision', 'describe')",
+    "PlanKey": "dataclass('m', 'k', 'n', 'a_bits', 'w_bits', 'a_in_bits', "
+    "'w_in_bits', 'variant', 'level', 'mode', 'backend', 'accum', "
+    "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk') methods()",
+    "PlanRegistry": "class methods('get', 'clear', 'plans')",
+    "DEFAULT_REGISTRY": "PlanRegistry",
+    "make_plan": "(policy: 'PrecisionPolicy', layer_name: 'str', shapes, "
+    "backend: 'str' = 'auto', *, w_planes: 'Optional[bp.WeightPlanes]' = None, "
+    "w_stored_bits: 'Optional[int]' = None, has_epilogue: 'bool' = True, "
+    "accum_dtype: 'Any' = None, registry: 'Optional[PlanRegistry]' = None, "
+    "bm: 'Optional[int]' = None, bn: 'int' = 128, bk: 'Optional[int]' = None) "
+    "-> 'MatmulPlan'",
+    "plan_for_operands": "(shapes, *, a_bits: 'int', w_bits: 'int', "
+    "variant: 'str' = 'booth', level: 'str' = 'digit', "
+    "mode: 'str' = 'fully_serial', backend: 'str' = 'auto', "
+    "accum_dtype: 'Any' = <class 'jax.numpy.int32'>, "
+    "has_epilogue: 'bool' = False, w_planes: 'Optional[bp.WeightPlanes]' = None, "
+    "a_in_bits: 'Optional[int]' = None, w_in_bits: 'Optional[int]' = None, "
+    "fused: 'Optional[bool]' = None, packed: 'Optional[bool]' = None, "
+    "bm: 'Optional[int]' = None, bn: 'int' = 128, bk: 'Optional[int]' = None, "
+    "registry: 'Optional[PlanRegistry]' = None) -> 'MatmulPlan'",
+    "plan_cacheable": "(policy: 'PrecisionPolicy', prec: 'LayerPrecision') "
+    "-> 'bool'",
+}
+
+OPS_SURFACE = {
+    "resolve_backend": "(backend: 'str') -> 'str'",
+    "auto_tiles": "(m: 'int', k: 'int', bm: 'Optional[int]', "
+    "bk: 'Optional[int]') -> 'tuple[int, int]'",
+    "Epilogue": "NamedTuple('a_scale', 'w_scale', 'bias', 'activation', "
+    "'out_dtype')",
+    "apply_epilogue": "(acc: 'jax.Array', ep: 'Epilogue') -> 'jax.Array'",
+    "plane_matmul": "(a_planes: 'jax.Array', w_planes: 'jax.Array', "
+    "pair_weights: 'jax.Array', *, backend: 'str' = 'auto', "
+    "bm: 'Optional[int]' = None, bn: 'int' = 128, bk: 'Optional[int]' = None) "
+    "-> 'jax.Array'",
+    "plane_matmul_packed": "(packed_a: 'bp.PackedPlanes', "
+    "packed_w: 'bp.PackedPlanes', pair_weights: 'jax.Array', *, "
+    "backend: 'str' = 'auto', bm: 'Optional[int]' = None, bn: 'int' = 128, "
+    "bk: 'Optional[int]' = None) -> 'jax.Array'",
+    "fused_linear": "(x_q: 'jax.Array', packed_w: 'bp.PackedPlanes', "
+    "epilogue: 'Optional[Epilogue]', *, a_bits: 'int', variant: 'str', "
+    "backend: 'str' = 'auto', bm: 'Optional[int]' = None, bn: 'int' = 128) "
+    "-> 'jax.Array'",
+    "bitserial_matmul": "(a: 'jax.Array', w: 'jax.Array', *, a_bits: 'int', "
+    "w_bits: 'int', variant: 'str' = 'booth', level: 'str' = 'digit', "
+    "mode: 'str' = 'fully_serial', backend: 'str' = 'auto', "
+    "accum_dtype=<class 'jax.numpy.int32'>, packed: 'bool | None' = None, "
+    "w_planes: 'bp.WeightPlanes | None' = None, fused: 'bool | None' = None, "
+    "epilogue: 'Optional[Epilogue]' = None, **tile_kw) -> 'jax.Array'",
+    "flash_attention": "(q: 'jax.Array', k: 'jax.Array', v: 'jax.Array', *, "
+    "causal: 'bool' = True, sm_scale: 'float | None' = None, "
+    "backend: 'str' = 'auto', block_q: 'int' = 128, block_k: 'int' = 128, "
+    "kv_lens: 'Optional[jax.Array]' = None, "
+    "k_scale: 'Optional[jax.Array]' = None, "
+    "v_scale: 'Optional[jax.Array]' = None) -> 'jax.Array'",
+}
+
+
+def test_plan_module_exports():
+    assert sorted(plan_mod.__all__) == sorted(PLAN_SURFACE)
+
+
+def test_plan_api_surface():
+    got = {name: _describe(getattr(plan_mod, name)) for name in PLAN_SURFACE}
+    assert got == PLAN_SURFACE
+
+
+def test_ops_api_surface():
+    got = {name: _describe(getattr(ops_mod, name)) for name in OPS_SURFACE}
+    assert got == OPS_SURFACE
+
+
+def test_plan_callable_contract():
+    """The execute signature itself is API: (x, w=None, *, w_planes, epilogue)."""
+    assert _sig(plan_mod.MatmulPlan.__call__) == \
+        "(self, x, w=None, *, w_planes=None, epilogue=None)"
+    assert _sig(plan_mod.MatmulPlan.with_precision) == (
+        "(self, a_bits: 'Optional[int]' = None, "
+        "w_bits: 'Optional[int]' = None) -> \"'MatmulPlan'\""
+    )
