@@ -14,7 +14,13 @@ committed baseline and fails (exit 1) when:
 * the serving ``precision_sweep`` (decode tok/s at 4-bit vs 8-bit from
   one stored decomposition) falls below ``--sweep-floor`` — plane-prefix
   truncation does 1/4 the plane-pair work at 4-bit, so the ratio
-  collapsing toward 1x means the dial silently stopped truncating.
+  collapsing toward 1x means the dial silently stopped truncating;
+* the ``sparsity_sweep`` compact-vs-dense decode ratio on the
+  narrow-checkpoint tier falls below ``--sparsity-floor`` — occupancy
+  compaction drops half the weight planes there, so the ratio collapsing
+  toward 1x means pack-time plane compaction silently stopped shrinking
+  the plane-pair grid. Its parity entries (gated/compacted tokens must
+  equal dense bit for bit) hard-fail like every other parity verdict.
 
 Sections are matched by (bench section, config name, shape): the smoke
 sweep writes ``fused_linear_smoke`` so CI compares smoke shapes against
@@ -51,29 +57,60 @@ def _fused_speedups(doc: dict, section: str) -> dict[tuple, float]:
     return out
 
 
-def _sweep_failures(doc: dict, floor: float) -> list[str]:
-    """Runtime-precision sweep: 4-bit decode throughput vs 8-bit, from one
-    decomposition. Self-contained ratio (same host, same run), so it is
-    checked against an absolute floor rather than a committed baseline."""
-    sweep = doc.get("benches", {}).get("serving", {}).get("precision_sweep")
+def _floor_failures(
+    sweep: dict | None,
+    *,
+    section: str,
+    key: str,
+    floor: float,
+    label: str,
+    missing: str,
+    collapse: str,
+) -> list[str]:
+    """Shared floor gate for the self-contained serving sweeps: their
+    ratios come from one host and one run, so they are checked against an
+    absolute floor rather than a committed baseline — and a missing
+    section fails loudly (mirroring the fused gate's no-overlap rule)
+    instead of passing vacuously."""
     if not sweep:
-        # mirror the fused gate's no-overlap rule: a gate with nothing to
-        # check must fail loudly, not pass vacuously
         return [
-            "no serving.precision_sweep section in the fresh run — "
-            "serving_bench stopped emitting the runtime-precision sweep "
-            "the gate is supposed to floor-check"
+            f"no {section} section in the fresh run — serving_bench "
+            f"stopped emitting the {missing} the gate is supposed to "
+            "floor-check"
         ]
-    got = sweep.get("speedup_4_vs_8", 0.0)
+    got = sweep.get(key, 0.0)
     verdict = "ok" if got >= floor else "REGRESSED"
-    print(f"[gate] serving.precision_sweep: 4-bit vs 8-bit decode "
-          f"{got:.2f}x (floor {floor:.2f}x) {verdict}")
+    print(f"[gate] {section}: {label} {got:.2f}x (floor {floor:.2f}x) {verdict}")
     if got < floor:
         return [
-            f"precision_sweep speedup_4_vs_8 {got:.2f}x below floor "
-            f"{floor:.2f}x — runtime truncation is not paying for itself"
+            f"{section} {key} {got:.2f}x below floor {floor:.2f}x — "
+            f"{collapse} is not paying for itself"
         ]
     return []
+
+
+def _sweep_failures(doc: dict, floor: float) -> list[str]:
+    return _floor_failures(
+        doc.get("benches", {}).get("serving", {}).get("precision_sweep"),
+        section="serving.precision_sweep",
+        key="speedup_4_vs_8",
+        floor=floor,
+        label="4-bit vs 8-bit decode",
+        missing="runtime-precision sweep",
+        collapse="runtime truncation",
+    )
+
+
+def _sparsity_failures(doc: dict, floor: float) -> list[str]:
+    return _floor_failures(
+        doc.get("benches", {}).get("sparsity_sweep"),
+        section="sparsity_sweep",
+        key="speedup_compact_vs_dense_4bit",
+        floor=floor,
+        label="compact vs dense decode (4-bit tier)",
+        missing="occupancy-sparsity sweep",
+        collapse="plane compaction",
+    )
 
 
 def _parity_failures(doc: dict) -> list[str]:
@@ -102,6 +139,12 @@ def main(argv=None) -> int:
         help="min tolerated 4-bit-vs-8-bit decode speedup in the serving "
         "precision sweep (measured 3x+ on dev hosts; ratio-based so it "
         "transfers across machines)",
+    )
+    ap.add_argument(
+        "--sparsity-floor", type=float, default=1.2,
+        help="min tolerated compact-vs-dense decode speedup on the "
+        "sparsity sweep's narrow-checkpoint tier (measured ~1.8x on dev "
+        "hosts; compaction halves the plane-pair grid there)",
     )
     args = ap.parse_args(argv)
 
@@ -141,6 +184,7 @@ def main(argv=None) -> int:
         )
 
     failures.extend(_sweep_failures(fresh, args.sweep_floor))
+    failures.extend(_sparsity_failures(fresh, args.sparsity_floor))
 
     parity = _parity_failures(fresh)
     for p in parity:

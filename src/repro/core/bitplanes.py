@@ -232,6 +232,17 @@ class PackedPlanes:
                  in natural order — the layout the fused linear kernel
                  needs, since its activation operand is raw (unpermuted)
                  int8. Must be a multiple of ``WORD_BITS``.
+    ``occupancy``: per-(plane, word) {0,1} int32 bitmap, shape
+                 ``(n_planes, n_words)``: 1 where any plane value packed
+                 into that word (across all non-packed axes) is non-zero.
+                 A zero entry proves a whole word slice of a plane is
+                 inert, so a kernel K step can skip that plane's MXU pass
+                 (DESIGN.md §8). ``mag`` alone determines it (a set Booth
+                 sign bit implies a set mag bit). Word granularity reduces
+                 exactly onto any word-aligned K tile via
+                 :func:`occupancy_per_tile` — the same reduction for the
+                 global-planar and blocked layouts, since both tile the
+                 word axis.
     """
 
     mag: jax.Array
@@ -240,6 +251,7 @@ class PackedPlanes:
     axis: int
     weights: tuple[int, ...]
     block: Optional[int] = None
+    occupancy: Optional[jax.Array] = None
 
     @property
     def n_planes(self) -> int:
@@ -261,14 +273,15 @@ class PackedPlanes:
 
 
 def _packed_flatten(p: PackedPlanes):
-    return (p.mag, p.sign), (p.k, p.axis, p.weights, p.block)
+    return (p.mag, p.sign, p.occupancy), (p.k, p.axis, p.weights, p.block)
 
 
 def _packed_unflatten(aux, children):
-    mag, sign = children
+    mag, sign, occupancy = children
     k, axis, weights, block = aux
     return PackedPlanes(
-        mag=mag, sign=sign, k=k, axis=axis, weights=weights, block=block
+        mag=mag, sign=sign, k=k, axis=axis, weights=weights, block=block,
+        occupancy=occupancy,
     )
 
 
@@ -394,8 +407,14 @@ def pack_planes(
     else:
         mag = towords(v)
         sign = None
+    # Per-(plane, word) occupancy: reduce the non-zero mask over every axis
+    # except the planes axis and the packed-word axis. Sign bits are a
+    # subset of mag bits, so mag alone decides occupancy.
+    reduce_axes = tuple(a for a in range(mag.ndim) if a not in (0, axis))
+    occupancy = jnp.any(mag != 0, axis=reduce_axes).astype(jnp.int32)
     return PackedPlanes(
-        mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights), block=block
+        mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights), block=block,
+        occupancy=occupancy,
     )
 
 
@@ -425,6 +444,107 @@ def pack_decomposition(
     return pack_planes(
         dec.planes, axis=axis, ternary=variant == "booth", weights=dec.weights,
         block=block,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Occupancy & plane compaction (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# Booth recoding's value is that most digits are zero; occupancy metadata
+# turns that into skippable work. Two granularities:
+#
+#   * per-(plane, word) bitmaps (``PackedPlanes.occupancy``, computed at
+#     pack time) let a kernel K step predicate individual plane-pair MXU
+#     passes (:func:`occupancy_per_tile` reduces words onto K tiles);
+#   * *compaction* (:func:`compact_packed`) drops planes whose bitmap is
+#     zero everywhere — the grid of plane pairs itself shrinks, on every
+#     backend. Kept planes keep their original shift: the ``weights``
+#     tuple is filtered, not renumbered by position, so the plane axis is
+#     no longer dense in bit index and downstream code must consult
+#     ``weights`` (all executors already do).
+
+
+def occupancy_per_tile(occ: jax.Array, words_per_tile: int) -> jax.Array:
+    """Reduce a per-(plane, word) occupancy bitmap onto word-aligned K
+    tiles: entry ``(p, t)`` is 1 iff any word of tile ``t`` in plane ``p``
+    is occupied. The word axis zero-pads up to a whole tile (padding words
+    are inert), matching the kernels' operand padding."""
+    p, w = occ.shape
+    nt = -(-w // words_per_tile)
+    pad = nt * words_per_tile - w
+    if pad:
+        occ = jnp.pad(occ, ((0, 0), (0, pad)))
+    return jnp.any(occ.reshape(p, nt, words_per_tile) != 0, axis=-1).astype(jnp.int32)
+
+
+def _take_planes(arr: Optional[jax.Array], idx: list[int], axis: int):
+    if arr is None:
+        return None
+    return jnp.take(arr, jnp.asarray(idx, jnp.int32), axis=axis)
+
+
+def compact_packed(packed: PackedPlanes) -> PackedPlanes:
+    """Drop planes whose occupancy bitmap is all-zero (host-side, load
+    time: the kept-plane set is static shape information, so operands must
+    be concrete — never call this under ``jit``).
+
+    The surviving planes keep their original shift weights, so the result
+    reconstructs the identical integers and any plane-pair matmul over it
+    is bit-identical to the dense execution — there are just fewer pairs.
+    An all-zero operand keeps one inert plane so downstream kernels never
+    see a zero-extent planes axis."""
+    import numpy as np
+
+    if packed.occupancy is None:
+        raise ValueError("compact_packed needs occupancy metadata (re-pack first)")
+    if len(packed.weights) != packed.occupancy.shape[-2]:
+        raise ValueError(
+            "compaction needs per-plane weights to renumber shifts; pack via "
+            "pack_decomposition / make_weight_planes (got "
+            f"{len(packed.weights)} weights for {packed.occupancy.shape[-2]} planes)"
+        )
+    occ = np.asarray(packed.occupancy)
+    # stacked/scanned caches carry leading batch dims: a plane survives if
+    # it is occupied anywhere in the stack (the kept set must be shared)
+    plane_axis = occ.ndim - 2
+    reduce_axes = tuple(a for a in range(occ.ndim) if a != plane_axis)
+    alive = occ.any(axis=reduce_axes)
+    idx = [i for i, a in enumerate(alive) if a] or [0]
+    if len(idx) == len(packed.weights):
+        return packed
+    mag_pa = packed.mag.ndim - 3  # (*batch, P, words-or-rows, cols)
+    return PackedPlanes(
+        mag=_take_planes(packed.mag, idx, mag_pa),
+        sign=_take_planes(packed.sign, idx, mag_pa),
+        k=packed.k,
+        axis=packed.axis,
+        weights=tuple(packed.weights[i] for i in idx),
+        block=packed.block,
+        occupancy=_take_planes(packed.occupancy, idx, plane_axis),
+    )
+
+
+def compact_weight_planes(wp: "WeightPlanes") -> "WeightPlanes":
+    """Compact a bit-plane weight cache: drop statically-zero planes from
+    the packed words AND the optional raw planes (same kept set). The
+    stored width ``w_bits`` is unchanged — compaction removes *work*, not
+    precision — and prefix truncation of the result stays exact (the
+    truncation mask filters by plane weight, see :func:`truncate_packed`)."""
+    if wp.level != "bitplane" or wp.packed is None:
+        raise ValueError("compaction needs a packed bitplane cache")
+    packed = compact_packed(wp.packed)
+    if packed is wp.packed:
+        return wp
+    keep = {w for w in packed.weights}
+    idx = [i for i, w in enumerate(wp.weights) if w in keep]
+    planes = (
+        None if wp.planes is None
+        else _take_planes(wp.planes, idx, wp.planes.ndim - 3)
+    )
+    return WeightPlanes(
+        packed=packed, planes=planes, weights=packed.weights,
+        level=wp.level, variant=wp.variant, w_bits=wp.w_bits,
     )
 
 
@@ -567,28 +687,61 @@ def shift_requantize(
     return x >> s  # arithmetic shift: floor division by 2^s
 
 
-def truncate_packed(packed: PackedPlanes, to_bits: int, variant: Variant) -> PackedPlanes:
+def truncate_packed(
+    packed: PackedPlanes,
+    to_bits: int,
+    variant: Variant,
+    from_bits: Optional[int] = None,
+) -> PackedPlanes:
     """Top-``to_bits`` plane prefix of a packed decomposition.
 
-    A pure slice of the leading planes axis of the packed words — the
-    dropped planes are never read, so a kernel consuming the result moves
-    ``to_bits/from_bits`` of the weight bytes. Weights are reindexed to
-    the fresh ``to_bits`` plane weights (the 2^s factor moves into the
-    caller's dequant scale).
-    """
-    from_bits = packed.n_planes
+    A pure slice of the planes axis of the packed words — the dropped
+    planes are never read, so a kernel consuming the result moves
+    ``to_bits/from_bits`` of the weight bytes. The slice keeps the planes
+    whose weight magnitude is at least ``2^s`` (``s = from_bits -
+    to_bits``) and shifts each kept weight down by ``s`` — on a dense
+    decomposition that is exactly the old ``planes[s:]`` prefix with the
+    fresh ``plane_weights(to_bits)``, and on a *compacted* one it keeps
+    whatever high planes survived compaction (the occupancy bitmap rows
+    slice with the same mask: the truncation-consistency invariant,
+    DESIGN.md §8). ``from_bits`` defaults to the plane count and must be
+    given for compacted inputs (whose plane count no longer encodes the
+    stored width)."""
+    from_bits = packed.n_planes if from_bits is None else from_bits
     if not 1 <= to_bits <= from_bits:
         raise ValueError(f"to_bits must be in [1, {from_bits}], got {to_bits}")
     s = from_bits - to_bits
     if s == 0:
         return packed
+    floor = 1 << s
+    idx = [i for i, w in enumerate(packed.weights) if abs(w) >= floor]
+    pa = packed.mag.ndim - 3
+    if not idx:
+        # every kept plane fell below the cut (a compacted cache whose
+        # surviving planes were all low): the requantized value is exactly
+        # 0 for every element (Booth's round-half-up carry included — an
+        # all-zero suffix above the cut forces the carry to cancel), so
+        # one inert zero plane stands in to keep the planes axis non-empty
+        mag = jnp.zeros_like(jax.lax.slice_in_dim(packed.mag, 0, 1, axis=pa))
+        return PackedPlanes(
+            mag=mag,
+            sign=None if packed.sign is None else jnp.zeros_like(mag),
+            k=packed.k, axis=packed.axis, weights=(1,), block=packed.block,
+            occupancy=None if packed.occupancy is None else jnp.zeros_like(
+                jax.lax.slice_in_dim(
+                    packed.occupancy, 0, 1, axis=packed.occupancy.ndim - 2
+                )
+            ),
+        )
     return PackedPlanes(
-        mag=packed.mag[s:],
-        sign=None if packed.sign is None else packed.sign[s:],
+        mag=_take_planes(packed.mag, idx, pa),
+        sign=None if packed.sign is None else _take_planes(packed.sign, idx, pa),
         k=packed.k,
         axis=packed.axis,
-        weights=plane_weights(to_bits, variant),
+        weights=tuple(packed.weights[i] >> s for i in idx),
         block=packed.block,
+        occupancy=None if packed.occupancy is None
+        else _take_planes(packed.occupancy, idx, packed.occupancy.ndim - 2),
     )
 
 
@@ -609,11 +762,29 @@ def truncate_weight_planes(wp: WeightPlanes, to_bits: int) -> WeightPlanes:
     if to_bits == wp.w_bits:
         return wp
     s = wp.w_bits - to_bits
+    floor = 1 << s
+    # same weight-magnitude mask as truncate_packed, so the packed words,
+    # the raw planes and the occupancy bitmap all slice consistently —
+    # also correct for compacted caches, whose planes axis is sparse in
+    # bit index (the mask degenerates to the old [s:] prefix when dense)
+    idx = [i for i, w in enumerate(wp.weights) if abs(w) >= floor]
+    packed = (
+        None if wp.packed is None
+        else truncate_packed(wp.packed, to_bits, wp.variant, from_bits=wp.w_bits)  # type: ignore[arg-type]
+    )
+    if wp.planes is None:
+        planes = None
+    elif idx:
+        planes = _take_planes(wp.planes, idx, wp.planes.ndim - 3)
+    else:
+        planes = jnp.zeros_like(
+            jax.lax.slice_in_dim(wp.planes, 0, 1, axis=wp.planes.ndim - 3)
+        )
+    weights = tuple(wp.weights[i] >> s for i in idx) or (1,)
     return WeightPlanes(
-        packed=None if wp.packed is None
-        else truncate_packed(wp.packed, to_bits, wp.variant),  # type: ignore[arg-type]
-        planes=None if wp.planes is None else wp.planes[s:],
-        weights=plane_weights(to_bits, wp.variant),  # type: ignore[arg-type]
+        packed=packed,
+        planes=planes,
+        weights=weights,
         level=wp.level,
         variant=wp.variant,
         w_bits=to_bits,

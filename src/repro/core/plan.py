@@ -70,7 +70,10 @@ def _ops():
 
 def _cache_spec(wp: Optional[bp.WeightPlanes]) -> Optional[tuple]:
     """Static descriptor of a weight-plane cache (route resolution only
-    needs the layout, never the array contents)."""
+    needs the layout, never the array contents). The plane count is part
+    of the layout: a *compacted* cache (zero planes dropped at pack time)
+    has fewer planes than its stored width and therefore different
+    operand shapes and pair-weight grids."""
     if wp is None:
         return None
     packed = wp.packed
@@ -81,6 +84,7 @@ def _cache_spec(wp: Optional[bp.WeightPlanes]) -> Optional[tuple]:
         packed is not None,
         None if packed is None else packed.block,
         wp.planes is not None,
+        len(wp.weights),
     )
 
 
@@ -106,8 +110,9 @@ class PlanKey:
     fused: Optional[bool]  # requested flag (None = auto)
     packed: Optional[bool]  # requested flag (None = auto)
     bm: Optional[int]  # requested tiles (None = auto)
-    bn: int
+    bn: Optional[int]
     bk: Optional[int]
+    sparsity: str = "off"  # occupancy-gated sparse plane execution
 
 
 class PlanRegistry:
@@ -244,11 +249,20 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         kernel = "staged"
 
     # Tile resolution (once; executors pass explicit tiles to the kernel
-    # wrappers, which never override explicit values).
-    bm, bk = ops.auto_tiles(key.m, key.k, key.bm, key.bk)
+    # wrappers, which never override explicit values). bn joins the
+    # heuristic: fused decode steps take the N-derived wide tile.
+    bm, bn, bk = ops.auto_tiles(key.m, key.k, key.bm, key.bk, n=key.n, bn=key.bn)
     if key.bm is None and kernel in ("fused_cached", "fused_repack", "staged", "cached_planes"):
         bm = ops._int8_bm(bm)  # these kernels consume int8 operand tiles
     pack_block = bk  # fused_repack packs the weight with the K tile as block
+
+    # Occupancy gating is a property of the plane-pair kernels: the jnp
+    # routes compute the full sum (and the oracle has no occupancy), so
+    # only the Pallas plane-pair kernels receive the gate flag. "compact"
+    # implies gating too — kept planes still have zero K blocks to skip.
+    gate = key.sparsity in ("gate", "compact") and kernel in (
+        "fused_cached", "fused_repack", "cached_packed", "staged_packed"
+    ) and key.backend != "jnp"
 
     a_shift = key.a_in_bits - key.a_bits
     requant_w = w_shift > 0 and kernel in (
@@ -260,7 +274,7 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         registry=registry,
         kernel=kernel,
         bm=bm,
-        bn=key.bn,
+        bn=bn,
         bk=bk,
         pack_block=pack_block,
         a_shift=a_shift,
@@ -268,6 +282,7 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         scale_mult=float(1 << (a_shift + w_shift)),
         requant_w=requant_w,
         trunc_cache=trunc_cache,
+        gate=gate,
     )
 
 
@@ -306,7 +321,7 @@ def _exec_fused_cached(plan, x, w, wp, ep):
     ep2 = ep._replace(a_scale=ep.a_scale.reshape(-1, 1))
     out2 = ops.fused_linear(
         x2, packed_w, ep2, a_bits=key.a_bits, variant=key.variant,
-        backend=key.backend, bm=plan.bm, bn=plan.bn,
+        backend=key.backend, bm=plan.bm, bn=plan.bn, gate=plan.gate,
     )
     return out2.reshape(lead + (packed_w.mag.shape[-1],))
 
@@ -323,7 +338,7 @@ def _exec_fused_repack(plan, x, w, wp, ep):
     ep2 = ep._replace(a_scale=ep.a_scale.reshape(-1, 1))
     out2 = ops.fused_linear(
         x2, packed_w, ep2, a_bits=key.a_bits, variant=key.variant,
-        backend=key.backend, bm=plan.bm, bn=plan.bn,
+        backend=key.backend, bm=plan.bm, bn=plan.bn, gate=plan.gate,
     )
     return out2.reshape(lead + (packed_w.mag.shape[-1],))
 
@@ -342,7 +357,7 @@ def _exec_cached_packed(plan, x, w, wp, ep):
     )
     out2 = ops.plane_matmul_packed(
         pa, wp_eff.packed, pw, backend=key.backend,
-        bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        bm=plan.bm, bn=plan.bn, bk=plan.bk, gate=plan.gate,
     )
     return _finish(plan, out2, lead, ep)
 
@@ -399,7 +414,8 @@ def _exec_staged(plan, x, w, wp, ep):
         pa = bp.pack_planes(dec_a.planes, axis=-1, ternary=ternary)
         pwk = bp.pack_planes(dec_w.planes, axis=-2, ternary=ternary)
         out2 = ops.plane_matmul_packed(
-            pa, pwk, pw, backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk
+            pa, pwk, pw, backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+            gate=plan.gate,
         )
     else:
         out2 = ops.plane_matmul(
@@ -468,6 +484,9 @@ class MatmulPlan:
     scale_mult: float
     requant_w: bool
     trunc_cache: bool
+    #: occupancy-gated sparse plane execution resolved for this route
+    #: (sparsity != "off" on a Pallas plane-pair kernel)
+    gate: bool = False
 
     def __call__(self, x, w=None, *, w_planes=None, epilogue=None):
         key = self.key
@@ -516,6 +535,57 @@ class MatmulPlan:
             dataclasses.replace(self.key, a_bits=a, w_bits=w)
         )
 
+    def sparsity_stats(self, w_planes: Optional[bp.WeightPlanes] = None) -> dict:
+        """Plane-pair MXU passes skipped vs executed under this plan.
+
+        Static, weight-side accounting from the cache's occupancy bitmap
+        (host-side — materializes the bitmap with numpy; do not call under
+        ``jit``): ``pair_passes_dense`` is what sparsity="off" issues at
+        the executed width, ``pair_passes_after_compaction`` what survives
+        the cache's plane compaction, ``pair_passes_executed`` what the
+        weight-occupancy gate leaves. Dynamic activation-side gating skips
+        strictly more at run time and is not counted here. Without a
+        packed bit-plane cache only the mode/route fields are reported.
+        """
+        import numpy as np
+
+        key = self.key
+        out = {
+            "mode": key.sparsity,
+            "kernel": self.kernel,
+            "gated": self.gate,
+            "planes_dense": key.w_bits,
+            "a_planes": key.a_bits,
+        }
+        if (
+            w_planes is None
+            or w_planes.packed is None
+            or w_planes.packed.occupancy is None
+        ):
+            return out
+        wp = _trunc(self, w_planes)
+        packed = wp.packed
+        wpt = (packed.block or self.bk) // bp.WORD_BITS
+        occ = np.asarray(packed.occupancy)
+        occ = occ.any(axis=tuple(range(occ.ndim - 2)))  # stacked caches: OR
+        n_kept = occ.shape[0]
+        # same tile reduction the gated kernels consume — one source of truth
+        tiles = np.asarray(bp.occupancy_per_tile(jnp.asarray(occ, jnp.int32), wpt))
+        nk = tiles.shape[1]
+        occupied = int(tiles.sum())
+        dense = key.a_bits * key.w_bits * nk
+        executed = key.a_bits * occupied
+        out.update(
+            planes_kept=n_kept,
+            k_tiles=nk,
+            pair_passes_dense=dense,
+            pair_passes_after_compaction=key.a_bits * n_kept * nk,
+            pair_passes_executed=executed,
+            pair_passes_skipped=dense - executed,
+            skipped_fraction=round(1.0 - executed / max(dense, 1), 4),
+        )
+        return out
+
     def describe(self) -> str:
         k = self.key
         s = (
@@ -525,6 +595,8 @@ class MatmulPlan:
         )
         if self.a_shift or self.w_shift:
             s += f" trunc(w {k.w_in_bits}->{k.w_bits}, a {k.a_in_bits}->{k.a_bits})"
+        if k.sparsity != "off":
+            s += f" sparsity={k.sparsity}{' (gated)' if self.gate else ''}"
         return s
 
 
@@ -563,13 +635,18 @@ def plan_for_operands(
     fused: Optional[bool] = None,
     packed: Optional[bool] = None,
     bm: Optional[int] = None,
-    bn: int = 128,
+    bn: Optional[int] = None,
     bk: Optional[int] = None,
+    sparsity: str = "off",
     registry: Optional[PlanRegistry] = None,
 ) -> MatmulPlan:
     """Policy-free plan construction from explicit operand metadata (the
     compatibility shim and kernel-level callers use this; model code goes
     through :func:`make_plan`)."""
+    if sparsity not in ("off", "gate", "compact"):
+        raise ValueError(
+            f"sparsity must be 'off', 'gate' or 'compact', got {sparsity!r}"
+        )
     m, k, n = _norm_shapes(shapes)
     key = PlanKey(
         m=m, k=k, n=n,
@@ -583,6 +660,7 @@ def plan_for_operands(
         cache=_cache_spec(w_planes),
         fused=fused, packed=packed,
         bm=bm, bn=bn, bk=bk,
+        sparsity=sparsity,
     )
     return (DEFAULT_REGISTRY if registry is None else registry).get(key)
 
@@ -599,7 +677,7 @@ def make_plan(
     accum_dtype: Any = None,
     registry: Optional[PlanRegistry] = None,
     bm: Optional[int] = None,
-    bn: int = 128,
+    bn: Optional[int] = None,
     bk: Optional[int] = None,
 ) -> MatmulPlan:
     """Resolve the execution plan for one layer of a policy.
@@ -633,6 +711,7 @@ def make_plan(
         w_planes=w_planes,
         fused=policy.fuse_epilogue,
         bm=bm, bn=bn, bk=bk,
+        sparsity=policy.sparsity,
         registry=registry,
     )
 

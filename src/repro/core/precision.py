@@ -70,12 +70,24 @@ class PrecisionPolicy:
     #: quantizing at the lower width directly (they are per-token anyway).
     #: ``None`` entries leave that operand at its configured width.
     runtime_bits: Optional[Tuple[Optional[int], Optional[int]]] = None
+    #: Occupancy-gated sparse plane execution (DESIGN.md §8): ``"off"``
+    #: issues every plane-pair MXU pass; ``"gate"`` predicates each pass
+    #: on pack-time weight occupancy AND'd with dynamic activation
+    #: occupancy (TPU kernels; the jnp oracle has no passes to skip);
+    #: ``"compact"`` additionally drops entirely-zero weight planes from
+    #: the serving cache at quantize time, shrinking the plane-pair grid
+    #: itself on every backend. All three are bit-identical.
+    sparsity: str = "off"
 
     def __post_init__(self):
         if self.runtime_bits is not None:
             for b in self.runtime_bits:
                 if b is not None and not 1 <= b <= MAX_BITS:
                     raise ValueError(f"runtime bits must be in [1, {MAX_BITS}], got {b}")
+        if self.sparsity not in ("off", "gate", "compact"):
+            raise ValueError(
+                f"sparsity must be 'off', 'gate' or 'compact', got {self.sparsity!r}"
+            )
 
     @staticmethod
     def off() -> "PrecisionPolicy":
@@ -92,6 +104,7 @@ class PrecisionPolicy:
         mode: str = "fully_serial",
         keep_dense: Tuple[str, ...] = (),
         fuse_epilogue: Optional[bool] = None,
+        sparsity: str = "off",
     ) -> "PrecisionPolicy":
         """Same precision everywhere except ``keep_dense`` layer patterns."""
         a_bits = w_bits if a_bits is None else a_bits
@@ -103,6 +116,7 @@ class PrecisionPolicy:
             level=level,
             mode=mode,
             fuse_epilogue=fuse_epilogue,
+            sparsity=sparsity,
         )
 
     @staticmethod

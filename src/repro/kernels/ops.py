@@ -41,7 +41,14 @@ def _pow2_ceil(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length() if n > 1 else 1
 
 
-def auto_tiles(m: int, k: int, bm: Optional[int], bk: Optional[int]) -> tuple[int, int]:
+def auto_tiles(
+    m: int,
+    k: int,
+    bm: Optional[int],
+    bk: Optional[int],
+    n: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> tuple[int, ...]:
     """Decode-shape block heuristic.
 
     The fixed ``bm=128`` tile wastes 16x+ of every MXU pass on an M=1..8
@@ -49,12 +56,24 @@ def auto_tiles(m: int, k: int, bm: Optional[int], bk: Optional[int]) -> tuple[in
     smallest legal sublane multiple covering M (power of two, >= 8, capped
     at 128); ``bk=None`` takes the 512 default capped to K rounded up to
     the 128 lane width (also a whole number of packed words).
+
+    With ``n`` given the output-feature tile joins the heuristic and a
+    3-tuple ``(bm, bn, bk)`` comes back: ``bn=None`` picks N rounded up to
+    the 128 lane width, capped at 256 — on the M<=8 decode shapes the
+    wider tile halves the N grid (and its per-step weight-plane unpack
+    setup) while the (bm, bn) operands stay far under the VMEM budget; the
+    128 floor is the Mosaic lane width. Without ``n`` the historical
+    2-tuple contract is unchanged.
     """
     if bm is None:
         bm = min(128, max(8, _pow2_ceil(m)))
     if bk is None:
         bk = min(512, max(128, -(-k // 128) * 128))
-    return bm, bk
+    if n is None:
+        return bm, bk
+    if bn is None:
+        bn = min(256, max(128, -(-n // 128) * 128))
+    return bm, bn, bk
 
 
 def _int8_bm(bm: int) -> int:
@@ -149,11 +168,15 @@ def plane_matmul_packed(
     bm: Optional[int] = None,
     bn: int = 128,
     bk: Optional[int] = None,
+    gate: bool = False,
 ) -> jax.Array:
     """Dispatch wrapper for the packed plane matmul kernel.
 
     The jnp path unpacks and runs the reference — the parity oracle the
     packed kernel is tested against (and an exact pack/unpack round trip).
+    ``gate``: occupancy-gated sparse plane execution (skip all-zero
+    plane-pair MXU passes; bit-identical). The jnp oracle has no passes to
+    skip and ignores it.
     """
     backend = resolve_backend(backend)
     if backend == "jnp":
@@ -167,7 +190,7 @@ def plane_matmul_packed(
     bm, bk = auto_tiles(m, packed_a.k, bm, bk)
     return _plane_mm_packed(
         packed_a, packed_w, pair_weights,
-        bm=bm, bn=bn, bk=bk, interpret=backend == "interpret",
+        bm=bm, bn=bn, bk=bk, gate=gate, interpret=backend == "interpret",
     )
 
 
@@ -180,7 +203,8 @@ def fused_linear(
     variant: str,
     backend: str = "auto",
     bm: Optional[int] = None,
-    bn: int = 128,
+    bn: Optional[int] = None,
+    gate: bool = False,
 ) -> jax.Array:
     """Fully-fused bit-serial linear over 2-D quantized activations.
 
@@ -190,7 +214,9 @@ def fused_linear(
     returns the raw int32 accumulator — the pre-epilogue parity mode).
     The jnp backend is the staged parity oracle: decompose +
     :func:`ref.plane_matmul_ref` + :func:`apply_epilogue`, bit-identical
-    pre-epilogue.
+    pre-epilogue. ``bn=None`` derives the output tile from N (the decode
+    path's wide-tile heuristic — see :func:`auto_tiles`). ``gate``:
+    occupancy-gated sparse plane execution (ignored by the jnp oracle).
     """
     backend = resolve_backend(backend)
     pair_w = bs._wrap_weights(
@@ -203,10 +229,10 @@ def fused_linear(
         return acc if epilogue is None else apply_epilogue(acc, epilogue)
     m = x_q.shape[0]
     auto_bm = bm is None
-    bm, _ = auto_tiles(m, x_q.shape[1], bm, None)
+    bm, bn, _ = auto_tiles(m, x_q.shape[1], bm, None, n=packed_w.mag.shape[-1], bn=bn)
     if auto_bm:
         bm = _int8_bm(bm)  # x_q is an int8 tile
-    kw = dict(a_bits=a_bits, variant=variant, bm=bm, bn=bn,
+    kw = dict(a_bits=a_bits, variant=variant, bm=bm, bn=bn, gate=gate,
               interpret=backend == "interpret")
     if epilogue is None:
         return _fused_pallas(x_q, packed_w, pair_w, **kw)
@@ -316,7 +342,7 @@ def bitserial_matmul(
         fused=fused,
         packed=packed,
         bm=tile_kw.get("bm"),
-        bn=tile_kw.get("bn", 128),
+        bn=tile_kw.get("bn"),
         bk=tile_kw.get("bk"),
     )
     return plan(a, w, w_planes=w_planes, epilogue=epilogue)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.bitplanes import WORD_BITS, PackedPlanes
+from repro.core.bitplanes import WORD_BITS, PackedPlanes, occupancy_per_tile
 from repro.kernels.plane_mm_packed import _expand_words, _pad_dim
 
 ACTIVATIONS = {
@@ -76,9 +76,20 @@ def _fused_kernel(
     has_bias: bool,
     activation: str,
     nk: int,
+    gated: bool,
 ):
-    """One (bm, bn) output tile; grid dim 2 walks the K pack blocks."""
+    """One (bm, bn) output tile; grid dim 2 walks the K pack blocks.
+
+    ``gated``: occupancy-gated sparse plane execution — the static
+    per-(weight plane, K block) occupancy bitmap arrives in SMEM as the
+    first ref; activation-plane occupancy is computed *in-kernel* from the
+    just-sliced planes (the operand is live int8 — there is no pack-time
+    metadata to prefetch). Each plane-pair MXU pass is predicated on the
+    AND of the two, accumulating into the VMEM scratch, so an all-zero
+    pair costs one predicate check. Bit-identical to dense execution.
+    """
     it = iter(refs)
+    occ_ref = next(it) if gated else None  # SMEM (n_w, nk) weight occupancy
     pw_ref = next(it)
     x_ref = next(it)
     wm_ref = next(it)
@@ -101,19 +112,38 @@ def _fused_kernel(
 
     w_planes = [unpack_w(j) for j in range(n_w)]
 
-    acc = jnp.zeros(acc_ref.shape, jnp.int32)
-    for i in range(a_bits):
-        for j in range(n_w):
-            prod = jnp.dot(a_planes[i], w_planes[j], preferred_element_type=jnp.int32)
-            acc = acc + pw_ref[i * n_w + j] * prod
+    if gated:
+        @pl.when(k_step == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.int32)
 
-    @pl.when(k_step == 0)
-    def _init():
-        acc_ref[...] = acc
+        for i in range(a_bits):
+            occ_a = jnp.any(a_planes[i] != 0)  # dynamic, from live values
+            for j in range(n_w):
+                pred = jnp.logical_and(occ_a, occ_ref[j, k_step] != 0)
 
-    @pl.when(k_step > 0)
-    def _accum():
-        acc_ref[...] += acc
+                @pl.when(pred)
+                def _pass(i=i, j=j):
+                    prod = jnp.dot(
+                        a_planes[i], w_planes[j], preferred_element_type=jnp.int32
+                    )
+                    acc_ref[...] += pw_ref[i * n_w + j] * prod
+    else:
+        acc = jnp.zeros(acc_ref.shape, jnp.int32)
+        for i in range(a_bits):
+            for j in range(n_w):
+                prod = jnp.dot(
+                    a_planes[i], w_planes[j], preferred_element_type=jnp.int32
+                )
+                acc = acc + pw_ref[i * n_w + j] * prod
+
+        @pl.when(k_step == 0)
+        def _init():
+            acc_ref[...] = acc
+
+        @pl.when(k_step > 0)
+        def _accum():
+            acc_ref[...] += acc
 
     @pl.when(k_step == nk - 1)
     def _epilogue():
@@ -130,7 +160,10 @@ def _fused_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("a_bits", "variant", "activation", "out_dtype", "bm", "bn", "interpret"),
+    static_argnames=(
+        "a_bits", "variant", "activation", "out_dtype", "bm", "bn", "gate",
+        "interpret",
+    ),
 )
 def fused_plane_linear(
     x_q: jax.Array,
@@ -146,6 +179,7 @@ def fused_plane_linear(
     out_dtype=jnp.bfloat16,
     bm: int = 128,
     bn: int = 128,
+    gate: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused bit-serial linear: quantized matmul + dequant epilogue.
@@ -161,7 +195,17 @@ def fused_plane_linear(
     ``acc * a_scale * w_scale [+ bias]; activation`` runs in-kernel and the
     result is ``out_dtype``. With ``a_scale=None`` the raw int32
     accumulator is returned (pre-epilogue parity-test mode).
+
+    ``gate=True``: occupancy-gated sparse plane execution — weight-plane
+    occupancy from pack time is prefetched to SMEM and AND'd with
+    in-kernel activation-plane occupancy to skip all-zero plane-pair MXU
+    passes (bit-identical; see ``_fused_kernel``).
     """
+    if gate and packed_w.occupancy is None:
+        raise ValueError(
+            "gate=True needs weight occupancy metadata; re-pack the weight "
+            "operand (pack_planes computes it) or pass gate=False"
+        )
     if packed_w.axis != 1:
         raise ValueError(f"expected W packed on axis 1, got {packed_w.axis}")
     if packed_w.block is None:
@@ -198,6 +242,10 @@ def fused_plane_linear(
         pl.BlockSpec((n_w, bkw, bn), lambda mi, ni, ki: (0, ki, ni)),
     ]
     operands.insert(2, wm)
+    if gate:
+        # (P_w, nk) weight occupancy, whole array in SMEM for every step
+        operands.insert(0, occupancy_per_tile(packed_w.occupancy, bkw))
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
     if w_signed:
         operands.append(_pad_dim(packed_w.sign, 2, bn))
         in_specs.append(pl.BlockSpec((n_w, bkw, bn), lambda mi, ni, ki: (0, ki, ni)))
@@ -229,6 +277,7 @@ def fused_plane_linear(
         has_bias=has_bias,
         activation=activation,
         nk=nk,
+        gated=gate,
     )
     out = pl.pallas_call(
         kernel,

@@ -30,8 +30,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.bitplanes import WORD_BITS, PackedPlanes
+from repro.core.bitplanes import WORD_BITS, PackedPlanes, occupancy_per_tile
 
 
 def _expand_words(words: jax.Array, axis: int) -> jax.Array:
@@ -40,9 +41,22 @@ def _expand_words(words: jax.Array, axis: int) -> jax.Array:
     return jnp.concatenate(chunks, axis=axis)
 
 
-def _packed_mm_kernel(*refs, n_a: int, n_w: int, a_signed: bool, w_signed: bool):
-    """One (bm, bn) output tile for one packed-K chunk; grid dim 2 is K."""
+def _packed_mm_kernel(
+    *refs, n_a: int, n_w: int, a_signed: bool, w_signed: bool, gated: bool
+):
+    """One (bm, bn) output tile for one packed-K chunk; grid dim 2 is K.
+
+    ``gated``: occupancy-gated sparse plane execution (DESIGN.md §8) — an
+    SMEM-prefetched per-(weight plane, K step) occupancy bitmap rides in
+    as the first ref, each weight plane's MXU pass is predicated on it
+    AND'd with the *dynamic* activation-plane occupancy (a word-level
+    non-zero test on the packed A slab already in VMEM), and the
+    accumulator moves into the output ref so skipped pairs cost exactly
+    one predicate check. Zero planes contribute zero to the sum, so the
+    gated result is bit-identical to the dense one.
+    """
     it = iter(refs)
+    occ_ref = next(it) if gated else None  # SMEM (n_w, nk) weight occupancy
     pw_ref = next(it)
     am_ref = next(it)
     as_ref = next(it) if a_signed else None
@@ -66,6 +80,27 @@ def _packed_mm_kernel(*refs, n_a: int, n_w: int, a_signed: bool, w_signed: bool)
 
     a_planes = [unpack_a(i) for i in range(n_a)]
     w_planes = [unpack_w(j) for j in range(n_w)]
+
+    if gated:
+        @pl.when(k_step == 0)
+        def _zero():
+            o_ref[...] = jnp.zeros(o_ref.shape, jnp.int32)
+
+        for i in range(n_a):
+            # dynamic activation occupancy: one word-level test per plane
+            # (mag words cover Booth too — a set sign bit implies mag)
+            occ_a = jnp.any(am_ref[i] != 0)
+            for j in range(n_w):
+                pred = jnp.logical_and(occ_a, occ_ref[j, k_step] != 0)
+
+                @pl.when(pred)
+                def _pass(i=i, j=j):
+                    prod = jnp.dot(
+                        a_planes[i], w_planes[j], preferred_element_type=jnp.int32
+                    )
+                    o_ref[...] += pw_ref[i * n_w + j] * prod
+
+        return
 
     acc = jnp.zeros(o_ref.shape, jnp.int32)
     for i in range(n_a):
@@ -120,7 +155,7 @@ def _pad_dim(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("bm", "bn", "bk", "gate", "interpret")
 )
 def plane_matmul_packed(
     packed_a: PackedPlanes,
@@ -130,6 +165,7 @@ def plane_matmul_packed(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    gate: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """sum_{i,j} pair_weights[i*P_w+j] * (A_i @ W_j) from packed planes.
@@ -140,10 +176,22 @@ def plane_matmul_packed(
     bit-exact vs ``ref.plane_matmul_ref`` on the unpacked planes. Inputs
     are padded here (zero words are zero planes — inert), the output is
     sliced back; ``bk`` must be a multiple of 32.
+
+    ``gate=True`` enables occupancy-gated sparse plane execution: the
+    weight operand's pack-time occupancy bitmap is reduced onto the K
+    grid, prefetched to SMEM, and every plane-pair MXU pass is predicated
+    on it AND'd with dynamic activation-word occupancy — all-zero pairs
+    cost a predicate check instead of an MXU pass, and the result stays
+    bit-identical (zero planes contribute zero).
     """
     if bk % WORD_BITS:
         raise ValueError(f"bk must be a multiple of {WORD_BITS}, got {bk}")
     validate_packed_operands(packed_a, packed_w, pair_weights)
+    if gate and packed_w.occupancy is None:
+        raise ValueError(
+            "gate=True needs weight occupancy metadata; re-pack the weight "
+            "operand (pack_planes computes it) or pass gate=False"
+        )
     n_a, m, _ = packed_a.mag.shape
     n_w, _, n = packed_w.mag.shape
     bkw = bk // WORD_BITS
@@ -167,6 +215,10 @@ def plane_matmul_packed(
         pl.BlockSpec((n_a * n_w,), lambda mi, ni, ki: (0,)),
         pl.BlockSpec((n_a, bm, bkw), lambda mi, ni, ki: (0, mi, ki)),
     ]
+    if gate:
+        # (P_w, nk) weight occupancy, whole array in SMEM for every step
+        operands.insert(0, occupancy_per_tile(packed_w.occupancy, bkw))
+        in_specs.insert(0, pl.BlockSpec(memory_space=pltpu.SMEM))
     if a_signed:
         operands.append(prep_a(packed_a.sign))
         in_specs.append(pl.BlockSpec((n_a, bm, bkw), lambda mi, ni, ki: (0, mi, ki)))
@@ -182,6 +234,7 @@ def plane_matmul_packed(
         n_w=n_w,
         a_signed=a_signed,
         w_signed=w_signed,
+        gated=gate,
     )
     out = pl.pallas_call(
         kernel,

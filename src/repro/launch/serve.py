@@ -141,6 +141,7 @@ class Engine(_PrecisionDial):
         plane_cache: bool = True,
         sample_fn=None,
         seed: int = 0,
+        value_bits: Optional[int] = None,
     ):
         self.cfg = cfg
         self.policy = policy
@@ -148,8 +149,13 @@ class Engine(_PrecisionDial):
         # Quantize AND pre-decompose/pack the weight planes exactly once at
         # load time (plane_cache) — forwards only decompose activations,
         # and every runtime precision tier truncates this one decomposition.
+        # ``value_bits`` serves a narrow checkpoint from the uniform-width
+        # cache (quantize_params); with policy.sparsity="compact" the
+        # resulting zero planes are dropped here, at load time.
         self.q_params = (
-            quantize_params(params, policy, plane_cache=plane_cache)
+            quantize_params(
+                params, policy, plane_cache=plane_cache, value_bits=value_bits
+            )
             if policy.default.active
             else params
         )
@@ -226,6 +232,7 @@ class ContinuousBatchingEngine(_PrecisionDial):
         kv_quant: bool = True,
         plane_cache: bool = True,
         seed: int = 0,
+        value_bits: Optional[int] = None,
     ):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
@@ -236,7 +243,9 @@ class ContinuousBatchingEngine(_PrecisionDial):
         self.kv_quant = kv_quant
         self.plane_cache = plane_cache
         self.q_params = (
-            quantize_params(params, policy, plane_cache=plane_cache)
+            quantize_params(
+                params, policy, plane_cache=plane_cache, value_bits=value_bits
+            )
             if policy.default.active
             else params
         )
@@ -387,6 +396,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--precision-switch", default=None, metavar="STEP:BITS",
                     help="mid-serving reconfiguration: at decode step STEP "
                     "drop to BITS (continuous batching only), e.g. 8:4")
+    ap.add_argument("--sparsity", default="off",
+                    choices=("off", "gate", "compact"),
+                    help="occupancy-gated sparse plane execution: 'gate' "
+                    "skips all-zero plane-pair MXU passes in the TPU kernels "
+                    "(pack-time weight occupancy AND dynamic activation "
+                    "occupancy); 'compact' additionally drops entirely-zero "
+                    "weight planes from the serving cache at load time, "
+                    "shrinking the plane-pair grid on every backend. Both "
+                    "are bit-identical to 'off' (requires --level bitplane)")
     # legacy aliases (one release of backward compat; the consolidated
     # surface is --mode / --precision)
     ap.add_argument("--no-plane-cache", action="store_true",
@@ -423,9 +441,18 @@ def validate_args(args) -> None:
         for flag, val in (("--no-fused", args.no_fused),
                           ("--no-plane-cache", args.no_plane_cache),
                           ("--precision", args.precision is not None),
-                          ("--precision-switch", args.precision_switch)):
+                          ("--precision-switch", args.precision_switch),
+                          ("--sparsity", args.sparsity != "off")):
             if val:
                 die(f"{flag} needs an active quantization policy (--bits > 0)")
+    if args.sparsity != "off" and args.level != "bitplane":
+        die("--sparsity needs --level bitplane: occupancy bitmaps and plane "
+            "compaction exist for the packed bit-plane kernels only "
+            "(radix-256 digit planes carry no pack-time occupancy)")
+    if args.sparsity == "compact" and args.no_plane_cache:
+        die("--sparsity compact needs the weight-plane cache (drop "
+            "--no-plane-cache): compaction drops zero planes from the "
+            "load-time decomposition")
     if args.level == "digit" and args.variant == "sbmwc":
         die("--level digit --variant sbmwc has no TPU kernel (SBMwC radix-256 "
             "digits exceed int8) and would silently run the jnp path; use "
@@ -466,6 +493,7 @@ def main():
         PrecisionPolicy.uniform(
             args.bits, args.bits, variant=args.variant, level=args.level,
             fuse_epilogue=False if args.no_fused else None,
+            sparsity=args.sparsity,
         )
         if args.bits
         else PrecisionPolicy.off()
@@ -476,6 +504,8 @@ def main():
     tag = f"{cfg.name} w{run_bits}a{run_bits} {args.level}/{args.variant}"
     if args.precision:
         tag += f" (stored w{args.bits}, truncated)"
+    if args.sparsity != "off":
+        tag += f" sparsity={args.sparsity}"
 
     if args.mode == "lockstep":
         engine = Engine(

@@ -71,22 +71,49 @@ def decompose_linear_weight(
     return fn(w_q)
 
 
-def quantize_params(params, policy: PrecisionPolicy, *, plane_cache: bool = False):
+def quantize_params(
+    params,
+    policy: PrecisionPolicy,
+    *,
+    plane_cache: bool = False,
+    value_bits: int | None = None,
+):
     """Walk the parameter pytree, converting policy-active linears.
 
     ``plane_cache=True`` also attaches the pre-decomposed weight planes
     (the decompose-once serving cache). Weights are quantized and
     decomposed at the policy's *configured* width — the storage width the
     runtime precision dial truncates from — never at the dialed width, so
-    the same tree serves every precision at or below it."""
+    the same tree serves every precision at or below it.
+
+    ``value_bits``: quantize the weight *values* at a narrower width than
+    the storage/decomposition width (``value_bits < w_bits``) — the
+    narrow-checkpoint deployment: a layer quantized at, say, 4 bits served
+    from the engine's uniform 8-bit plane cache. The narrow integers
+    sign-extend in the wide container, so their high Booth planes are
+    identically zero and ``policy.sparsity="compact"`` recovers the
+    narrow-width execution cost automatically from the occupancy bitmaps
+    (DESIGN.md §8). ``None`` quantizes at the configured width.
+
+    With ``policy.sparsity == "compact"`` each cached decomposition is
+    compacted at load time (entirely-zero planes dropped, shifts
+    renumbered) — a host-side transform, so call this eagerly (engine
+    construction), never under ``jit``."""
 
     def rec(node, path):
         if _is_linear(node):
             prec = policy.lookup(path)
             if prec.active:
+                if value_bits is not None and not 1 <= value_bits <= prec.w_bits:
+                    raise ValueError(
+                        f"layer {path}: value_bits must be in [1, {prec.w_bits}] "
+                        f"(the configured storage width), got {value_bits}"
+                    )
                 # reduce over the input dim (axis -2; handles stacked/scanned
                 # leading dims) -> per-output-channel scales.
-                q = quantize(node["w"].astype("float32"), prec.w_bits, axis=-2)
+                q = quantize(
+                    node["w"].astype("float32"), value_bits or prec.w_bits, axis=-2
+                )
                 out = {"w_q": q.values, "w_scale": q.scale}
                 if plane_cache and plan_cacheable(policy, prec):
                     out["w_planes"] = decompose_linear_weight(
@@ -95,6 +122,8 @@ def quantize_params(params, policy: PrecisionPolicy, *, plane_cache: bool = Fals
                         variant=policy.variant,
                         level=policy.level,
                     )
+                    if policy.sparsity == "compact" and policy.level == "bitplane":
+                        out["w_planes"] = bp.compact_weight_planes(out["w_planes"])
                 return out
             return node
         if isinstance(node, dict):

@@ -41,18 +41,20 @@ def _describe(obj) -> str:
 PLAN_SURFACE = {
     "MatmulPlan": "dataclass('key', 'registry', 'kernel', 'bm', 'bn', 'bk', "
     "'pack_block', 'a_shift', 'w_shift', 'scale_mult', 'requant_w', "
-    "'trunc_cache') methods('with_precision', 'describe')",
+    "'trunc_cache', 'gate') methods('with_precision', 'sparsity_stats', "
+    "'describe')",
     "PlanKey": "dataclass('m', 'k', 'n', 'a_bits', 'w_bits', 'a_in_bits', "
     "'w_in_bits', 'variant', 'level', 'mode', 'backend', 'accum', "
-    "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk') methods()",
+    "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk', "
+    "'sparsity') methods()",
     "PlanRegistry": "class methods('get', 'clear', 'plans')",
     "DEFAULT_REGISTRY": "PlanRegistry",
     "make_plan": "(policy: 'PrecisionPolicy', layer_name: 'str', shapes, "
     "backend: 'str' = 'auto', *, w_planes: 'Optional[bp.WeightPlanes]' = None, "
     "w_stored_bits: 'Optional[int]' = None, has_epilogue: 'bool' = True, "
     "accum_dtype: 'Any' = None, registry: 'Optional[PlanRegistry]' = None, "
-    "bm: 'Optional[int]' = None, bn: 'int' = 128, bk: 'Optional[int]' = None) "
-    "-> 'MatmulPlan'",
+    "bm: 'Optional[int]' = None, bn: 'Optional[int]' = None, "
+    "bk: 'Optional[int]' = None) -> 'MatmulPlan'",
     "plan_for_operands": "(shapes, *, a_bits: 'int', w_bits: 'int', "
     "variant: 'str' = 'booth', level: 'str' = 'digit', "
     "mode: 'str' = 'fully_serial', backend: 'str' = 'auto', "
@@ -60,7 +62,8 @@ PLAN_SURFACE = {
     "has_epilogue: 'bool' = False, w_planes: 'Optional[bp.WeightPlanes]' = None, "
     "a_in_bits: 'Optional[int]' = None, w_in_bits: 'Optional[int]' = None, "
     "fused: 'Optional[bool]' = None, packed: 'Optional[bool]' = None, "
-    "bm: 'Optional[int]' = None, bn: 'int' = 128, bk: 'Optional[int]' = None, "
+    "bm: 'Optional[int]' = None, bn: 'Optional[int]' = None, "
+    "bk: 'Optional[int]' = None, sparsity: 'str' = 'off', "
     "registry: 'Optional[PlanRegistry]' = None) -> 'MatmulPlan'",
     "plan_cacheable": "(policy: 'PrecisionPolicy', prec: 'LayerPrecision') "
     "-> 'bool'",
@@ -69,7 +72,8 @@ PLAN_SURFACE = {
 OPS_SURFACE = {
     "resolve_backend": "(backend: 'str') -> 'str'",
     "auto_tiles": "(m: 'int', k: 'int', bm: 'Optional[int]', "
-    "bk: 'Optional[int]') -> 'tuple[int, int]'",
+    "bk: 'Optional[int]', n: 'Optional[int]' = None, "
+    "bn: 'Optional[int]' = None) -> 'tuple[int, ...]'",
     "Epilogue": "NamedTuple('a_scale', 'w_scale', 'bias', 'activation', "
     "'out_dtype')",
     "apply_epilogue": "(acc: 'jax.Array', ep: 'Epilogue') -> 'jax.Array'",
@@ -80,11 +84,11 @@ OPS_SURFACE = {
     "plane_matmul_packed": "(packed_a: 'bp.PackedPlanes', "
     "packed_w: 'bp.PackedPlanes', pair_weights: 'jax.Array', *, "
     "backend: 'str' = 'auto', bm: 'Optional[int]' = None, bn: 'int' = 128, "
-    "bk: 'Optional[int]' = None) -> 'jax.Array'",
+    "bk: 'Optional[int]' = None, gate: 'bool' = False) -> 'jax.Array'",
     "fused_linear": "(x_q: 'jax.Array', packed_w: 'bp.PackedPlanes', "
     "epilogue: 'Optional[Epilogue]', *, a_bits: 'int', variant: 'str', "
-    "backend: 'str' = 'auto', bm: 'Optional[int]' = None, bn: 'int' = 128) "
-    "-> 'jax.Array'",
+    "backend: 'str' = 'auto', bm: 'Optional[int]' = None, "
+    "bn: 'Optional[int]' = None, gate: 'bool' = False) -> 'jax.Array'",
     "bitserial_matmul": "(a: 'jax.Array', w: 'jax.Array', *, a_bits: 'int', "
     "w_bits: 'int', variant: 'str' = 'booth', level: 'str' = 'digit', "
     "mode: 'str' = 'fully_serial', backend: 'str' = 'auto', "
