@@ -20,7 +20,19 @@ committed baseline and fails (exit 1) when:
   compaction drops half the weight planes there, so the ratio collapsing
   toward 1x means pack-time plane compaction silently stopped shrinking
   the plane-pair grid. Its parity entries (gated/compacted tokens must
-  equal dense bit for bit) hard-fail like every other parity verdict.
+  equal dense bit for bit) hard-fail like every other parity verdict;
+* the ``integrity`` section's detect-vs-off decode overhead exceeds
+  ``--integrity-ceiling`` (default 1.15x) — the ABFT + audit layer must
+  stay cheap enough to leave on in production. Its parity entries (100%
+  injected-fault detection, bit-identical scrub recovery, detect==off
+  tokens) hard-fail like every other parity verdict.
+
+Input handling is itself gated: a missing file, malformed JSON, a
+document without a ``benches`` section, and a non-finite (NaN/inf)
+metric each fail with a distinct, actionable message instead of a
+traceback — CI artifacts go missing or get torn often enough that
+"which of the five ways did it break" should not require reading a
+stack trace.
 
 Sections are matched by (bench section, config name, shape): the smoke
 sweep writes ``fused_linear_smoke`` so CI compares smoke shapes against
@@ -35,7 +47,64 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
+
+
+def _load(path: str, label: str) -> tuple[dict | None, list[str]]:
+    """Load one bench report; every way the input can be broken gets its
+    own actionable failure instead of a traceback."""
+    try:
+        with open(path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        return None, [
+            f"{label} file {path!r} does not exist — for the baseline, "
+            "regenerate and commit it (python benchmarks/kernel_bench.py "
+            "--smoke); for the fresh file, the bench step upstream of the "
+            "gate did not run or wrote elsewhere"
+        ]
+    except OSError as e:
+        return None, [f"{label} file {path!r} is unreadable: {e}"]
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        return None, [
+            f"{label} file {path!r} is not valid JSON (line {e.lineno} "
+            f"col {e.colno}: {e.msg}) — usually a truncated or torn "
+            "write; regenerate the report"
+        ]
+    if not isinstance(doc, dict) or not isinstance(doc.get("benches"), dict) \
+            or not doc["benches"]:
+        return None, [
+            f"{label} file {path!r} has no 'benches' section — it is not "
+            "a kernel-bench report; point the gate at BENCH_kernel.json-"
+            "style files"
+        ]
+    return doc, []
+
+
+def _nan_failures(doc: dict, label: str) -> list[str]:
+    """A NaN/inf metric means a bench divided by zero or timed nothing —
+    every ratio comparison downstream would silently pass or fail on it."""
+    fails: list[str] = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{path}.{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}[{i}]")
+        elif isinstance(node, float) and not math.isfinite(node):
+            fails.append(
+                f"{label} metric {path} is {node!r} — a bench produced a "
+                "non-finite number (zero wall time or 0/0 ratio); the run "
+                "is unusable, regenerate it"
+            )
+
+    walk(doc.get("benches", {}), "benches")
+    return fails
 
 
 def _fused_speedups(doc: dict, section: str) -> dict[tuple, float]:
@@ -113,6 +182,33 @@ def _sparsity_failures(doc: dict, floor: float) -> list[str]:
     )
 
 
+def _integrity_failures(doc: dict, ceiling: float) -> list[str]:
+    """Ceiling gate on the ABFT/audit serving cost. Detection and
+    recovery verdicts ride the hard parity gate; this checks the one
+    number that is a tolerance, not an invariant: detect-mode decode
+    must stay within ``ceiling`` of unchecked decode."""
+    integ = doc.get("benches", {}).get("integrity")
+    if not integ:
+        return [
+            "no integrity section in the fresh run — serving_bench "
+            "stopped emitting the ABFT/fault-injection sweep the gate is "
+            "supposed to ceiling-check"
+        ]
+    got = integ.get("overhead_detect_vs_off_x", float("inf"))
+    verdict = "ok" if got <= ceiling else "REGRESSED"
+    print(
+        f"[gate] integrity: detect-vs-off decode overhead {got:.3f}x "
+        f"(ceiling {ceiling:.2f}x) {verdict}"
+    )
+    if got > ceiling:
+        return [
+            f"integrity overhead_detect_vs_off_x {got:.3f}x above ceiling "
+            f"{ceiling:.2f}x — the ABFT + audit layer costs more than the "
+            "always-on fault-tolerance budget"
+        ]
+    return []
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -146,14 +242,24 @@ def main(argv=None) -> int:
         "sparsity sweep's narrow-checkpoint tier (measured ~1.8x on dev "
         "hosts; compaction halves the plane-pair grid there)",
     )
+    ap.add_argument(
+        "--integrity-ceiling", type=float, default=1.15,
+        help="max tolerated detect-vs-off decode overhead from the "
+        "integrity sweep (ABFT + audits must stay within 15%% to be an "
+        "always-on production mode)",
+    )
     args = ap.parse_args(argv)
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
+    fresh, failures = _load(args.fresh, "fresh")
+    baseline, b_fails = _load(args.baseline, "baseline")
+    failures.extend(b_fails)
+    if fresh is None or baseline is None:
+        print(f"[gate] FAILED ({len(failures)} problem(s)):")
+        for f_ in failures:
+            print(f"[gate]   - {f_}")
+        return 1
 
-    failures: list[str] = []
+    failures.extend(_nan_failures(fresh, "fresh"))
 
     base_sp = _fused_speedups(baseline, args.section)
     fresh_sp = _fused_speedups(fresh, args.section)
@@ -185,6 +291,7 @@ def main(argv=None) -> int:
 
     failures.extend(_sweep_failures(fresh, args.sweep_floor))
     failures.extend(_sparsity_failures(fresh, args.sparsity_floor))
+    failures.extend(_integrity_failures(fresh, args.integrity_ceiling))
 
     parity = _parity_failures(fresh)
     for p in parity:

@@ -31,8 +31,16 @@ Reports, into the ``serving`` section of BENCH_kernel.json:
   narrow width is floor-checked (``check_bench_regression
   --sparsity-floor``).
 
+* an ``integrity`` section (ISSUE 6): decode tok/s with ABFT + audits on
+  (``detect``) vs off, token parity between the two, and a seeded
+  fault-injection run against a ``scrub`` engine that must detect every
+  flipped bit and recover bit-identical tokens. Overhead is gated by
+  ``check_bench_regression --integrity-ceiling``; the verdicts ride the
+  hard parity gate.
+
 CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]
-[--precision-sweep] [--sparsity-sweep]`` (each sweep alone).
+[--precision-sweep] [--sparsity-sweep] [--integrity-sweep]`` (each
+sweep alone).
 """
 
 from __future__ import annotations
@@ -51,6 +59,7 @@ from repro.core.precision import PrecisionPolicy
 from repro.launch.serve import ContinuousBatchingEngine, Engine
 from repro.models import quant
 from repro.models.transformer import init_params
+from repro.runtime.faults import FaultInjector
 from repro.runtime.scheduler import Request
 
 ARCH = "granite-3-8b"
@@ -233,6 +242,120 @@ def sparsity_sweep(cfg, params, smoke: bool = False) -> dict:
     }
 
 
+def integrity_sweep(cfg, params, smoke: bool = False) -> dict:
+    """ABFT/checksum serving cost + injected-SEU detection and recovery.
+
+    Three verdicts, all hard-gated in CI (``parity`` dict +
+    ``check_bench_regression --integrity-ceiling``):
+
+    * ``detect`` overhead: decode tok/s with per-matmul ABFT row-sum
+      checks, per-iteration params audits and KV slot checksums, vs the
+      same engine with integrity off. Acceptance: within the CI ceiling
+      (default 1.15x).
+    * token parity: the detect engine must emit bit-identical tokens to
+      the unchecked engine (checks are read-only).
+    * fault run: a seeded :class:`FaultInjector` flips one weight-plane
+      bit and one KV bit mid-serving against a ``scrub`` engine; every
+      flip must be detected AND the output tokens must still match the
+      fault-free run bit for bit (scrub-and-retry recovery).
+    """
+    if smoke:
+        lens, gen, n_slots = [4, 8], 6, 2
+    else:
+        lens, gen, n_slots = [8, 8, 16, 16], 16, 4
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (s,)),
+                    max_new_tokens=gen, arrival_step=0)
+            for i, s in enumerate(lens)
+        ]
+
+    # Audits (full-params fingerprint + KV slot checksums) amortize over
+    # iterations in production; ABFT stays per-matmul. The fault-run
+    # engine below keeps audit_interval=1 for tightest detection latency.
+    audit_interval = 4
+    tok_per_s, tokens = {}, {}
+    detect_stats: dict = {}
+    for mode in ("off", "detect"):
+        policy = PrecisionPolicy.uniform(
+            8, 8, variant="booth", level="bitplane", integrity=mode
+        )
+        engine = ContinuousBatchingEngine(
+            cfg, params, policy, n_slots=n_slots, max_len=max(lens) + gen,
+            audit_interval=audit_interval,
+        )
+        engine.run(requests())  # warm: compile this mode's steps
+        best, res = 0.0, {}
+        for _ in range(2):
+            res, stats = engine.run(requests())
+            best = max(best, stats["tok_per_s"])
+            if mode == "detect":
+                detect_stats = stats.get("integrity", {})
+        tok_per_s[mode] = round(best, 2)
+        tokens[mode] = res
+
+    # Injected-fault run: scrub engine, one plane flip + one KV flip at
+    # seed-fixed iterations. Same greedy workload, so recovery == the
+    # fault-free tokens, bit for bit.
+    spec = "planes@2,kv@3;seed=7"
+    policy = PrecisionPolicy.uniform(
+        8, 8, variant="booth", level="bitplane", integrity="scrub"
+    )
+    engine = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=n_slots, max_len=max(lens) + gen
+    )
+    engine.run(requests())  # warm
+    injector = FaultInjector(spec)
+    res_f, stats_f = engine.run(requests(), injector=injector)
+    recovered = all(
+        np.array_equal(res_f.get(rid), want) for rid, want in tokens["off"].items()
+    )
+    detect_parity = all(
+        np.array_equal(tokens["detect"].get(rid), want)
+        for rid, want in tokens["off"].items()
+    )
+
+    parity = {
+        "integrity_tokens_detect_vs_off": "ok" if detect_parity else "mismatch",
+        "fault_detection": (
+            "ok" if injector.events and not injector.undetected else "missed"
+        ),
+        "fault_recovery_tokens": "ok" if recovered else "mismatch",
+    }
+    return {
+        "workload": {"prompt_lens": lens, "gen": gen, "n_slots": n_slots},
+        "variant": "booth",
+        "audit_interval": audit_interval,
+        "tok_per_s": tok_per_s,
+        "overhead_detect_vs_off_x": round(
+            tok_per_s["off"] / max(tok_per_s["detect"], 1e-9), 3
+        ),
+        "detect_stats": {
+            k: detect_stats[k]
+            for k in ("abft_checks", "abft_alarms", "audits", "audit_alarms",
+                      "kv_checks", "kv_alarms")
+            if k in detect_stats
+        },
+        "fault_run": {
+            "spec": spec,
+            "injected": len(injector.events),
+            "detected": len(injector.events) - len(injector.undetected),
+            "scrubs": stats_f.get("integrity", {}).get("scrubs", 0),
+            "step_retries": stats_f.get("integrity", {}).get("step_retries", 0),
+        },
+        "parity": parity,
+        "note": (
+            "detect = per-matmul ABFT row-sum checks + per-iteration params "
+            "fingerprint audit + per-slot KV checksums, all inside the "
+            "serving loop; fault run injects one weight-plane bit flip and "
+            "one KV bit flip (seeded) against a scrub engine and requires "
+            "100% detection plus bit-identical recovered tokens"
+        ),
+    }
+
+
 def serving_bench(json_path: str | None = None, smoke: bool = False):
     """Returns report rows; writes the ``serving`` JSON section."""
     from kernel_bench import JSON_PATH, _write_bench_section
@@ -278,6 +401,7 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
 
     sweep = precision_sweep(cfg, params, smoke=smoke)
     sparsity = sparsity_sweep(cfg, params, smoke=smoke)
+    integrity = integrity_sweep(cfg, params, smoke=smoke)
 
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
@@ -330,6 +454,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         path, "sparsity_sweep",
         {"bench": "sparsity_sweep", "arch": cfg.name, "smoke": smoke, **sparsity},
     )
+    _write_bench_section(
+        path, "integrity",
+        {"bench": "integrity", "arch": cfg.name, "smoke": smoke, **integrity},
+    )
     rows = [
         ("serving/cb_int8_tok_s", payload["tok_per_s"]["cb_int8_kv"],
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
@@ -339,6 +467,9 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
          f"truncation_{sweep['verdict']}"),
         ("serving/sparsity_compact_4bit_x", sparsity["speedup_compact_vs_dense_4bit"],
          f"parity_{sparsity['parity']['sparsity_tokens_w4eff']}"),
+        ("serving/integrity_detect_overhead_x", integrity["overhead_detect_vs_off_x"],
+         f"faults_{integrity['parity']['fault_detection']}"
+         f"_recovery_{integrity['parity']['fault_recovery_tokens']}"),
     ]
     return rows
 
@@ -351,13 +482,17 @@ if __name__ == "__main__":
                     help="run only the runtime-precision sweep and print it")
     ap.add_argument("--sparsity-sweep", action="store_true",
                     help="run only the occupancy-sparsity sweep and print it")
+    ap.add_argument("--integrity-sweep", action="store_true",
+                    help="run only the ABFT/fault-injection sweep and print it")
     args = ap.parse_args()
-    if args.precision_sweep or args.sparsity_sweep:
+    if args.precision_sweep or args.sparsity_sweep or args.integrity_sweep:
         import json as _json
 
         cfg = get_reduced(ARCH)
         params = init_params(cfg, jax.random.PRNGKey(0))
-        fn = precision_sweep if args.precision_sweep else sparsity_sweep
+        fn = (precision_sweep if args.precision_sweep
+              else sparsity_sweep if args.sparsity_sweep
+              else integrity_sweep)
         print(_json.dumps(fn(cfg, params, smoke=args.smoke), indent=2))
     else:
         for name, val, derived in serving_bench(args.json, smoke=args.smoke):

@@ -1,5 +1,5 @@
 """Async atomic sharded checkpointing."""
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointCorruptionError, CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointCorruptionError", "CheckpointManager"]

@@ -19,10 +19,16 @@ import re
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A restored array's checksum does not match the one recorded at
+    save time (bit rot, torn write, SEU in storage)."""
 
 
 def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
@@ -99,11 +105,20 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         flat, dtypes = _flatten(host_state)
+        # per-array CRC over the raw bytes, verified on restore: the atomic
+        # rename protects against torn *publishes*, the checksums against
+        # bit rot inside a published checkpoint (DESIGN.md §9)
+        checksums = {
+            k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+            for k, v in flat.items()
+        }
         with open(tmp / "arrays.npz", "wb") as f:
             np.savez(f, **flat)
             f.flush()
             os.fsync(f.fileno())
-        (tmp / "meta.json").write_text(json.dumps({**meta, "_dtypes": dtypes}))
+        (tmp / "meta.json").write_text(
+            json.dumps({**meta, "_dtypes": dtypes, "_checksums": checksums})
+        )
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic publish
@@ -136,7 +151,12 @@ class CheckpointManager:
     def restore(self, template, step: Optional[int] = None, shardings=None):
         """Restore into the structure of ``template``; with ``shardings``
         the arrays are device_put directly into the (possibly different —
-        elastic re-meshing) target sharding."""
+        elastic re-meshing) target sharding.
+
+        Every array's bytes are verified against the CRC recorded at save
+        time; a mismatch raises :class:`CheckpointCorruptionError` naming
+        the corrupt array and step (pre-checksum checkpoints restore
+        without verification)."""
         step = self.latest_step() if step is None else step
         if step is None:
             return None, None
@@ -144,6 +164,22 @@ class CheckpointManager:
         with np.load(d / "arrays.npz") as z:
             flat = {k: z[k] for k in z.files}
         meta = json.loads((d / "meta.json").read_text())
+        checksums = meta.pop("_checksums", None)
+        if checksums is not None:
+            for key, want in checksums.items():
+                if key not in flat:
+                    raise CheckpointCorruptionError(
+                        f"checkpoint step {step}: array {key!r} has a "
+                        "recorded checksum but is missing from arrays.npz"
+                    )
+                got = zlib.crc32(np.ascontiguousarray(flat[key]).tobytes())
+                if got != want:
+                    raise CheckpointCorruptionError(
+                        f"checkpoint step {step}: array {key!r} is corrupt "
+                        f"(crc32 {got:#010x} != recorded {want:#010x}) — "
+                        "the checkpoint bytes changed after save; restore "
+                        "an older step or re-save from a healthy replica"
+                    )
         state = _unflatten_like(template, flat, meta.pop("_dtypes", {}))
         if shardings is not None:
             state = jax.tree_util.tree_map(

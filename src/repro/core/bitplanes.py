@@ -243,6 +243,17 @@ class PackedPlanes:
                  :func:`occupancy_per_tile` — the same reduction for the
                  global-planar and blocked layouts, since both tile the
                  word axis.
+    ``checksum``: optional per-plane *column checksums* for ABFT-checked
+                 execution (DESIGN.md §9): entry ``(p, k)`` is the signed
+                 sum of plane ``p``'s values at unpacked position ``k``
+                 over every non-packed axis — for a ``(P, K, N)`` weight
+                 plane tensor, ``checksum[p, k] = sum_n plane[p, k, n]``.
+                 Folding with the plane weights (:func:`checksum_vector`)
+                 yields the exact row-sum vector of the reconstructed
+                 integer matrix, the reference side of the matmul-time
+                 row-sum identity. Sliced by the same plane-index masks
+                 as the words under truncation and compaction, so every
+                 precision tier of a checksummed cache stays checkable.
     """
 
     mag: jax.Array
@@ -252,6 +263,7 @@ class PackedPlanes:
     weights: tuple[int, ...]
     block: Optional[int] = None
     occupancy: Optional[jax.Array] = None
+    checksum: Optional[jax.Array] = None
 
     @property
     def n_planes(self) -> int:
@@ -271,17 +283,30 @@ class PackedPlanes:
     def unpack(self, dtype=jnp.int8) -> jax.Array:
         return unpack_planes(self, dtype=dtype)
 
+    def fingerprint(self) -> jax.Array:
+        """Whole-cache fingerprint: uint32 fold of the bit patterns of
+        every stored array (words, occupancy, column checksums). Any
+        single bit flip moves it — including flips in padding bit
+        positions that the value-level checksums cannot see."""
+        from repro.core import integrity
+
+        return integrity.tree_checksum(
+            (self.mag, self.sign, self.occupancy, self.checksum)
+        )
+
 
 def _packed_flatten(p: PackedPlanes):
-    return (p.mag, p.sign, p.occupancy), (p.k, p.axis, p.weights, p.block)
+    return (p.mag, p.sign, p.occupancy, p.checksum), (
+        p.k, p.axis, p.weights, p.block,
+    )
 
 
 def _packed_unflatten(aux, children):
-    mag, sign, occupancy = children
+    mag, sign, occupancy, checksum = children
     k, axis, weights, block = aux
     return PackedPlanes(
         mag=mag, sign=sign, k=k, axis=axis, weights=weights, block=block,
-        occupancy=occupancy,
+        occupancy=occupancy, checksum=checksum,
     )
 
 
@@ -362,6 +387,7 @@ def pack_planes(
     ternary: bool = False,
     weights: tuple[int, ...] = (),
     block: Optional[int] = None,
+    checksum: bool = False,
 ) -> PackedPlanes:
     """Bit-pack plane values along ``axis`` into int32 words.
 
@@ -375,6 +401,9 @@ def pack_planes(
     ``block=None`` gives the global planar layout; an int gives the blocked
     layout (see :class:`PackedPlanes`), clamped so a small K never pads up
     to a full oversized block.
+
+    ``checksum=True`` additionally stores per-plane column checksums
+    (signed sums over the non-packed axes) for ABFT-checked execution.
     """
     axis = axis % planes.ndim
     if axis == 0:
@@ -412,9 +441,14 @@ def pack_planes(
     # subset of mag bits, so mag alone decides occupancy.
     reduce_axes = tuple(a for a in range(mag.ndim) if a not in (0, axis))
     occupancy = jnp.any(mag != 0, axis=reduce_axes).astype(jnp.int32)
+    chk = None
+    if checksum:
+        # Signed column sums of the *unpacked* values: exact, and bounded
+        # by the non-packed extent so int32 never saturates.
+        chk = jnp.sum(v, axis=reduce_axes)
     return PackedPlanes(
         mag=mag, sign=sign, k=k, axis=axis, weights=tuple(weights), block=block,
-        occupancy=occupancy,
+        occupancy=occupancy, checksum=chk,
     )
 
 
@@ -439,11 +473,12 @@ def pack_decomposition(
     axis: int = -1,
     variant: Variant = "sbmwc",
     block: Optional[int] = None,
+    checksum: bool = False,
 ) -> PackedPlanes:
     """Pack a bit-plane :class:`PlaneDecomposition` (carries its weights)."""
     return pack_planes(
         dec.planes, axis=axis, ternary=variant == "booth", weights=dec.weights,
-        block=block,
+        block=block, checksum=checksum,
     )
 
 
@@ -522,6 +557,9 @@ def compact_packed(packed: PackedPlanes) -> PackedPlanes:
         weights=tuple(packed.weights[i] for i in idx),
         block=packed.block,
         occupancy=_take_planes(packed.occupancy, idx, plane_axis),
+        checksum=None if packed.checksum is None else _take_planes(
+            packed.checksum, idx, packed.checksum.ndim - 2  # (*batch, P, K)
+        ),
     )
 
 
@@ -601,6 +639,7 @@ def make_weight_planes(
     radix_bits: int = 8,
     store: str = "auto",
     block: Optional[int] = DEFAULT_BLOCK,
+    checksum: bool = False,
 ) -> WeightPlanes:
     """Decompose (and, at bit-plane level, pack) a quantized weight matrix.
 
@@ -627,7 +666,9 @@ def make_weight_planes(
         store = "packed" if jax.default_backend() == "tpu" else "both"
     if level == "bitplane":
         dec = to_bitplanes(w_q, w_bits, variant)
-        packed = pack_decomposition(dec, axis=-2, variant=variant, block=block)
+        packed = pack_decomposition(
+            dec, axis=-2, variant=variant, block=block, checksum=checksum,
+        )
         return WeightPlanes(
             packed=packed,
             planes=dec.planes if store == "both" else None,
@@ -732,6 +773,11 @@ def truncate_packed(
                     packed.occupancy, 0, 1, axis=packed.occupancy.ndim - 2
                 )
             ),
+            checksum=None if packed.checksum is None else jnp.zeros_like(
+                jax.lax.slice_in_dim(
+                    packed.checksum, 0, 1, axis=packed.checksum.ndim - 2
+                )
+            ),
         )
     return PackedPlanes(
         mag=_take_planes(packed.mag, idx, pa),
@@ -742,6 +788,8 @@ def truncate_packed(
         block=packed.block,
         occupancy=None if packed.occupancy is None
         else _take_planes(packed.occupancy, idx, packed.occupancy.ndim - 2),
+        checksum=None if packed.checksum is None
+        else _take_planes(packed.checksum, idx, packed.checksum.ndim - 2),
     )
 
 
@@ -789,6 +837,68 @@ def truncate_weight_planes(wp: WeightPlanes, to_bits: int) -> WeightPlanes:
         variant=wp.variant,
         w_bits=to_bits,
     )
+
+
+# ---------------------------------------------------------------------------
+# ABFT column checksums (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# A checksummed pack stores, per plane, the signed sum of plane values
+# over the non-packed axes. Two detectors build on it:
+#
+#   * checksum_vector folds the per-plane checksums with the plane
+#     weights into the exact row-sum vector of the reconstructed integer
+#     weight matrix. The plan executors use it for the matmul-time
+#     row-sum identity (exact in int32 wraparound arithmetic):
+#         sum_n out[m, n] == sum_k x[m, k] * checksum_vector[k]
+#     Truncation and compaction slice the checksum rows with the same
+#     plane-index mask as the words, so the identity holds at every
+#     precision tier of one stored cache.
+#   * verify_packed recomputes checksums and occupancy from the stored
+#     words and compares — an at-rest scrubbing probe for the cache
+#     itself. Flips in padding bit positions (beyond ``k`` in the last
+#     word) are semantically inert and invisible here; the bit-pattern
+#     ``fingerprint()`` catches those.
+
+
+def checksum_vector(packed: PackedPlanes, dtype=jnp.int32) -> jax.Array:
+    """Fold per-plane column checksums with the plane weights:
+    ``sum_p weights[p] * checksum[p]`` — the exact row-sum vector
+    (length K, plus any leading batch dims) of the reconstructed
+    integer matrix."""
+    if packed.checksum is None:
+        raise ValueError(
+            "checksum_vector needs a checksummed pack "
+            "(pack_planes(..., checksum=True))"
+        )
+    ww = jnp.asarray(packed.weights, dtype).reshape((-1, 1))
+    return jnp.sum(packed.checksum.astype(dtype) * ww, axis=-2)
+
+
+def verify_packed(packed: PackedPlanes) -> jax.Array:
+    """Recompute column checksums (and occupancy) from the stored words
+    and compare against the stored copies. Returns a scalar bool array:
+    True = consistent. Detects any single-bit flip in the consumed extent
+    of ``mag``/``sign``/``occupancy``/``checksum``; combine with
+    :meth:`PackedPlanes.fingerprint` to also cover padding bits.
+
+    Operates on unbatched packs (``mag.ndim == 3`` for weights); verify
+    stacked caches under ``jax.vmap`` or via the fingerprint."""
+    if packed.checksum is None:
+        raise ValueError("verify_packed needs a checksummed pack")
+    vals = unpack_planes(packed, dtype=jnp.int32)
+    reduce_axes = tuple(a for a in range(vals.ndim) if a not in (0, packed.axis))
+    ok = jnp.all(jnp.sum(vals, axis=reduce_axes) == packed.checksum)
+    if packed.occupancy is not None:
+        occ_axes = tuple(
+            a for a in range(packed.mag.ndim) if a not in (0, packed.axis)
+        )
+        occ = jnp.any(packed.mag != 0, axis=occ_axes).astype(jnp.int32)
+        ok = ok & jnp.all(occ == packed.occupancy)
+    if packed.sign is not None:
+        # structural invariant: a set sign bit implies a set mag bit
+        ok = ok & jnp.all((packed.sign & ~packed.mag) == 0)
+    return ok
 
 
 def booth_nonzero_digit_count(x: jax.Array, bits: int) -> jax.Array:

@@ -1,0 +1,254 @@
+"""Integrity primitives: bit-pattern checksums and ABFT alarm plumbing.
+
+Radiation-induced single-event upsets (SEUs) flip bits in operand
+memories — the threat model bitSMM inherits from its space-mission
+setting. Protection here is layered (DESIGN.md §9):
+
+* **Storage fingerprints** (:func:`bit_fold`, :func:`tree_checksum`):
+  a uint32 fold of the raw bit patterns of every array leaf. Any single
+  bit flip anywhere in the folded state changes the fold (a flip of bit
+  ``b`` of one byte shifts the sum by ``±2^b mod 2^32``, never 0), so
+  comparing against a reference taken at load time is a deterministic
+  detector for *at-rest* corruption — including flips in packed-word
+  padding bits that value-level checks cannot see.
+* **ABFT execution checks** (reported here by the plan executors): the
+  row-sum identity ``sum_n (x @ w)[m, n] == x @ (sum_n w[:, n])`` holds
+  exactly in int32 wraparound arithmetic; the right-hand side comes from
+  the per-plane column checksums stored in ``PackedPlanes`` so a flipped
+  plane word is caught *at the matmul that consumed it*.
+
+Alarms are traced booleans inside jitted step functions. The
+:class:`Collector` bridges them out: executors call :func:`report`
+during tracing, the collector stacks the flags into one alarm vector the
+step returns, and the engine calls :meth:`Collector.harvest` on the
+concrete values to update the per-:class:`~repro.core.plan.PlanKey`
+pass/fail tally that ``MatmulPlan.integrity_stats()`` reads.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+INTEGRITY_MODES = ("off", "detect", "scrub")
+
+
+class IntegrityError(RuntimeError):
+    """Corruption was detected and could not be contained/recovered."""
+
+
+def check_integrity_mode(mode: str) -> str:
+    if mode not in INTEGRITY_MODES:
+        raise ValueError(
+            f"integrity must be one of {INTEGRITY_MODES}, got {mode!r}"
+        )
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# Bit-pattern folds (at-rest corruption detection)
+# ---------------------------------------------------------------------------
+
+
+def bit_fold(x: jax.Array) -> jax.Array:
+    """uint32 sum of the byte-wise bit pattern of ``x`` (any dtype).
+
+    Dtype-agnostic (bf16 scales and int8 KV fold the same way as int32
+    plane words) and single-flip-sound: one flipped bit changes one byte
+    by a power of two, so the uint32 wraparound sum moves by a non-zero
+    amount.
+    """
+    bytes_ = jax.lax.bitcast_convert_type(x, jnp.uint8)
+    return jnp.sum(bytes_.astype(jnp.uint32))
+
+
+def tree_checksum(tree: Any) -> jax.Array:
+    """Fold every array leaf of a pytree into one uint32 fingerprint."""
+    total = jnp.uint32(0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total = total + bit_fold(jnp.asarray(leaf))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Alarm collection across the jit boundary
+# ---------------------------------------------------------------------------
+
+_STACK: list["Collector"] = []
+# PlanKey (or str pseudo-key) -> [checks, alarms]; module-level so stats
+# survive plan interning and are shared by every engine in the process.
+_TALLY: dict[Any, list] = {}
+
+
+def _is_tracer(x: Any) -> bool:
+    try:
+        return isinstance(x, jax.core.Tracer)
+    except AttributeError:  # pragma: no cover - jax.core relayout
+        return type(x).__name__.endswith("Tracer")
+
+
+def record(key: Any, bad: bool, checks: int = 1) -> None:
+    """Tally ``checks`` integrity checks (``bad`` of them alarming) for a
+    plan key."""
+    tally = _TALLY.setdefault(key, [0, 0])
+    tally[0] += checks
+    tally[1] += int(bool(bad))
+
+
+def stats_for(key: Any) -> dict:
+    checks, alarms = _TALLY.get(key, (0, 0))
+    return {"checks": int(checks), "alarms": int(alarms)}
+
+
+def all_stats() -> dict:
+    return {k: {"checks": v[0], "alarms": v[1]} for k, v in _TALLY.items()}
+
+
+def reset_tally() -> None:
+    _TALLY.clear()
+
+
+def report(key: Any, flag: jax.Array) -> None:
+    """Report an ABFT check outcome (``flag`` True = mismatch) for ``key``.
+
+    Called by plan executors. Under an active :class:`Collector` the
+    (possibly traced) flag is appended to the collector; otherwise a
+    concrete flag tallies immediately and a traced one is an error —
+    a jitted integrity-checked plan must run under a collector or its
+    alarms would be silently dropped.
+    """
+    if _STACK:
+        _STACK[-1].keys.append(key)
+        _STACK[-1].flags.append(flag)
+        return
+    if _is_tracer(flag):
+        raise RuntimeError(
+            "integrity-checked plan traced outside a Collector: wrap the "
+            "jitted step with Collector.collect() (see launch/steps.py) "
+            "so alarms survive the jit boundary"
+        )
+    record(key, bool(flag))
+
+
+class Collector:
+    """Collects ABFT alarm flags reported while tracing a step function.
+
+    One collector per compiled step: ``keys``/``flags`` are rebuilt each
+    time the step retraces (the context manager clears them on entry),
+    so the stacked alarm vector the step returns lines up with ``keys``.
+    """
+
+    def __init__(self) -> None:
+        self.keys: list = []
+        self.flags: list = []
+
+    @contextlib.contextmanager
+    def collect(self):
+        self.keys, self.flags = [], []
+        _STACK.append(self)
+        try:
+            yield self
+        finally:
+            _STACK.pop()
+
+    def stacked(self) -> jax.Array:
+        """Alarm vector for the step to return (empty if nothing checked)."""
+        if not self.flags:
+            return jnp.zeros((0,), jnp.bool_)
+        return jnp.stack(self.flags)
+
+    def _fold(self) -> jax.Array:
+        """OR of every flag reported so far (False scalar if none)."""
+        out = jnp.bool_(False)
+        for f in self.flags:
+            out = out | f
+        return out
+
+    def harvest(self, alarms: Any) -> list:
+        """Tally concrete alarm values against the trace-time keys.
+
+        Returns ``[(key, bad), ...]``. If the jit cache holds several
+        specializations (prefill at many prompt lengths) the keys from
+        the most recent trace are used positionally — per-key attribution
+        can then be approximate, but the alarm *count* is exact.
+        """
+        vals = np.asarray(alarms).astype(bool).ravel().tolist()
+        keys = self.keys
+        if len(keys) != len(vals):  # stale trace: fall back to a pseudo-key
+            keys = ["<untracked>"] * len(vals)
+        out = []
+        for key, bad in zip(keys, vals):
+            record(key, bad)
+            out.append((key, bad))
+        return out
+
+
+class _NullScope:
+    """Inert scan scope (no collector active): reports pass through the
+    normal :func:`report` path and the fold is a constant False."""
+
+    def any_alarm(self) -> jax.Array:
+        return jnp.bool_(False)
+
+
+_NULL_SCOPE = _NullScope()
+
+
+class _ScanScope:
+    def __init__(self) -> None:
+        self._col = Collector()
+
+    def any_alarm(self) -> jax.Array:
+        return self._col._fold()
+
+
+@contextlib.contextmanager
+def scan_scope():
+    """Aggregate ABFT reports issued inside a ``lax.scan`` body.
+
+    Flags reported inside a scan body are tracers of the *body* trace —
+    the outer collector cannot stack them (UnexpectedTracerError), so
+    the body runs under a nested collector and folds its flags into one
+    OR via ``scope.any_alarm()``, which the caller threads through the
+    scan CARRY. After the scan, :func:`report_carried` hands the
+    carried-out flag to the outer collector. When no collector is active
+    (integrity off) this yields an inert scope and costs nothing.
+    Per-plan attribution is coarsened to a ``"<scan>"`` pseudo-key for
+    checks made inside the scan; the alarm itself is exact.
+    """
+    if not _STACK:
+        yield _NULL_SCOPE
+        return
+    scope = _ScanScope()
+    with scope._col.collect():
+        yield scope
+
+
+def report_carried(flag: jax.Array) -> None:
+    """Report a scan-carried aggregate alarm to the active collector
+    (no-op when none is active)."""
+    if _STACK:
+        _STACK[-1].keys.append("<scan>")
+        _STACK[-1].flags.append(flag)
+
+
+__all__ = [
+    "INTEGRITY_MODES",
+    "IntegrityError",
+    "check_integrity_mode",
+    "bit_fold",
+    "tree_checksum",
+    "Collector",
+    "report",
+    "report_carried",
+    "scan_scope",
+    "record",
+    "stats_for",
+    "all_stats",
+    "reset_tally",
+]

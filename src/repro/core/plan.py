@@ -85,6 +85,7 @@ def _cache_spec(wp: Optional[bp.WeightPlanes]) -> Optional[tuple]:
         None if packed is None else packed.block,
         wp.planes is not None,
         len(wp.weights),
+        packed is not None and packed.checksum is not None,
     )
 
 
@@ -113,6 +114,7 @@ class PlanKey:
     bn: Optional[int]
     bk: Optional[int]
     sparsity: str = "off"  # occupancy-gated sparse plane execution
+    integrity: str = "off"  # ABFT row-sum checking: off / detect / scrub
 
 
 class PlanRegistry:
@@ -210,6 +212,28 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         )
     use_fused = fused_ok and key.backend != "jnp" and key.fused is not False
 
+    # ABFT-checked execution (DESIGN.md §9): the row-sum identity needs
+    # the raw int32 accumulator of the exact fully-serial bitplane path.
+    # The fused kernel hides it (its epilogue scales in-kernel), so
+    # integrity falls back to the staged/cached routes — that is the
+    # "integrity overhead" the bench's integrity section measures.
+    check = key.integrity != "off"
+    if check:
+        if not (serial and int32_acc and key.level == "bitplane"):
+            raise ValueError(
+                "integrity-checked execution requires level='bitplane', "
+                "mode='fully_serial' and int32 accumulation; got "
+                f"level={key.level!r}, mode={key.mode!r}, accum={key.accum}"
+            )
+        if key.fused:
+            raise ValueError(
+                "fused=True cannot be integrity-checked: the fused epilogue "
+                "writes the scaled output and hides the int32 accumulator "
+                "the row-sum identity compares; leave fused unset (or False) "
+                "when integrity != 'off'"
+            )
+        use_fused = False
+
     # Cache usability: the cache must hold the operand as *stored*
     # (w_in_bits); executing below that width truncates its plane prefix
     # (bitplane level only — radix-256 digits are not truncatable).
@@ -225,6 +249,12 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         and (w_shift == 0 or key.level == "bitplane")
     )
     fused_cache_ok = cache_ok and cache[3] and cache[4] is not None
+    if check and cache_ok and not cache[7]:
+        raise ValueError(
+            "integrity-checked cached execution needs a checksummed plane "
+            "cache: rebuild it with make_weight_planes(..., checksum=True) "
+            "(quantize_params does this when policy.integrity != 'off')"
+        )
     if use_fused and cache_ok and not fused_cache_ok and key.fused is None:
         # A cache in the global planar layout can't feed the fused kernel;
         # auto mode keeps the decompose-once staged path instead of
@@ -283,6 +313,7 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         requant_w=requant_w,
         trunc_cache=trunc_cache,
         gate=gate,
+        check=check,
     )
 
 
@@ -310,6 +341,21 @@ def _finish(plan: "MatmulPlan", out2, lead, ep):
 
 def _trunc(plan: "MatmulPlan", wp: bp.WeightPlanes) -> bp.WeightPlanes:
     return bp.truncate_weight_planes(wp, plan.key.w_bits) if plan.trunc_cache else wp
+
+
+def _abft_check(plan: "MatmulPlan", x2, out2, check_vec) -> None:
+    """ABFT row-sum identity on the pre-epilogue int32 accumulator:
+    ``sum_n out2[m, n] == x2 @ check_vec`` exactly (int32 wraparound on
+    both sides), where ``check_vec`` is the row-sum vector of the integer
+    weight matrix the kernel consumed. Any single-bit corruption of the
+    consumed weight state (or of the accumulator) breaks the identity;
+    the (traced) mismatch flag is reported to the ambient integrity
+    collector under this plan's key."""
+    from repro.core import integrity
+
+    expected = jnp.matmul(x2.astype(jnp.int32), check_vec.astype(jnp.int32))
+    got = jnp.sum(out2.astype(jnp.int32), axis=-1)
+    integrity.report(plan.key, jnp.any(expected != got))
 
 
 def _exec_fused_cached(plan, x, w, wp, ep):
@@ -359,6 +405,8 @@ def _exec_cached_packed(plan, x, w, wp, ep):
         pa, wp_eff.packed, pw, backend=key.backend,
         bm=plan.bm, bn=plan.bn, bk=plan.bk, gate=plan.gate,
     )
+    if plan.check:
+        _abft_check(plan, x2, out2, bp.checksum_vector(wp_eff.packed))
     return _finish(plan, out2, lead, ep)
 
 
@@ -383,6 +431,8 @@ def _exec_cached_planes(plan, x, w, wp, ep):
         dec_a.planes.astype(jnp.int8), wpl.astype(jnp.int8), pw,
         backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk,
     )
+    if plan.check:
+        _abft_check(plan, x2, out2, bp.checksum_vector(wp_eff.packed))
     return _finish(plan, out2, lead, ep)
 
 
@@ -391,9 +441,12 @@ def _exec_cached_scan(plan, x, w, wp, ep):
     key = plan.key
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
+    wp_eff = _trunc(plan, wp)
     out2 = ops._matmul_cached_jnp(
-        x2, _trunc(plan, wp), a_bits=key.a_bits, variant=key.variant, level=key.level
+        x2, wp_eff, a_bits=key.a_bits, variant=key.variant, level=key.level
     )
+    if plan.check:
+        _abft_check(plan, x2, out2, bp.checksum_vector(wp_eff.packed))
     return _finish(plan, out2, lead, ep)
 
 
@@ -422,6 +475,10 @@ def _exec_staged(plan, x, w, wp, ep):
             dec_a.planes.astype(jnp.int8), dec_w.planes.astype(jnp.int8), pw,
             backend=key.backend, bm=plan.bm, bn=plan.bn, bk=plan.bk,
         )
+    if plan.check:
+        # uncached route: the reference row-sum comes from the in-hand
+        # integer weight (already requantized to the executed width)
+        _abft_check(plan, x2, out2, w.astype(jnp.int32).sum(axis=-1))
     return _finish(plan, out2, lead, ep)
 
 
@@ -432,6 +489,13 @@ def _exec_oracle(plan, x, w, wp, ep):
         x, w, a_bits=key.a_bits, w_bits=key.w_bits, variant=key.variant,
         level=key.level, mode=key.mode, accum_dtype=jnp.dtype(key.accum),
     )
+    if plan.check:
+        _abft_check(
+            plan,
+            x.reshape((-1, x.shape[-1])),
+            acc.reshape((-1, acc.shape[-1])),
+            w.astype(jnp.int32).sum(axis=-1),
+        )
     return acc if ep is None else ops.apply_epilogue(acc, ep)
 
 
@@ -487,6 +551,10 @@ class MatmulPlan:
     #: occupancy-gated sparse plane execution resolved for this route
     #: (sparsity != "off" on a Pallas plane-pair kernel)
     gate: bool = False
+    #: ABFT row-sum verification resolved for this route (integrity !=
+    #: "off"; executors compare the accumulator row-sums against the
+    #: cache's column checksums and report to the integrity collector)
+    check: bool = False
 
     def __call__(self, x, w=None, *, w_planes=None, epilogue=None):
         key = self.key
@@ -586,6 +654,24 @@ class MatmulPlan:
         )
         return out
 
+    def integrity_stats(self) -> dict:
+        """Pass/fail accounting of this plan's ABFT row-sum checks.
+
+        Reads the process-wide tally keyed by :class:`PlanKey` (shared by
+        every engine and collector — plan interning makes the key the
+        natural aggregation unit): ``checks`` harvested check executions,
+        ``alarms`` of them mismatching.
+        """
+        from repro.core import integrity
+
+        out = {
+            "mode": self.key.integrity,
+            "checked": self.check,
+            "kernel": self.kernel,
+        }
+        out.update(integrity.stats_for(self.key))
+        return out
+
     def describe(self) -> str:
         k = self.key
         s = (
@@ -597,6 +683,8 @@ class MatmulPlan:
             s += f" trunc(w {k.w_in_bits}->{k.w_bits}, a {k.a_in_bits}->{k.a_bits})"
         if k.sparsity != "off":
             s += f" sparsity={k.sparsity}{' (gated)' if self.gate else ''}"
+        if k.integrity != "off":
+            s += f" integrity={k.integrity}{' (checked)' if self.check else ''}"
         return s
 
 
@@ -638,6 +726,7 @@ def plan_for_operands(
     bn: Optional[int] = None,
     bk: Optional[int] = None,
     sparsity: str = "off",
+    integrity: str = "off",
     registry: Optional[PlanRegistry] = None,
 ) -> MatmulPlan:
     """Policy-free plan construction from explicit operand metadata (the
@@ -646,6 +735,10 @@ def plan_for_operands(
     if sparsity not in ("off", "gate", "compact"):
         raise ValueError(
             f"sparsity must be 'off', 'gate' or 'compact', got {sparsity!r}"
+        )
+    if integrity not in ("off", "detect", "scrub"):
+        raise ValueError(
+            f"integrity must be 'off', 'detect' or 'scrub', got {integrity!r}"
         )
     m, k, n = _norm_shapes(shapes)
     key = PlanKey(
@@ -661,6 +754,7 @@ def plan_for_operands(
         fused=fused, packed=packed,
         bm=bm, bn=bn, bk=bk,
         sparsity=sparsity,
+        integrity=integrity,
     )
     return (DEFAULT_REGISTRY if registry is None else registry).get(key)
 
@@ -712,6 +806,7 @@ def make_plan(
         fused=policy.fuse_epilogue,
         bm=bm, bn=bn, bk=bk,
         sparsity=policy.sparsity,
+        integrity=policy.integrity,
         registry=registry,
     )
 

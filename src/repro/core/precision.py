@@ -78,6 +78,14 @@ class PrecisionPolicy:
     #: the serving cache at quantize time, shrinking the plane-pair grid
     #: itself on every backend. All three are bit-identical.
     sparsity: str = "off"
+    #: ABFT integrity mode (DESIGN.md §9): ``"off"`` = no checks;
+    #: ``"detect"`` stores column checksums in the plane cache and
+    #: verifies the row-sum identity at every checked matmul (alarms
+    #: tallied per plan); ``"scrub"`` = detect + the serving engine
+    #: rebuilds the corrupt cache from the checkpoint source and retries
+    #: the step. Requires the bitplane level (the checksums live in the
+    #: packed plane cache).
+    integrity: str = "off"
 
     def __post_init__(self):
         if self.runtime_bits is not None:
@@ -87,6 +95,15 @@ class PrecisionPolicy:
         if self.sparsity not in ("off", "gate", "compact"):
             raise ValueError(
                 f"sparsity must be 'off', 'gate' or 'compact', got {self.sparsity!r}"
+            )
+        if self.integrity not in ("off", "detect", "scrub"):
+            raise ValueError(
+                f"integrity must be 'off', 'detect' or 'scrub', got {self.integrity!r}"
+            )
+        if self.integrity != "off" and self.level != "bitplane":
+            raise ValueError(
+                "integrity-checked execution needs level='bitplane' (the "
+                f"ABFT checksums live in the packed plane cache), got {self.level!r}"
             )
 
     @staticmethod
@@ -105,6 +122,7 @@ class PrecisionPolicy:
         keep_dense: Tuple[str, ...] = (),
         fuse_epilogue: Optional[bool] = None,
         sparsity: str = "off",
+        integrity: str = "off",
     ) -> "PrecisionPolicy":
         """Same precision everywhere except ``keep_dense`` layer patterns."""
         a_bits = w_bits if a_bits is None else a_bits
@@ -117,6 +135,7 @@ class PrecisionPolicy:
             mode=mode,
             fuse_epilogue=fuse_epilogue,
             sparsity=sparsity,
+            integrity=integrity,
         )
 
     @staticmethod

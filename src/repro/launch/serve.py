@@ -46,12 +46,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.core import integrity
 from repro.core.precision import PrecisionPolicy
 from repro.launch import sampling
 from repro.launch.steps import make_cb_decode_step, make_prefill_step, make_serve_step
-from repro.models.cache import cache_kv_bytes, init_cache, insert_slot
+from repro.models.cache import (
+    cache_kv_bytes, cache_slot_checksums, init_cache, insert_slot,
+)
 from repro.models.quant import quantize_params
 from repro.models.transformer import init_params
+from repro.runtime.faults import FaultInjector, FaultSpec
 from repro.runtime.scheduler import Request, SlotScheduler
 
 
@@ -71,7 +75,14 @@ class _PrecisionDial:
     def _init_dial(self) -> None:
         self._precision: Optional[Tuple[int, int]] = None
         self._compiled: dict = {}
-        self._prefill, self._step = self._steps_for(None)
+        self._bind_steps(self._steps_for(None))
+
+    def _bind_steps(self, steps) -> None:
+        # (prefill, step) or, under integrity, (prefill, step, pcol, scol)
+        self._prefill, self._step = steps[:2]
+        self._prefill_col, self._step_col = (
+            steps[2:] if len(steps) > 2 else (None, None)
+        )
 
     def _steps_for(self, precision):
         if precision not in self._compiled:
@@ -91,7 +102,7 @@ class _PrecisionDial:
             p = _norm_precision(precision)
             self._dial_check(p)
             self._precision = p
-        self._prefill, self._step = self._steps_for(self._precision)
+        self._bind_steps(self._steps_for(self._precision))
 
     def _dial_check(self, precision: Tuple[int, int]) -> None:
         pol = self.policy
@@ -129,7 +140,81 @@ class _PrecisionDial:
         return self._precision
 
 
-class Engine(_PrecisionDial):
+class _IntegrityRuntime:
+    """Shared fault-detection/recovery plumbing (DESIGN.md §9).
+
+    With ``policy.integrity != "off"`` the engine layers three detectors:
+    per-matmul ABFT row-sum checks (alarms harvested from the jitted
+    steps via :class:`~repro.core.integrity.Collector`), a whole-tree
+    parameter fingerprint audited every ``audit_interval`` iterations
+    against the load-time reference, and (continuous batching) per-slot
+    KV checksums. In ``scrub`` mode a params alarm triggers recovery:
+    the quantized tree is rebuilt from the retained source parameters
+    (``quantize_params`` is deterministic, so the rebuild fingerprint
+    must equal the load-time reference — if it doesn't, the *source* is
+    corrupt and :class:`~repro.core.integrity.IntegrityError` is the
+    only honest answer) and the alarmed step re-executes from its
+    pre-step inputs, yielding bit-identical tokens.
+    """
+
+    def _init_integrity(
+        self, params, value_bits, audit_interval: int, max_retries: int
+    ) -> None:
+        self.integrity = integrity.check_integrity_mode(
+            getattr(self.policy, "integrity", "off")
+        )
+        self.audit_interval = audit_interval
+        self.max_retries = max_retries
+        self._value_bits = value_bits
+        self._scrubs = 0
+        self._src_params = None
+        self._params_ref = None
+        if self.integrity == "off":
+            return
+        self._fp_fn = jax.jit(integrity.tree_checksum)
+        self._params_ref = int(self._fp_fn(self.q_params))
+        if self.integrity == "scrub":
+            # scrub rebuilds from source: retain the dense tree (the price
+            # of recoverability; detect mode skips it)
+            self._src_params = params
+
+    def _scrub(self) -> None:
+        if self._src_params is None:
+            raise integrity.IntegrityError(
+                "scrub requested but source parameters were not retained "
+                "(integrity mode is not 'scrub')"
+            )
+        self.q_params = quantize_params(
+            self._src_params, self.policy,
+            plane_cache=self.plane_cache, value_bits=self._value_bits,
+        )
+        fp = int(self._fp_fn(self.q_params))
+        if fp != self._params_ref:
+            raise integrity.IntegrityError(
+                "scrub rebuild fingerprint mismatch: the retained source "
+                "parameters are themselves corrupt — cannot recover"
+            )
+        self._scrubs += 1
+
+    def _audit_params(self) -> bool:
+        """True if the at-rest parameter fingerprint drifted from the
+        load-time reference (in detect mode the reference is re-baselined
+        so one upset alarms once, not every audit)."""
+        fp = int(self._fp_fn(self.q_params))
+        if fp == self._params_ref:
+            return False
+        if self.integrity == "detect":
+            self._params_ref = fp
+        return True
+
+    @staticmethod
+    def _harvest(col, alarms) -> Tuple[bool, int]:
+        """Tally a step's concrete alarm vector; returns (any_bad, n)."""
+        res = col.harvest(alarms)
+        return any(bad for _, bad in res), len(res)
+
+
+class Engine(_PrecisionDial, _IntegrityRuntime):
     """Minimal lockstep batched generation engine over the serve steps."""
 
     def __init__(
@@ -142,6 +227,8 @@ class Engine(_PrecisionDial):
         sample_fn=None,
         seed: int = 0,
         value_bits: Optional[int] = None,
+        audit_interval: int = 1,
+        max_retries: int = 2,
     ):
         self.cfg = cfg
         self.policy = policy
@@ -162,46 +249,100 @@ class Engine(_PrecisionDial):
         self.sample_fn = sample_fn or sampling.greedy
         self.max_len = max_len
         self._base_key = jax.random.PRNGKey(seed)
+        self._init_integrity(params, value_bits, audit_interval, max_retries)
         self._init_dial()
 
     def _make_steps(self, precision):
+        check = self.integrity != "off"
+        pcol = integrity.Collector() if check else None
+        scol = integrity.Collector() if check else None
         return (
             jax.jit(
                 make_prefill_step(
                     self.cfg, self.policy, max_len=self.max_len,
-                    precision=precision,
+                    precision=precision, collector=pcol,
                 )
             ),
             jax.jit(
                 make_serve_step(
                     self.cfg, self.policy, sample_fn=self.sample_fn,
-                    precision=precision,
+                    precision=precision, collector=scol,
                 ),
-                donate_argnums=(1,),
+                # scrub-and-retry re-executes a step from its pre-step
+                # cache, so integrity mode must not donate it
+                donate_argnums=() if check else (1,),
             ),
+            pcol,
+            scol,
+        )
+
+    def _checked_step(self, cache, tok, key):
+        """One decode step with ABFT harvest + bounded scrub-and-retry."""
+        for attempt in range(self.max_retries + 1):
+            ntok, ncache, alarms = self._step(self.q_params, cache, tok, key)
+            bad, _n = self._harvest(self._step_col, alarms)
+            if not bad:
+                return ntok, ncache, False
+            if self.integrity != "scrub":
+                return ntok, ncache, True  # detect: record, keep serving
+            if attempt < self.max_retries:
+                self._scrub()
+        raise integrity.IntegrityError(
+            f"ABFT alarm persisted through {self.max_retries} "
+            "scrub-and-retry attempts — corruption is not in the "
+            "scrubbable weight planes"
         )
 
     def generate(self, prompts: jax.Array, n_tokens: int):
         """prompts: (B, S) int32. Decodes ``n_tokens`` via the engine's
         ``sample_fn`` (greedy default); returns (tokens (B, n),
         decode_tok_per_s)."""
-        last_logits, cache = self._prefill(self.q_params, {"tokens": prompts})
+        check = self.integrity != "off"
+        alarm_count = 0
+        out_pref = self._prefill(self.q_params, {"tokens": prompts})
+        if check:
+            last_logits, cache, alarms = out_pref
+            bad, _ = self._harvest(self._prefill_col, alarms)
+            if bad:
+                alarm_count += 1
+                if self.integrity == "scrub":
+                    self._scrub()
+                    last_logits, cache, alarms = self._prefill(
+                        self.q_params, {"tokens": prompts}
+                    )
+                    bad, _ = self._harvest(self._prefill_col, alarms)
+                    if bad:
+                        raise integrity.IntegrityError(
+                            "prefill ABFT alarm persisted after scrub"
+                        )
+        else:
+            last_logits, cache = out_pref
         logits = sampling.mask_vocab(last_logits, self.cfg.vocab_size)
         tok = self.sample_fn(logits, jax.random.fold_in(self._base_key, 0))[:, None]
         out = [tok]
         t0 = time.time()
         for i in range(n_tokens - 1):
             key = jax.random.fold_in(self._base_key, i + 1)
-            tok, cache = self._step(self.q_params, cache, tok, key)
+            if check and self.audit_interval and i % self.audit_interval == 0:
+                if self._audit_params():
+                    alarm_count += 1
+                    if self.integrity == "scrub":
+                        self._scrub()
+            if check:
+                tok, cache, bad = self._checked_step(cache, tok, key)
+                alarm_count += int(bad)
+            else:
+                tok, cache = self._step(self.q_params, cache, tok, key)
             out.append(tok)
         jax.block_until_ready(tok)
         dt = time.time() - t0
         tokens = jnp.concatenate(out, axis=1)
         tps = prompts.shape[0] * max(n_tokens - 1, 1) / max(dt, 1e-9)
+        self.last_alarms = alarm_count
         return tokens, tps
 
 
-class ContinuousBatchingEngine(_PrecisionDial):
+class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
     """Slot-scheduled serving over a shared, optionally int8, KV cache.
 
     ``n_slots`` decode lanes share one slot-indexed cache of ``max_len``
@@ -233,6 +374,11 @@ class ContinuousBatchingEngine(_PrecisionDial):
         plane_cache: bool = True,
         seed: int = 0,
         value_bits: Optional[int] = None,
+        audit_interval: int = 1,
+        max_retries: int = 2,
+        quarantine_after: int = 2,
+        degrade_after: Optional[int] = None,
+        degrade_to: int = 4,
     ):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
@@ -253,20 +399,36 @@ class ContinuousBatchingEngine(_PrecisionDial):
         # disjoint streams: first-token sampling folds rid, decode folds step
         self._prefill_key, self._decode_key = jax.random.split(base)
         self._insert = jax.jit(insert_slot, donate_argnums=(0,))
+        self.quarantine_after = quarantine_after
+        self.degrade_after = degrade_after
+        self.degrade_to = degrade_to
+        self._init_integrity(params, value_bits, audit_interval, max_retries)
+        if self.integrity != "off":
+            self._slot_fp = jax.jit(cache_slot_checksums)
         self._init_dial()
 
     def _make_steps(self, precision):
+        check = self.integrity != "off"
+        pcol = integrity.Collector() if check else None
+        scol = integrity.Collector() if check else None
         return (
             jax.jit(
                 make_prefill_step(
                     self.cfg, self.policy, max_len=self.max_len,
                     kv_quant=self.kv_quant, precision=precision,
+                    collector=pcol,
                 )
             ),
             jax.jit(
-                make_cb_decode_step(self.cfg, self.policy, precision=precision),
-                donate_argnums=(1,),
+                make_cb_decode_step(
+                    self.cfg, self.policy, precision=precision, collector=scol
+                ),
+                # scrub-and-retry re-executes the step from the pre-step
+                # cache, so integrity mode must not donate it
+                donate_argnums=() if check else (1,),
             ),
+            pcol,
+            scol,
         )
 
     def _first_token(self, logits, request: Request) -> jax.Array:
@@ -275,48 +437,169 @@ class ContinuousBatchingEngine(_PrecisionDial):
         temps = jnp.full((logits.shape[0],), request.temperature, jnp.float32)
         return sampling.sample_tokens(logits, temps, key)[0]
 
-    def run(self, requests: list[Request], precision_schedule: Optional[dict] = None):
+    def _prefill_checked(self, req: Request, integ: Optional[dict]):
+        """Prefill one request, harvesting ABFT alarms (scrub-and-retry
+        on alarm in scrub mode)."""
+        batch = {"tokens": jnp.asarray(req.tokens)[None, :]}
+        if self.integrity == "off":
+            return self._prefill(self.q_params, batch)
+        for attempt in range(self.max_retries + 1):
+            logits, seq_cache, alarms = self._prefill(self.q_params, batch)
+            bad, n = self._harvest(self._prefill_col, alarms)
+            integ["abft_checks"] += n
+            if not bad:
+                return logits, seq_cache
+            integ["abft_alarms"] += 1
+            if self.integrity != "scrub":
+                return logits, seq_cache  # detect: record and proceed
+            if attempt < self.max_retries:
+                self._scrub()
+                integ["step_retries"] += 1
+        raise integrity.IntegrityError(
+            f"prefill ABFT alarm (rid {req.rid}) persisted through "
+            f"{self.max_retries} scrub-and-retry attempts"
+        )
+
+    def _contain_kv(
+        self, sched: SlotScheduler, bad_slots: list, slot_faults: dict,
+        step_i: int, integ: dict,
+    ) -> None:
+        """Scrub-mode KV containment: the corrupt slot's request is
+        requeued (re-prefills from its prompt — KV is regenerable state,
+        unlike weights it cannot be scrubbed from a retained source) with
+        exponential backoff; repeatedly-faulting slots are quarantined."""
+        active = set(sched.active_slots)
+        for slot in bad_slots:
+            slot_faults[slot] = slot_faults.get(slot, 0) + 1
+            if slot in active:
+                backoff = 1 << min(slot_faults[slot], 4)
+                rid = sched.requeue(slot, arrival_step=step_i + backoff)
+                integ["requeued"] += 1
+                if sched.retries(rid) > self.max_retries:
+                    sched.drop_pending(
+                        rid,
+                        f"retry budget exhausted: {sched.retries(rid)} KV "
+                        f"faults on request {rid}",
+                    )
+            # (a flip in a free slot's garbage extent is harmless now, but
+            # the slot itself is suspect — count it toward quarantine)
+            if (
+                slot_faults[slot] >= self.quarantine_after
+                and slot not in sched.quarantined_slots
+            ):
+                sched.quarantine(slot)
+                integ["quarantined"] += 1
+
+    def run(
+        self,
+        requests: list[Request],
+        precision_schedule: Optional[dict] = None,
+        injector: Optional[FaultInjector] = None,
+    ):
         """Serve ``requests`` to completion. Returns (results, stats):
         ``results`` maps rid -> (max_new_tokens,) int32 generated tokens;
         ``stats`` reports decode throughput, step counts and KV bytes.
+        Requests that cannot finish (deadline passed, retry budget
+        exhausted, no servable slot left) land in ``stats['failed']``
+        (rid -> reason) instead.
 
         ``precision_schedule``: optional ``{decode_step: precision}``
         mapping over the DECODE-step counter (idle fast-forwards between
         sparse arrivals do not advance it) — at each threshold the engine
         calls :meth:`set_precision` before executing that step
         (``precision`` as accepted there). Switches are recorded in
-        ``stats['precision_switches']`` as (decode_step, (a, w))."""
-        for r in requests:
-            if r.tokens.size + r.max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {r.tokens.size} + gen "
-                    f"{r.max_new_tokens} exceeds max_len {self.max_len}"
-                )
+        ``stats['precision_switches']`` as (decode_step, (a, w)).
+
+        ``injector``: a :class:`~repro.runtime.faults.FaultInjector` (or
+        spec string) applied at the top of each engine iteration — the
+        SEU test harness. With ``policy.integrity != "off"`` detections
+        feed the injector's event log; in scrub mode every params fault
+        is scrubbed-and-retried (bit-identical tokens) and KV faults are
+        contained per-slot (requeue / quarantine)."""
+        if isinstance(injector, (str, FaultSpec)):
+            injector = FaultInjector(injector)
         schedule = dict(precision_schedule or {})
-        sched = SlotScheduler(self.n_slots)
+        sched = SlotScheduler(self.n_slots, max_extent=self.max_len)
         for r in sorted(requests, key=lambda r: r.arrival_step):
             sched.submit(r)
 
+        check = self.integrity != "off"
+        scrub_mode = self.integrity == "scrub"
         cache = init_cache(
             self.cfg, self.n_slots, self.max_len, self.cfg.dtype,
             kv_quant=self.kv_quant,
         )
         tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         kv_bytes = cache_kv_bytes(cache)
+        kv_ref = np.asarray(self._slot_fp(cache)) if check else None
+        integ = {
+            "audits": 0, "audit_alarms": 0,
+            "abft_checks": 0, "abft_alarms": 0,
+            "kv_checks": 0, "kv_alarms": 0,
+            "step_retries": 0, "requeued": 0, "quarantined": 0,
+        }
+        slot_faults: dict[int, int] = {}
+        scrubs0 = self._scrubs
+        degraded = False
         step_i = 0
         decode_steps = 0
         decoded_tokens = 0
         switches = []
         t0 = time.time()
         while not sched.done:
+            sched.expire(step_i)
+            if not sched.servable:
+                for rid in sched.pending_rids:
+                    sched.drop_pending(
+                        rid,
+                        "unservable: every decode slot is quarantined",
+                    )
+                continue
+            if injector is not None:
+                self.q_params, cache = injector.apply(
+                    step_i, self.q_params, cache
+                )
+            if check and self.audit_interval:
+                # at-rest audits vs the post-commit baselines of the last
+                # iteration: params fingerprint + per-slot KV checksums
+                if step_i % self.audit_interval == 0:
+                    integ["audits"] += 1
+                    if self._audit_params():
+                        integ["audit_alarms"] += 1
+                        if injector is not None:
+                            injector.mark_detected("params", step_i)
+                        if scrub_mode:
+                            self._scrub()
+                sums = np.asarray(self._slot_fp(cache))
+                integ["kv_checks"] += 1
+                bad_slots = np.flatnonzero(sums != kv_ref).tolist()
+                if bad_slots:
+                    integ["kv_alarms"] += len(bad_slots)
+                    if injector is not None:
+                        injector.mark_detected("kv", step_i)
+                    if scrub_mode:
+                        self._contain_kv(
+                            sched, bad_slots, slot_faults, step_i, integ
+                        )
+                    kv_ref = sums  # re-baseline (corrupt extents are dead:
+                    # their tenants were requeued; readmission overwrites)
+            if (
+                self.degrade_after
+                and not degraded
+                and self._scrubs - scrubs0 >= self.degrade_after
+                and (self._precision is None or self._precision[1] > self.degrade_to)
+            ):
+                # scrub storm: shed precision so each retried step costs
+                # fewer plane passes while upsets keep arriving
+                self.set_precision(self.degrade_to)
+                switches.append((decode_steps, self._precision))
+                degraded = True
             due = [s for s in schedule if s <= decode_steps]
             for s in sorted(due):
                 self.set_precision(schedule.pop(s))
                 switches.append((decode_steps, self._precision))
             for slot, req in sched.admissible(step_i):
-                logits, seq_cache = self._prefill(
-                    self.q_params, {"tokens": jnp.asarray(req.tokens)[None, :]}
-                )
+                logits, seq_cache = self._prefill_checked(req, integ if check else None)
                 tok = self._first_token(logits, req)
                 cache = self._insert(cache, seq_cache, jnp.int32(slot))
                 tokens = tokens.at[slot, 0].set(tok)
@@ -324,7 +607,34 @@ class ContinuousBatchingEngine(_PrecisionDial):
             if sched.active_slots:
                 key = jax.random.fold_in(self._decode_key, step_i)
                 temps = jnp.asarray(sched.temperatures())
-                tokens, cache = self._step(self.q_params, cache, tokens, temps, key)
+                for attempt in range(self.max_retries + 1):
+                    res = self._step(self.q_params, cache, tokens, temps, key)
+                    if not check:
+                        ntok, ncache = res
+                        break
+                    ntok, ncache, alarms = res
+                    bad, n = self._harvest(self._step_col, alarms)
+                    integ["abft_checks"] += n
+                    if not bad:
+                        break
+                    integ["abft_alarms"] += 1
+                    if injector is not None:
+                        injector.mark_detected("params", step_i)
+                    if not scrub_mode:
+                        break  # detect: record and commit as-is
+                    if attempt < self.max_retries:
+                        # re-execute from the pre-step cache/tokens (not
+                        # donated under integrity) with scrubbed weights
+                        # and the same fold_in key: bit-identical retry
+                        self._scrub()
+                        integ["step_retries"] += 1
+                    else:
+                        raise integrity.IntegrityError(
+                            f"decode ABFT alarm at step {step_i} persisted "
+                            f"through {self.max_retries} scrub-and-retry "
+                            "attempts"
+                        )
+                tokens, cache = ntok, ncache
                 toks_np = np.asarray(tokens[:, 0])
                 for slot in sched.active_slots:
                     sched.record(slot, int(toks_np[slot]))
@@ -335,6 +645,8 @@ class ContinuousBatchingEngine(_PrecisionDial):
                 # nothing in flight: fast-forward to the next arrival
                 nxt = sched.next_arrival()
                 step_i = step_i + 1 if nxt is None else max(nxt, step_i + 1)
+            if check and self.audit_interval:
+                kv_ref = np.asarray(self._slot_fp(cache))
         jax.block_until_ready(tokens)
         wall = max(time.time() - t0, 1e-9)
         s = sched.stats()
@@ -352,7 +664,14 @@ class ContinuousBatchingEngine(_PrecisionDial):
             "peak_occupancy": s.peak_occupancy,
             "queue_steps": s.queue_steps,
             "precision_switches": switches,
+            "failed": dict(sched.failed),
+            "requeued": s.requeued,
+            "quarantined_slots": sorted(sched.quarantined_slots),
         }
+        if check:
+            integ["mode"] = self.integrity
+            integ["scrubs"] = self._scrubs - scrubs0
+            stats["integrity"] = integ
         return sched.finished, stats
 
 
@@ -405,6 +724,29 @@ def build_parser() -> argparse.ArgumentParser:
                     "weight planes from the serving cache at load time, "
                     "shrinking the plane-pair grid on every backend. Both "
                     "are bit-identical to 'off' (requires --level bitplane)")
+    ap.add_argument("--integrity", default="off",
+                    choices=("off", "detect", "scrub"),
+                    help="fault-tolerant serving (DESIGN.md §9): 'detect' "
+                    "runs ABFT row-sum checks on every bit-serial matmul "
+                    "plus at-rest fingerprint audits and counts alarms; "
+                    "'scrub' additionally recovers — rebuild the weight "
+                    "planes from retained source params and retry the "
+                    "step (bit-identical tokens), requeue/quarantine on "
+                    "KV faults (requires --level bitplane)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="SEU injection harness: comma-separated "
+                    "site@step[xN] shots with optional ';seed=N', e.g. "
+                    "'planes@2,kv@5x2;seed=7'; sites: planes, sign, "
+                    "occupancy, checksum, scale, kv, kv_scale "
+                    "(continuous batching only)")
+    ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
+                    help="per-request deadline: fail any request not "
+                    "finished within STEPS engine iterations of its "
+                    "arrival (frees its slot; continuous batching only)")
+    ap.add_argument("--audit-interval", type=int, default=1,
+                    help="integrity: run the at-rest parameter fingerprint "
+                    "audit every N engine iterations (0 disables at-rest "
+                    "audits, leaving per-matmul ABFT only)")
     # legacy aliases (one release of backward compat; the consolidated
     # surface is --mode / --precision)
     ap.add_argument("--no-plane-cache", action="store_true",
@@ -442,9 +784,34 @@ def validate_args(args) -> None:
                           ("--no-plane-cache", args.no_plane_cache),
                           ("--precision", args.precision is not None),
                           ("--precision-switch", args.precision_switch),
-                          ("--sparsity", args.sparsity != "off")):
+                          ("--sparsity", args.sparsity != "off"),
+                          ("--integrity", args.integrity != "off")):
             if val:
                 die(f"{flag} needs an active quantization policy (--bits > 0)")
+    if args.integrity != "off":
+        if args.level != "bitplane":
+            die("--integrity needs --level bitplane: the ABFT column "
+                "checksums ride in the packed bit-plane cache")
+        if args.no_plane_cache:
+            die("--integrity needs the weight-plane cache (drop "
+                "--no-plane-cache): checksums are computed at decompose "
+                "time and scrub rebuilds the cached decomposition")
+    if args.inject_faults:
+        if args.mode == "lockstep":
+            die("--inject-faults drives the continuous-batching engine "
+                "(--mode cb)")
+        try:
+            args.inject_faults = FaultSpec.parse(args.inject_faults)
+        except ValueError as e:
+            die(f"--inject-faults: {e}")
+    if args.deadline is not None:
+        if args.mode == "lockstep":
+            die("--deadline is a continuous-batching feature (--mode cb): "
+                "the lockstep engine has no scheduler to evict from")
+        if args.deadline < 1:
+            die("--deadline must be >= 1 engine step")
+    if args.audit_interval < 0:
+        die("--audit-interval must be >= 0")
     if args.sparsity != "off" and args.level != "bitplane":
         die("--sparsity needs --level bitplane: occupancy bitmaps and plane "
             "compaction exist for the packed bit-plane kernels only "
@@ -493,7 +860,7 @@ def main():
         PrecisionPolicy.uniform(
             args.bits, args.bits, variant=args.variant, level=args.level,
             fuse_epilogue=False if args.no_fused else None,
-            sparsity=args.sparsity,
+            sparsity=args.sparsity, integrity=args.integrity,
         )
         if args.bits
         else PrecisionPolicy.off()
@@ -506,6 +873,8 @@ def main():
         tag += f" (stored w{args.bits}, truncated)"
     if args.sparsity != "off":
         tag += f" sparsity={args.sparsity}"
+    if args.integrity != "off":
+        tag += f" integrity={args.integrity}"
 
     if args.mode == "lockstep":
         engine = Engine(
@@ -513,6 +882,7 @@ def main():
             max_len=args.prompt_len + args.gen,
             plane_cache=not args.no_plane_cache,
             sample_fn=sampling.make_sample_fn(args.temperature),
+            audit_interval=args.audit_interval,
         )
         if args.precision:
             engine.set_precision(args.precision)
@@ -536,6 +906,7 @@ def main():
         n_slots=n_slots, max_len=max_len,
         kv_quant=not args.no_kv_quant,
         plane_cache=not args.no_plane_cache,
+        audit_interval=args.audit_interval,
     )
     if args.precision:
         engine.set_precision(args.precision)
@@ -546,6 +917,9 @@ def main():
             max_new_tokens=args.gen,
             temperature=args.temperature,
             arrival_step=i * args.stagger,
+            deadline_step=(
+                i * args.stagger + args.deadline if args.deadline else None
+            ),
         )
         for i, s in enumerate(lens)
     ]
@@ -554,7 +928,12 @@ def main():
         if args.precision_switch
         else None
     )
-    results, stats = engine.run(requests, precision_schedule=schedule)
+    injector = (
+        FaultInjector(args.inject_faults) if args.inject_faults else None
+    )
+    results, stats = engine.run(
+        requests, precision_schedule=schedule, injector=injector
+    )
     kv = "int8" if not args.no_kv_quant else "bf16"
     print(
         f"[serve] {tag} cb/{kv}: {len(results)} requests "
@@ -565,6 +944,24 @@ def main():
     )
     for step_i, prec in stats["precision_switches"]:
         print(f"[serve] precision switch at decode step {step_i}: -> {prec}")
+    if "integrity" in stats:
+        ig = stats["integrity"]
+        print(
+            f"[serve] integrity={ig['mode']}: {ig['abft_checks']} ABFT checks "
+            f"({ig['abft_alarms']} alarms), {ig['audits']} audits "
+            f"({ig['audit_alarms']} alarms), {ig['kv_alarms']} KV alarms, "
+            f"{ig['scrubs']} scrubs, {ig['step_retries']} step retries"
+        )
+    if injector is not None:
+        undet = injector.undetected
+        print(
+            f"[serve] injected {len(injector.events)} faults, "
+            f"{len(injector.events) - len(undet)} detected"
+        )
+        for e in undet:
+            print(f"[serve]   UNDETECTED: {e.site}@{e.step} at {e.leaf}")
+    for rid, reason in sorted(stats["failed"].items()):
+        print(f"[serve] rid {rid} FAILED: {reason}")
     for rid in sorted(results):
         print(f"[serve] rid {rid}:", results[rid])
 

@@ -113,18 +113,41 @@ def _dial(policy, precision: Optional[Tuple[int, int]]):
     return policy.with_runtime_bits(*precision)
 
 
+def _collected(collector, body):
+    """Run ``body()`` under ``collector`` and return (result, alarms).
+
+    The collector context AND the stacking must both happen inside the
+    traced step body: the ABFT alarm flags the executors report are
+    tracers of *this* trace, so stacking them outside it would leak
+    tracers (UnexpectedTracerError). Returning the stacked vector as a
+    step output is what carries the alarms across the jit boundary — the
+    engine harvests the concrete values via ``collector.harvest``.
+    """
+    if collector is None:
+        return body(), jnp.zeros((0,), jnp.bool_)
+    with collector.collect():
+        result = body()
+        alarms = collector.stacked()
+    return result, alarms
+
+
 def make_prefill_step(
     cfg: ModelConfig,
     policy=None,
     max_len: Optional[int] = None,
     kv_quant: bool = False,
     precision: Optional[Tuple[int, int]] = None,
+    collector=None,
 ):
     """prefill_step(params, batch) -> (last_logits, cache). Cache zeros are
     created inside the step so the dry-run captures their allocation.
     ``kv_quant`` stores attention KV int8 + per-(position, head) scales
     (quantize-on-append; see models.cache). ``precision`` dials the
-    runtime bit-width of every projection (see module docstring)."""
+    runtime bit-width of every projection (see module docstring).
+
+    ``collector`` (an :class:`repro.core.integrity.Collector`): run the
+    forward under ABFT alarm collection — the step returns a third output,
+    the (n_checks,) bool alarm vector (see :func:`_collected`)."""
     policy = _dial(policy, precision)
 
     def prefill_step(params, batch):
@@ -139,10 +162,17 @@ def make_prefill_step(
             if cfg.is_decoder
             else None
         )
-        logits, _aux, cache = forward(
-            cfg, params, batch, policy=policy, cache=cache, last_only=cfg.is_decoder
-        )
-        return logits[:, -1, :], cache
+
+        def body():
+            return forward(
+                cfg, params, batch, policy=policy, cache=cache,
+                last_only=cfg.is_decoder,
+            )
+
+        (logits, _aux, cache), alarms = _collected(collector, body)
+        if collector is None:
+            return logits[:, -1, :], cache
+        return logits[:, -1, :], cache, alarms
 
     return prefill_step
 
@@ -163,28 +193,38 @@ def make_serve_step(
     policy=None,
     sample_fn=None,
     precision: Optional[Tuple[int, int]] = None,
+    collector=None,
 ):
     """One engine iteration: decode + sample next token (the shape-cell
     ``serve_step``: one new token against a seq_len-deep cache).
 
     ``sample_fn(logits, key) -> (B,) int32`` over vocab-masked logits;
-    defaults to greedy argmax (:func:`repro.launch.sampling.greedy`)."""
+    defaults to greedy argmax (:func:`repro.launch.sampling.greedy`).
+    ``collector``: collect ABFT alarms; the step gains a third output,
+    the alarm vector (see :func:`_collected`)."""
     from repro.launch import sampling
 
     decode = make_decode_step(cfg, policy, precision=precision)
     sample_fn = sample_fn or sampling.greedy
 
     def serve_step(params, cache, tokens, key=None):
-        logits, cache = decode(params, cache, {"tokens": tokens})
+        (logits, cache), alarms = _collected(
+            collector, lambda: decode(params, cache, {"tokens": tokens})
+        )
         logits = sampling.mask_vocab(logits, cfg.vocab_size)
         next_tok = sample_fn(logits, key)[:, None]
-        return next_tok, cache
+        if collector is None:
+            return next_tok, cache
+        return next_tok, cache, alarms
 
     return serve_step
 
 
 def make_cb_decode_step(
-    cfg: ModelConfig, policy=None, precision: Optional[Tuple[int, int]] = None
+    cfg: ModelConfig,
+    policy=None,
+    precision: Optional[Tuple[int, int]] = None,
+    collector=None,
 ):
     """One continuous-batching engine iteration over the whole slot array.
 
@@ -197,15 +237,21 @@ def make_cb_decode_step(
 
     ``precision=(a_bits, w_bits)`` dials the step's runtime precision
     against the same weight tree (plane-prefix truncation); the engine
-    compiles one such step per precision tier and swaps mid-serving."""
+    compiles one such step per precision tier and swaps mid-serving.
+    ``collector``: collect ABFT alarms; the step gains a third output,
+    the alarm vector (see :func:`_collected`)."""
     from repro.launch import sampling
 
     decode = make_decode_step(cfg, policy, precision=precision)
 
     def cb_step(params, cache, tokens, temps, key):
-        logits, cache = decode(params, cache, {"tokens": tokens})
+        (logits, cache), alarms = _collected(
+            collector, lambda: decode(params, cache, {"tokens": tokens})
+        )
         logits = sampling.mask_vocab(logits, cfg.vocab_size)
         next_tok = sampling.sample_tokens(logits, temps, key)[:, None]
-        return next_tok, cache
+        if collector is None:
+            return next_tok, cache
+        return next_tok, cache, alarms
 
     return cb_step

@@ -187,6 +187,38 @@ def insert_slot(cache, seq_cache, slot):
     return out
 
 
+def cache_slot_checksums(cache) -> jnp.ndarray:
+    """Per-slot uint32 bit-pattern fold of the whole decode cache.
+
+    Returns ``(n_slots,)`` uint32: each entry folds every byte of every
+    leaf belonging to that slot (the slot axis is 0 for ``step``/
+    ``layers``/``tail`` leaves, 1 for ``periods`` leaves). Single-flip
+    sound like :func:`repro.core.integrity.bit_fold` — one flipped bit in
+    slot ``i``'s KV pages, scales, or lengths moves ``out[i]`` and only
+    ``out[i]``. The integrity-serving engine snapshots this after every
+    committed step; a mismatch outside the slots that legitimately wrote
+    (admitted/decoded) pins at-rest KV corruption to the victim slot, so
+    containment can requeue that one request instead of flushing the
+    whole cache.
+    """
+    import jax
+
+    def fold(leaf, axis):
+        b = jax.lax.bitcast_convert_type(leaf, jnp.uint8).astype(jnp.uint32)
+        return jnp.sum(b, axis=tuple(i for i in range(b.ndim) if i != axis))
+
+    total = fold(cache["step"], 0)
+    if "layers" in cache:
+        for leaf in jax.tree_util.tree_leaves(cache["layers"]):
+            total = total + fold(leaf, 0)
+        return total
+    for leaf in jax.tree_util.tree_leaves(cache["periods"]):
+        total = total + fold(leaf, 1)
+    for leaf in jax.tree_util.tree_leaves(cache["tail"]):
+        total = total + fold(leaf, 0)
+    return total
+
+
 _KV_LEAF_KEYS = frozenset({"k", "v", "k_q", "v_q", "k_scale", "v_scale"})
 
 

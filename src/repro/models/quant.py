@@ -44,6 +44,7 @@ def decompose_linear_weight(
     variant: str,
     level: str,
     block: int | None = bp.DEFAULT_BLOCK,
+    checksum: bool = False,
 ) -> bp.WeightPlanes:
     """Decompose one stored-quantized weight into cached planes.
 
@@ -62,7 +63,8 @@ def decompose_linear_weight(
 
     def one(w):
         return bp.make_weight_planes(
-            w, w_bits=w_bits, variant=variant, level=level, block=block
+            w, w_bits=w_bits, variant=variant, level=level, block=block,
+            checksum=checksum,
         )
 
     fn = one
@@ -121,6 +123,9 @@ def quantize_params(
                         w_bits=prec.w_bits,
                         variant=policy.variant,
                         level=policy.level,
+                        # ABFT column checksums ride in the cache so every
+                        # plan built from it is row-sum checkable
+                        checksum=policy.integrity != "off",
                     )
                     if policy.sparsity == "compact" and policy.level == "bitplane":
                         out["w_planes"] = bp.compact_weight_planes(out["w_planes"])

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import integrity
 from repro.core.precision import PrecisionPolicy
 from repro.layers.attention import attention_apply, attention_init
 from repro.layers.embedding import (
@@ -355,21 +356,34 @@ def forward(
                 inner = jax.checkpoint(one_period) if training else one_period
 
                 def group_body(carry, pg):
-                    x, aux = carry
-                    for j in range(grp):
-                        pj = jax.tree_util.tree_map(lambda a: a[j], pg)
-                        x, aux = inner(x, aux, pj)
-                    return (x, aux), 0
+                    x, aux, alarm = carry
+                    # ABFT flags raised inside the scan body fold into the
+                    # carry (integrity.scan_scope) — they are body-trace
+                    # tracers the outer collector could not stack.
+                    with integrity.scan_scope() as scope:
+                        for j in range(grp):
+                            pj = jax.tree_util.tree_map(lambda a: a[j], pg)
+                            x, aux = inner(x, aux, pj)
+                    return (x, aux, alarm | scope.any_alarm()), 0
 
                 gbody = jax.checkpoint(group_body) if training else group_body
-                (x, aux), _ = lax.scan(gbody, (x, aux), grouped)
+                (x, aux, alarm), _ = lax.scan(
+                    gbody, (x, aux, jnp.bool_(False)), grouped
+                )
+                integrity.report_carried(alarm)
                 new_periods = {}
             elif cache is None:
                 # scan cannot carry a None xs leaf: close over it.
                 def body_noc(carry, p_params):
-                    return body(carry, (p_params, None))
+                    x, aux, alarm = carry
+                    with integrity.scan_scope() as scope:
+                        (x, aux), _ = body((x, aux), (p_params, None))
+                    return (x, aux, alarm | scope.any_alarm()), None
 
-                (x, aux), _ = lax.scan(body_noc, (x, aux), params["periods"])
+                (x, aux, alarm), _ = lax.scan(
+                    body_noc, (x, aux, jnp.bool_(False)), params["periods"]
+                )
+                integrity.report_carried(alarm)
                 new_periods = {}
             else:
                 # The stacked cache rides in the CARRY and is updated in
@@ -379,12 +393,13 @@ def forward(
                 # cache (+7.9 GiB/dev on the 405B decode cell —
                 # EXPERIMENTS.md §Perf).
                 def body_inplace(carry, p_params):
-                    x, aux, ctree, i = carry
+                    x, aux, ctree, i, alarm = carry
                     p_cache = jax.tree_util.tree_map(
                         lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
                         ctree,
                     )
-                    (x, aux), new_caches = body((x, aux), (p_params, p_cache))
+                    with integrity.scan_scope() as scope:
+                        (x, aux), new_caches = body((x, aux), (p_params, p_cache))
                     ctree = jax.tree_util.tree_map(
                         lambda a, u: lax.dynamic_update_index_in_dim(
                             a, u.astype(a.dtype), i, 0
@@ -392,13 +407,14 @@ def forward(
                         ctree,
                         new_caches,
                     )
-                    return (x, aux, ctree, i + 1), None
+                    return (x, aux, ctree, i + 1, alarm | scope.any_alarm()), None
 
-                (x, aux, new_periods, _), _ = lax.scan(
+                (x, aux, new_periods, _, alarm), _ = lax.scan(
                     body_inplace,
-                    (x, aux, cache["periods"], jnp.int32(0)),
+                    (x, aux, cache["periods"], jnp.int32(0), jnp.bool_(False)),
                     params["periods"],
                 )
+                integrity.report_carried(alarm)
 
         new_tail = []
         tail_kinds = kinds[n_full * plen :]

@@ -1,0 +1,272 @@
+"""Seeded SEU fault injection for the serving integrity layer.
+
+bitSMM's deployment niche — on-board inference in space — makes
+single-event upsets (bit flips in operand memories) the dominant hazard.
+This module *creates* those faults on demand so every protection claim
+in DESIGN.md §9 is demonstrated, not asserted: a :class:`FaultInjector`
+flips single bits, at seed-fixed sites and engine iterations, in
+
+* packed plane words / sign words (``planes`` / ``sign``),
+* occupancy bitmaps (``occupancy``) and column checksums (``checksum``),
+* epilogue weight scales (``scale``),
+* int8 KV pages (``kv``) and KV scales (``kv_scale``).
+
+The engines plug it in via ``serve.py --inject-faults SPEC``. Spec
+grammar (comma-separated shots, optional seed)::
+
+    SPEC  := SHOT ("," SHOT)* [";seed=" INT]
+    SHOT  := SITE "@" STEP ["x" COUNT]
+
+e.g. ``"planes@2,kv@5x2;seed=7"`` — one plane-word flip before engine
+iteration 2 and two KV flips before iteration 5, RNG seeded with 7.
+Injection is host-side, between jitted steps: the corrupted arrays are
+re-uploaded, exactly like an upset hitting HBM between two step
+launches. Every flip is recorded as a :class:`FaultEvent` so a harness
+can gate on 100% detection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import bitplanes as bp
+
+FAULT_SITES = (
+    "planes", "sign", "occupancy", "checksum", "scale", "kv", "kv_scale",
+)
+
+#: site -> PackedPlanes field holding the target words
+_PACKED_FIELD = {"sign": "sign", "occupancy": "occupancy", "checksum": "checksum"}
+
+_KV_KEYS = {
+    "kv": ("k_q", "v_q", "k", "v"),
+    "kv_scale": ("k_scale", "v_scale"),
+}
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One injected single-bit flip (``category``: 'params' or 'kv')."""
+
+    site: str
+    step: int
+    leaf: str  # path of the array hit
+    byte: int  # flat byte index within the array
+    bit: int  # bit within the byte
+    category: str
+    detected: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Parsed injection schedule: ``shots`` is a tuple of
+    ``(site, step, count)``."""
+
+    shots: tuple
+    seed: int = 0
+
+    @staticmethod
+    def parse(spec: str) -> "FaultSpec":
+        s = spec.strip()
+        seed = 0
+        if ";" in s:
+            s, _, tail = s.partition(";")
+            tail = tail.strip()
+            if not tail.startswith("seed="):
+                raise ValueError(
+                    f"bad fault spec tail {tail!r}: expected ';seed=N'"
+                )
+            seed = int(tail[len("seed="):])
+        shots = []
+        for part in s.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            site, sep, at = part.partition("@")
+            if not sep:
+                raise ValueError(
+                    f"bad fault shot {part!r}: expected 'site@step[xN]'"
+                )
+            site = site.strip()
+            if site not in FAULT_SITES:
+                raise ValueError(
+                    f"unknown fault site {site!r}; valid sites: {FAULT_SITES}"
+                )
+            count = 1
+            if "x" in at:
+                at, _, c = at.partition("x")
+                count = int(c)
+            if count < 1:
+                raise ValueError(f"fault count must be >= 1, got {count}")
+            shots.append((site, int(at), count))
+        if not shots:
+            raise ValueError(f"empty fault spec {spec!r}")
+        return FaultSpec(tuple(shots), seed)
+
+
+def _flip_bit(arr, rng: np.random.Generator):
+    """Flip one uniformly-random bit of ``arr``'s storage; returns the
+    corrupted device array and the (byte, bit) site."""
+    host = np.array(arr)  # host copy, C-contiguous, dtype-preserving
+    flat = host.view(np.uint8).reshape(-1)
+    byte = int(rng.integers(flat.size))
+    bit = int(rng.integers(8))
+    flat[byte] ^= np.uint8(1 << bit)
+    return jnp.asarray(host), byte, bit
+
+
+def _walk(node: Any, path: str, pred, out: list) -> None:
+    """Collect (path, container, key) triples for dict entries matching
+    ``pred(key, value)``; recurses through dict/list/tuple containers and
+    stops at :class:`~repro.core.bitplanes.WeightPlanes` nodes (matched
+    as whole values)."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}/{k}"
+            if pred(k, v):
+                out.append((p, node, k))
+            else:
+                _walk(v, p, pred, out)
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            p = f"{path}/{i}"
+            if pred(i, v):
+                out.append((p, node, i))
+            else:
+                _walk(v, p, pred, out)
+
+
+def _replace_at(tree: Any, container: Any, key: Any, value: Any) -> Any:
+    """Return ``tree`` with ``container[key] = value`` — in place for the
+    mutable containers the param/cache trees use (dicts and lists)."""
+    if isinstance(container, tuple):
+        raise TypeError("cannot fault-inject into a tuple-held leaf")
+    container[key] = value
+    return tree
+
+
+class FaultInjector:
+    """Applies a :class:`FaultSpec` to the serving state between steps.
+
+    Deterministic: the same (spec, seed, tree structure) sequence flips
+    the same bits — the property the CI fault-injection smoke gates on.
+    """
+
+    def __init__(self, spec, seed: Optional[int] = None):
+        if isinstance(spec, str):
+            spec = FaultSpec.parse(spec)
+        self.spec = spec
+        self.rng = np.random.default_rng(spec.seed if seed is None else seed)
+        self.events: list[FaultEvent] = []
+
+    def due(self, step: int) -> list:
+        return [(site, count) for site, at, count in self.spec.shots if at == step]
+
+    def pending_after(self, step: int) -> bool:
+        return any(at >= step for _, at, _ in self.spec.shots)
+
+    # -- detection bookkeeping ---------------------------------------------
+
+    def mark_detected(self, category: str, step: int) -> list[FaultEvent]:
+        """Mark every still-undetected event of ``category`` injected at
+        or before ``step`` as detected (a detection signal of that
+        category fired). Returns the newly-marked events."""
+        hit = []
+        for e in self.events:
+            if not e.detected and e.category == category and e.step <= step:
+                e.detected = True
+                hit.append(e)
+        return hit
+
+    @property
+    def undetected(self) -> list[FaultEvent]:
+        return [e for e in self.events if not e.detected]
+
+    # -- injection ----------------------------------------------------------
+
+    def apply(self, step: int, params: Any, cache: Any = None):
+        """Inject every shot due at engine iteration ``step``. Returns the
+        (possibly corrupted) ``(params, cache)`` pair; untouched when
+        nothing is due."""
+        for site, count in self.due(step):
+            for _ in range(count):
+                if site in _KV_KEYS:
+                    if cache is None:
+                        raise ValueError(
+                            f"fault site {site!r} needs a KV cache to target"
+                        )
+                    cache = self._hit_kv(site, step, cache)
+                elif site == "scale":
+                    params = self._hit_scale(step, params)
+                else:
+                    params = self._hit_planes(site, step, params)
+        return params, cache
+
+    def _pick(self, cands: list, what: str):
+        if not cands:
+            raise ValueError(f"no injection candidates for site {what!r}")
+        return cands[int(self.rng.integers(len(cands)))]
+
+    def _hit_planes(self, site: str, step: int, params: Any) -> Any:
+        cands: list = []
+        _walk(
+            params, "",
+            lambda k, v: k == "w_planes" and isinstance(v, bp.WeightPlanes),
+            cands,
+        )
+        if site != "planes":
+            # sbmwc packs no sign words, checksum rides only in integrity
+            # caches: restrict to caches that actually store the target
+            field = _PACKED_FIELD[site]
+            cands = [c for c in cands if getattr(c[1][c[2]].packed, field) is not None]
+        path, container, key = self._pick(cands, site)
+        wp: bp.WeightPlanes = container[key]
+        packed = wp.packed
+        if site == "planes":
+            # hit the array the executor actually consumes: raw planes on
+            # the store="both" (jnp scan) path, packed mag words otherwise
+            if wp.planes is not None:
+                arr, field = wp.planes, "planes"
+            else:
+                arr, field = packed.mag, "mag"
+        else:
+            arr = getattr(packed, field)
+        flipped, byte, bit = _flip_bit(arr, self.rng)
+        if field == "planes":
+            new_wp = dataclasses.replace(wp, planes=flipped)
+        else:
+            new_wp = dataclasses.replace(
+                wp, packed=dataclasses.replace(packed, **{field: flipped})
+            )
+        _replace_at(params, container, key, new_wp)
+        self.events.append(
+            FaultEvent(site, step, f"{path}.{field}", byte, bit, "params")
+        )
+        return params
+
+    def _hit_scale(self, step: int, params: Any) -> Any:
+        cands: list = []
+        _walk(params, "", lambda k, v: k == "w_scale", cands)
+        path, container, key = self._pick(cands, "scale")
+        flipped, byte, bit = _flip_bit(container[key], self.rng)
+        _replace_at(params, container, key, flipped)
+        self.events.append(FaultEvent("scale", step, path, byte, bit, "params"))
+        return params
+
+    def _hit_kv(self, site: str, step: int, cache: Any) -> Any:
+        keys = _KV_KEYS[site]
+        cands: list = []
+        _walk(cache, "", lambda k, v: k in keys, cands)
+        path, container, key = self._pick(cands, site)
+        flipped, byte, bit = _flip_bit(container[key], self.rng)
+        _replace_at(cache, container, key, flipped)
+        self.events.append(FaultEvent(site, step, path, byte, bit, "kv"))
+        return cache
+
+
+__all__ = ["FAULT_SITES", "FaultEvent", "FaultSpec", "FaultInjector"]

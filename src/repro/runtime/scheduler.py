@@ -24,6 +24,21 @@ from typing import Iterator, Optional
 import numpy as np
 
 
+class SchedulerError(Exception):
+    """Base class for typed scheduler failures."""
+
+
+class AdmissionError(SchedulerError, ValueError):
+    """A request can never be served as submitted (oversized prompt,
+    duplicate id): reject at admission instead of spinning in the queue.
+    Subclasses ``ValueError`` so pre-existing callers keep working."""
+
+
+class DeadlineExceeded(SchedulerError):
+    """A request's deadline passed before it finished (reason marker;
+    the scheduler records the failure rather than raising mid-batch)."""
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.
@@ -31,6 +46,11 @@ class Request:
     ``arrival_step`` is measured in engine iterations (decode steps) —
     the unit the mixed-arrival scenarios are scripted in; a wall-clock
     frontend would translate timestamps before submission.
+
+    ``deadline_step``: absolute engine iteration by which the request
+    must have finished; past it the scheduler fails the request (pending
+    or mid-decode) instead of letting it occupy a slot forever. ``None``
+    = no deadline.
     """
 
     rid: int
@@ -38,6 +58,7 @@ class Request:
     max_new_tokens: int
     temperature: float = 0.0
     arrival_step: int = 0
+    deadline_step: Optional[int] = None
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)
@@ -45,6 +66,11 @@ class Request:
             raise ValueError("prompt must be a non-empty 1-D token array")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_step is not None and self.deadline_step <= self.arrival_step:
+            raise ValueError(
+                f"deadline_step ({self.deadline_step}) must be after "
+                f"arrival_step ({self.arrival_step})"
+            )
 
 
 @dataclasses.dataclass
@@ -59,31 +85,60 @@ class SchedulerStats:
     evicted: int = 0
     peak_occupancy: int = 0
     queue_steps: int = 0  # total steps requests spent waiting past arrival
+    failed: int = 0  # deadline-expired / fault-exhausted / unservable
+    requeued: int = 0  # fault retries returned to the queue
+    quarantined_slots: int = 0
 
 
 class SlotScheduler:
-    """Admits pending requests into free decode slots, evicts finished ones."""
+    """Admits pending requests into free decode slots, evicts finished ones.
 
-    def __init__(self, n_slots: int):
+    Containment extensions (DESIGN.md §9): ``max_extent`` rejects
+    never-servable prompts at admission with a typed
+    :class:`AdmissionError`; :meth:`expire` fails requests past their
+    deadline; :meth:`requeue` returns a faulted in-flight request to the
+    queue (bounded by the engine's retry budget via :meth:`retries`);
+    :meth:`quarantine` retires a repeatedly-faulting slot from the free
+    pool. Failed requests land in ``failed`` (rid -> reason) — never in
+    ``finished`` — and ``done`` stays reachable because failing removes
+    them from the queue.
+    """
+
+    def __init__(self, n_slots: int, max_extent: Optional[int] = None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
+        self.max_extent = max_extent
         self._pending: deque[Request] = deque()
         self._active: dict[int, _InFlight] = {}
         self._free: list[int] = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
         self.finished: dict[int, np.ndarray] = {}
+        self.failed: dict[int, str] = {}
+        self._retries: dict[int, int] = {}
+        self._quarantined: set[int] = set()
         self._admitted = 0
         self._evicted = 0
         self._peak = 0
         self._queue_steps = 0
+        self._failed = 0
+        self._requeued = 0
 
     # -- queue side ---------------------------------------------------------
 
     def submit(self, request: Request) -> None:
         if any(r.rid == request.rid for r in self._pending) or any(
             f.request.rid == request.rid for f in self._active.values()
-        ) or request.rid in self.finished:
-            raise ValueError(f"duplicate request id {request.rid}")
+        ) or request.rid in self.finished or request.rid in self.failed:
+            raise AdmissionError(f"duplicate request id {request.rid}")
+        if self.max_extent is not None:
+            extent = int(request.tokens.size) + request.max_new_tokens
+            if extent > self.max_extent:
+                raise AdmissionError(
+                    f"request {request.rid}: prompt ({request.tokens.size}) + "
+                    f"max_new_tokens ({request.max_new_tokens}) = {extent} "
+                    f"exceeds the cache extent ({self.max_extent}); it could "
+                    "never be served — rejected at admission"
+                )
         self._pending.append(request)
 
     def admissible(self, step: int) -> Iterator[tuple[int, Request]]:
@@ -137,11 +192,98 @@ class SlotScheduler:
     def _evict(self, slot: int) -> None:
         inf = self._active.pop(slot)
         self.finished[inf.request.rid] = np.asarray(inf.generated, np.int32)
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        self._release(slot)
         self._evicted += 1
 
+    def _release(self, slot: int) -> None:
+        if slot not in self._quarantined:
+            self._free.append(slot)
+            self._free.sort(reverse=True)
+
+    # -- containment (DESIGN.md §9) -----------------------------------------
+
+    def fail(self, rid: int, reason: str) -> None:
+        """Record a request as failed (it must already be out of the
+        queue/slots)."""
+        self.failed[rid] = reason
+        self._failed += 1
+
+    def expire(self, step: int) -> list[int]:
+        """Fail every request whose deadline has passed at ``step`` —
+        pending ones silently missed their window, active ones are evicted
+        mid-decode (their slot frees for the next tenant). Returns the
+        failed rids."""
+        expired: list[int] = []
+        kept: deque[Request] = deque()
+        for req in self._pending:
+            if req.deadline_step is not None and step >= req.deadline_step:
+                self.fail(req.rid, f"deadline: expired in queue at step {step}")
+                expired.append(req.rid)
+            else:
+                kept.append(req)
+        self._pending = kept
+        for slot in list(self._active):
+            req = self._active[slot].request
+            if req.deadline_step is not None and step >= req.deadline_step:
+                self._active.pop(slot)
+                self._release(slot)
+                self.fail(req.rid, f"deadline: evicted mid-decode at step {step}")
+                expired.append(req.rid)
+        return expired
+
+    def requeue(self, slot: int, arrival_step: int) -> int:
+        """Return ``slot``'s in-flight request to the queue (its slot hit
+        a fault): generated tokens are discarded, the request re-prefills
+        from its prompt at ``arrival_step`` (the retry backoff). Inserted
+        in arrival order so it cannot stall the queue head. Returns the
+        rid; pair with :meth:`retries` to bound attempts."""
+        inf = self._active.pop(slot)
+        self._release(slot)
+        req = inf.request
+        req.arrival_step = arrival_step
+        self._retries[req.rid] = self._retries.get(req.rid, 0) + 1
+        self._requeued += 1
+        pending = list(self._pending)
+        at = next(
+            (i for i, r in enumerate(pending) if r.arrival_step > arrival_step),
+            len(pending),
+        )
+        pending.insert(at, req)
+        self._pending = deque(pending)
+        return req.rid
+
+    def retries(self, rid: int) -> int:
+        return self._retries.get(rid, 0)
+
+    def drop_pending(self, rid: int, reason: str) -> None:
+        """Fail a pending request (e.g. its retry budget ran out)."""
+        self._pending = deque(r for r in self._pending if r.rid != rid)
+        self.fail(rid, reason)
+
+    def quarantine(self, slot: int) -> None:
+        """Retire a repeatedly-faulting slot: it leaves the free pool and
+        is never admitted into again (an occupying request must be
+        requeued/failed by the caller first)."""
+        self._quarantined.add(slot)
+        self._free = [s for s in self._free if s != slot]
+
+    @property
+    def quarantined_slots(self) -> frozenset:
+        return frozenset(self._quarantined)
+
+    @property
+    def servable(self) -> bool:
+        """False when pending requests can never run: every slot is
+        quarantined (the all-slots-poisoned liveness hazard)."""
+        return not self._pending or bool(
+            self._free or self._active
+        )
+
     # -- lifecycle ----------------------------------------------------------
+
+    @property
+    def pending_rids(self) -> list[int]:
+        return [r.rid for r in self._pending]
 
     @property
     def done(self) -> bool:
@@ -156,4 +298,7 @@ class SlotScheduler:
             evicted=self._evicted,
             peak_occupancy=self._peak,
             queue_steps=self._queue_steps,
+            failed=self._failed,
+            requeued=self._requeued,
+            quarantined_slots=len(self._quarantined),
         )

@@ -41,12 +41,12 @@ def _describe(obj) -> str:
 PLAN_SURFACE = {
     "MatmulPlan": "dataclass('key', 'registry', 'kernel', 'bm', 'bn', 'bk', "
     "'pack_block', 'a_shift', 'w_shift', 'scale_mult', 'requant_w', "
-    "'trunc_cache', 'gate') methods('with_precision', 'sparsity_stats', "
-    "'describe')",
+    "'trunc_cache', 'gate', 'check') methods('with_precision', "
+    "'sparsity_stats', 'integrity_stats', 'describe')",
     "PlanKey": "dataclass('m', 'k', 'n', 'a_bits', 'w_bits', 'a_in_bits', "
     "'w_in_bits', 'variant', 'level', 'mode', 'backend', 'accum', "
     "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk', "
-    "'sparsity') methods()",
+    "'sparsity', 'integrity') methods()",
     "PlanRegistry": "class methods('get', 'clear', 'plans')",
     "DEFAULT_REGISTRY": "PlanRegistry",
     "make_plan": "(policy: 'PrecisionPolicy', layer_name: 'str', shapes, "
@@ -64,6 +64,7 @@ PLAN_SURFACE = {
     "fused: 'Optional[bool]' = None, packed: 'Optional[bool]' = None, "
     "bm: 'Optional[int]' = None, bn: 'Optional[int]' = None, "
     "bk: 'Optional[int]' = None, sparsity: 'str' = 'off', "
+    "integrity: 'str' = 'off', "
     "registry: 'Optional[PlanRegistry]' = None) -> 'MatmulPlan'",
     "plan_cacheable": "(policy: 'PrecisionPolicy', prec: 'LayerPrecision') "
     "-> 'bool'",

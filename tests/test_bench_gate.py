@@ -1,0 +1,171 @@
+"""CI bench regression gate: one test per failure mode.
+
+The gate is the last line between a broken bench artifact and a green
+build, so its own failure handling is under test: every way the inputs
+break (missing file, torn JSON, wrong document shape, NaN metrics) and
+every gated regression (fused floor, sweep floors, integrity ceiling,
+parity, missing sections) must exit 1 with its distinct, actionable
+message — and the healthy path must exit 0.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "benchmarks")
+)
+import check_bench_regression as gate  # noqa: E402
+
+
+def _doc(
+    *,
+    fused=4.0,
+    sweep=3.0,
+    sparsity=1.8,
+    integrity_overhead=1.01,
+    parity="ok",
+    nan_metric=False,
+):
+    """A minimal but complete healthy report, knobs per failure mode."""
+    return {
+        "benches": {
+            "fused_linear_smoke": {
+                "configs": [{
+                    "name": "decode",
+                    "shape": [8, 128, 128],
+                    "wall_us": {"a_staged": fused * 10.0, "a_fused": 10.0},
+                }],
+            },
+            "serving": {
+                "precision_sweep": {"speedup_4_vs_8": sweep},
+                "parity": {"cb_bf16_vs_lockstep_tokens": parity},
+            },
+            "sparsity_sweep": {
+                "speedup_compact_vs_dense_4bit": sparsity,
+                "parity": {"sparsity_tokens_w4eff": "ok"},
+            },
+            "integrity": {
+                "overhead_detect_vs_off_x": integrity_overhead,
+                "tok_per_s": {
+                    "off": float("nan") if nan_metric else 100.0,
+                    "detect": 99.0,
+                },
+                "parity": {
+                    "fault_detection": "ok",
+                    "fault_recovery_tokens": "ok",
+                },
+            },
+        },
+    }
+
+
+def _run(tmp_path, fresh, baseline=None, extra=()):
+    fresh_p = tmp_path / "fresh.json"
+    base_p = tmp_path / "base.json"
+    if isinstance(fresh, dict):
+        fresh_p.write_text(json.dumps(fresh))
+    elif fresh is not None:
+        fresh_p.write_text(fresh)
+    if baseline is None:
+        baseline = _doc()
+    base_p.write_text(json.dumps(baseline))
+    argv = ["--fresh", str(fresh_p), "--baseline", str(base_p), *extra]
+    return gate.main(argv)
+
+
+def test_healthy_report_passes(tmp_path):
+    assert _run(tmp_path, _doc()) == 0
+
+
+def test_missing_fresh_file_fails_actionably(tmp_path, capsys):
+    assert _run(tmp_path, None) == 1
+    out = capsys.readouterr().out
+    assert "does not exist" in out and "fresh" in out
+
+
+def test_missing_baseline_file_fails_actionably(tmp_path, capsys):
+    fresh_p = tmp_path / "fresh.json"
+    fresh_p.write_text(json.dumps(_doc()))
+    rc = gate.main(["--fresh", str(fresh_p),
+                    "--baseline", str(tmp_path / "gone.json")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "baseline" in out and "does not exist" in out and "commit" in out
+
+
+def test_malformed_json_fails_with_position(tmp_path, capsys):
+    assert _run(tmp_path, '{"benches": {') == 1
+    out = capsys.readouterr().out
+    assert "not valid JSON" in out and "line 1" in out and "torn" in out
+
+
+def test_document_without_benches_fails(tmp_path, capsys):
+    assert _run(tmp_path, {"something_else": 1}) == 1
+    out = capsys.readouterr().out
+    assert "no 'benches' section" in out
+
+
+def test_nan_metric_fails_naming_the_path(tmp_path, capsys):
+    assert _run(tmp_path, _doc(nan_metric=True)) == 1
+    out = capsys.readouterr().out
+    assert "non-finite" in out
+    assert "benches.integrity.tok_per_s.off" in out
+
+
+def test_fused_regression_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(fused=2.0), baseline=_doc(fused=4.0)) == 1
+    assert "regressed" in capsys.readouterr().out
+
+
+def test_no_overlapping_configs_fails(tmp_path):
+    fresh = _doc()
+    fresh["benches"]["fused_linear_smoke"]["configs"][0]["name"] = "other"
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_sweep_floor_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(sweep=1.05)) == 1
+    assert "below floor" in capsys.readouterr().out
+
+
+def test_sparsity_floor_fails(tmp_path):
+    assert _run(tmp_path, _doc(sparsity=1.0)) == 1
+
+
+def test_integrity_ceiling_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(integrity_overhead=1.5)) == 1
+    out = capsys.readouterr().out
+    assert "above ceiling" in out and "fault-tolerance budget" in out
+
+
+def test_integrity_ceiling_flag_overrides(tmp_path):
+    assert _run(tmp_path, _doc(integrity_overhead=1.2)) == 1  # default 1.15
+    assert _run(
+        tmp_path, _doc(integrity_overhead=1.2), extra=["--integrity-ceiling", "1.3"]
+    ) == 0
+
+
+def test_missing_integrity_section_fails(tmp_path, capsys):
+    fresh = _doc()
+    del fresh["benches"]["integrity"]
+    assert _run(tmp_path, fresh) == 1
+    assert "no integrity section" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("check,verdict", [
+    ("fault_detection", "missed"),
+    ("fault_recovery_tokens", "mismatch"),
+])
+def test_fault_verdicts_hard_fail_via_parity(tmp_path, capsys, check, verdict):
+    fresh = _doc()
+    fresh["benches"]["integrity"]["parity"][check] = verdict
+    assert _run(tmp_path, fresh) == 1
+    assert f"integrity.parity.{check}" in capsys.readouterr().out
+
+
+def test_parity_mismatch_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(parity="mismatch")) == 1
+    assert "PARITY FAIL" in capsys.readouterr().out

@@ -1,0 +1,230 @@
+"""Fault-injection harness + scheduler containment (DESIGN.md §9).
+
+FaultSpec grammar, FaultInjector determinism and site coverage (every
+flip lands in the array it names and is visible to the params/KV
+fingerprints), and the SlotScheduler containment surface: typed
+admission errors, per-request deadlines, requeue-with-retry accounting,
+slot quarantine, and the all-slots-poisoned liveness signal.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core import integrity
+from repro.core.precision import PrecisionPolicy
+from repro.models import init_params
+from repro.models.cache import cache_slot_checksums, init_cache
+from repro.models.quant import quantize_params
+from repro.runtime.faults import FAULT_SITES, FaultInjector, FaultSpec
+from repro.runtime.scheduler import (
+    AdmissionError,
+    Request,
+    SchedulerError,
+    SlotScheduler,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- FaultSpec grammar -------------------------------------------------------
+
+
+def test_fault_spec_parse_full_grammar():
+    spec = FaultSpec.parse("planes@2,kv@5x3;seed=7")
+    assert spec.shots == (("planes", 2, 1), ("kv", 5, 3))
+    assert spec.seed == 7
+
+
+def test_fault_spec_parse_defaults():
+    spec = FaultSpec.parse("scale@0")
+    assert spec.shots == (("scale", 0, 1),)
+    assert spec.seed == 0
+
+
+@pytest.mark.parametrize("bad", [
+    "", "planes", "warp@2", "planes@2x0", "planes@2;sd=1", "planes@2;seed=x",
+])
+def test_fault_spec_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec.parse(bad)
+
+
+def test_fault_sites_cover_serving_state():
+    assert set(FAULT_SITES) == {
+        "planes", "sign", "occupancy", "checksum", "scale", "kv", "kv_scale",
+    }
+
+
+# -- FaultInjector -----------------------------------------------------------
+
+
+def _quantized(integrity_mode="scrub"):
+    cfg = get_reduced("granite-3-8b")
+    policy = PrecisionPolicy.uniform(
+        8, 8, variant="booth", level="bitplane", integrity=integrity_mode
+    )
+    q = quantize_params(init_params(cfg, KEY), policy, plane_cache=True)
+    return cfg, policy, q
+
+
+def test_injector_flip_moves_params_fingerprint():
+    """Each params-category site lands a flip the audit fingerprint sees."""
+    _, _, q = _quantized()
+    for site in ("planes", "sign", "occupancy", "checksum", "scale"):
+        ref = int(jax.jit(integrity.tree_checksum)(q))
+        inj = FaultInjector(f"{site}@0;seed=3")
+        q, _ = inj.apply(0, q)
+        (event,) = inj.events
+        assert event.site == site and event.category == "params"
+        assert int(jax.jit(integrity.tree_checksum)(q)) != ref, site
+
+
+def test_injector_kv_flip_moves_slot_checksum():
+    cfg, _, _ = _quantized()
+    cache = init_cache(cfg, batch=2, max_len=8, kv_quant=True)
+    ref = np.asarray(jax.jit(cache_slot_checksums)(cache))
+    inj = FaultInjector("kv@1;seed=2")
+    _, cache = inj.apply(1, {}, cache)
+    (event,) = inj.events
+    assert event.category == "kv"
+    got = np.asarray(jax.jit(cache_slot_checksums)(cache))
+    assert (got != ref).any()
+
+
+def test_injector_deterministic_same_seed():
+    _, _, q1 = _quantized()
+    _, _, q2 = _quantized()
+    i1, i2 = FaultInjector("planes@0x3;seed=9"), FaultInjector("planes@0x3;seed=9")
+    i1.apply(0, q1)
+    i2.apply(0, q2)
+    assert [(e.leaf, e.byte, e.bit) for e in i1.events] == \
+        [(e.leaf, e.byte, e.bit) for e in i2.events]
+
+
+def test_injector_nothing_due_is_a_noop():
+    _, _, q = _quantized()
+    ref = int(jax.jit(integrity.tree_checksum)(q))
+    inj = FaultInjector("planes@5;seed=1")
+    q, _ = inj.apply(0, q)
+    assert not inj.events
+    assert inj.pending_after(0) and inj.pending_after(5)
+    assert not inj.pending_after(6)
+    assert int(jax.jit(integrity.tree_checksum)(q)) == ref
+
+
+def test_injector_mark_detected_by_category():
+    _, _, q = _quantized()
+    cfg, _, _ = _quantized()
+    cache = init_cache(cfg, batch=1, max_len=8, kv_quant=True)
+    inj = FaultInjector("planes@0,kv@0;seed=4")
+    q, cache = inj.apply(0, q, cache)
+    assert len(inj.events) == 2 and len(inj.undetected) == 2
+    hit = inj.mark_detected("params", 0)
+    assert [e.site for e in hit] == ["planes"]
+    assert [e.site for e in inj.undetected] == ["kv"]
+    inj.mark_detected("kv", 0)
+    assert not inj.undetected
+
+
+def test_injector_sign_site_needs_sign_words():
+    """sbmwc packs no sign words: targeting them is a loud error, not a
+    silent no-op that would fake 100% detection."""
+    cfg = get_reduced("granite-3-8b")
+    policy = PrecisionPolicy.uniform(
+        8, 8, variant="sbmwc", level="bitplane", integrity="detect"
+    )
+    q = quantize_params(init_params(cfg, KEY), policy, plane_cache=True)
+    inj = FaultInjector("sign@0;seed=1")
+    with pytest.raises(ValueError, match="no injection candidates"):
+        inj.apply(0, q)
+
+
+# -- scheduler containment ---------------------------------------------------
+
+
+def _req(rid, prompt=4, gen=4, arrival=0, deadline=None):
+    return Request(
+        rid=rid, tokens=np.arange(1, prompt + 1), max_new_tokens=gen,
+        arrival_step=arrival, deadline_step=deadline,
+    )
+
+
+def test_admission_rejects_oversized_request():
+    sched = SlotScheduler(2, max_extent=8)
+    with pytest.raises(AdmissionError, match="exceeds the cache extent"):
+        sched.submit(_req(0, prompt=6, gen=6))
+    assert isinstance(AdmissionError("x"), (SchedulerError, ValueError))
+    sched.submit(_req(1, prompt=4, gen=4))  # exactly at the extent: fine
+
+
+def test_admission_rejects_duplicate_rid():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0))
+    with pytest.raises(AdmissionError, match="duplicate"):
+        sched.submit(_req(0))
+
+
+def test_deadline_expires_pending_and_active():
+    sched = SlotScheduler(1)
+    sched.submit(_req(0, deadline=3))          # will be active
+    sched.submit(_req(1, arrival=0, deadline=2))  # starved in queue
+    for slot, req in sched.admissible(0):
+        sched.start(slot, req, first_token=7)
+    assert sched.active_slots == [0]
+    assert sched.expire(1) == []
+    assert sorted(sched.expire(5)) == [0, 1]
+    assert sched.active_slots == [] and sched.pending_rids == []
+    assert "queue" in sched.failed[1] and "mid-decode" in sched.failed[0]
+    assert sched.done  # failed requests do not wedge the loop
+    assert sched.stats().failed == 2
+
+
+def test_requeue_discards_tokens_and_counts_retries():
+    sched = SlotScheduler(1)
+    sched.submit(_req(0, gen=4))
+    for slot, req in sched.admissible(0):
+        sched.start(slot, req, first_token=1)
+    sched.record(0, 2)
+    rid = sched.requeue(0, arrival_step=6)
+    assert rid == 0 and sched.retries(0) == 1
+    assert sched.active_slots == [] and sched.pending_rids == [0]
+    # not admissible until the backoff arrival step
+    assert list(sched.admissible(3)) == []
+    for slot, req in sched.admissible(6):
+        sched.start(slot, req, first_token=5)
+    sched.record(0, 6), sched.record(0, 7), sched.record(0, 8)
+    # regenerated from scratch: only post-requeue tokens count
+    np.testing.assert_array_equal(sched.finished[0], [5, 6, 7, 8])
+    assert sched.stats().requeued == 1
+
+
+def test_quarantine_removes_slot_and_flags_unservable():
+    sched = SlotScheduler(2)
+    sched.quarantine(0)
+    sched.submit(_req(0))
+    assert sched.servable  # slot 1 still free
+    admitted = list(sched.admissible(0))
+    assert [slot for slot, _ in admitted] == [1]
+    for slot, req in admitted:
+        sched.start(slot, req, first_token=0)
+    sched.requeue(1, arrival_step=0)
+    sched.quarantine(1)
+    assert sched.quarantined_slots == frozenset({0, 1})
+    assert not sched.servable  # pending work, every slot poisoned
+    sched.drop_pending(0, "unservable")
+    assert sched.done and sched.failed[0] == "unservable"
+    assert sched.stats().quarantined_slots == 2
+
+
+def test_quarantined_slot_never_returns_to_free_pool():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0, gen=1))
+    for slot, req in sched.admissible(0):
+        done = sched.start(slot, req, first_token=3)
+        assert done  # gen=1 finishes at prefill
+    sched.quarantine(0)
+    sched.submit(_req(1, gen=1))
+    assert [slot for slot, _ in sched.admissible(0)] == [1]
