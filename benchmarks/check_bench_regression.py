@@ -25,7 +25,14 @@ committed baseline and fails (exit 1) when:
   ``--integrity-ceiling`` (default 1.15x) — the ABFT + audit layer must
   stay cheap enough to leave on in production. Its parity entries (100%
   injected-fault detection, bit-identical scrub recovery, detect==off
-  tokens) hard-fail like every other parity verdict.
+  tokens) hard-fail like every other parity verdict;
+* the ``autopilot`` section's overload ramp stops holding its SLA: the
+  autopilot run's p99 queue steps must be within ``sla_queue_steps``
+  while the static 8-bit baseline exceeds it (a ramp the static engine
+  survives makes the verdict vacuous and fails too). Its parity entries
+  (never-degraded tokens == static run, degraded tokens == single-tier
+  run of the admission tier, shedding only at the lowest tier) hard-fail
+  like every other parity verdict.
 
 Input handling is itself gated: a missing file, malformed JSON, a
 document without a ``benches`` section, and a non-finite (NaN/inf)
@@ -209,6 +216,48 @@ def _integrity_failures(doc: dict, ceiling: float) -> list[str]:
     return []
 
 
+def _autopilot_failures(doc: dict) -> list[str]:
+    """SLA gate on the autopilot overload ramp. The tier-contract token
+    parities (`undegraded_tokens_vs_static`, `degraded_tokens_vs_
+    single_tier`, `shed_only_at_lowest`) ride the hard parity gate; this
+    checks the closed loop's reason to exist from the raw numbers: under
+    the scripted ramp the autopilot's p99 queue wait must sit within the
+    configured SLA, and the static 8-bit baseline must demonstrably
+    exceed it (otherwise the ramp no longer overloads anything and the
+    SLA verdict is vacuous)."""
+    ap = doc.get("benches", {}).get("autopilot")
+    if not ap:
+        return [
+            "no autopilot section in the fresh run — serving_bench "
+            "stopped emitting the SLA-autopilot overload ramp the gate "
+            "is supposed to check"
+        ]
+    sla = ap.get("sla_queue_steps", 0.0)
+    p99 = ap.get("p99_queue_steps", {})
+    got = p99.get("autopilot", float("inf"))
+    static = p99.get("static_w8", 0.0)
+    verdict = "ok" if got <= sla < static else "REGRESSED"
+    print(
+        f"[gate] autopilot: p99 queue steps {got:.2f} (SLA {sla:.2f}, "
+        f"static baseline {static:.2f}) {verdict}"
+    )
+    fails = []
+    if got > sla:
+        fails.append(
+            f"autopilot p99 queue steps {got:.2f} violates the scripted "
+            f"SLA {sla:.2f} — the closed loop stopped holding the latency "
+            "contract it exists for"
+        )
+    if static <= sla:
+        fails.append(
+            f"static-baseline p99 queue steps {static:.2f} within the "
+            f"SLA {sla:.2f} — the scripted ramp no longer overloads the "
+            "static engine, so the autopilot SLA verdict is vacuous; "
+            "re-tune the ramp in serving_bench.autopilot_sweep"
+        )
+    return fails
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -292,6 +341,7 @@ def main(argv=None) -> int:
     failures.extend(_sweep_failures(fresh, args.sweep_floor))
     failures.extend(_sparsity_failures(fresh, args.sparsity_floor))
     failures.extend(_integrity_failures(fresh, args.integrity_ceiling))
+    failures.extend(_autopilot_failures(fresh))
 
     parity = _parity_failures(fresh)
     for p in parity:

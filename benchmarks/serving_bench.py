@@ -38,9 +38,18 @@ Reports, into the ``serving`` section of BENCH_kernel.json:
   ``check_bench_regression --integrity-ceiling``; the verdicts ride the
   hard parity gate.
 
+* an ``autopilot`` section (ISSUE 7): a scripted overload ramp served by
+  a static 8-bit engine vs the SLA-autopilot engine. The autopilot must
+  hold the configured p99 queue-step SLA that the static baseline
+  demonstrably exceeds, by descending precision tiers and shedding only
+  past the lowest tier; every finished request must match a single-tier
+  run of its admission tier bit for bit (never-degraded traffic ==
+  static 8-bit run exactly). ``check_bench_regression`` hard-fails on
+  the SLA and parity verdicts.
+
 CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]
-[--precision-sweep] [--sparsity-sweep] [--integrity-sweep]`` (each
-sweep alone).
+[--precision-sweep] [--sparsity-sweep] [--integrity-sweep]
+[--autopilot-sweep]`` (each sweep alone).
 """
 
 from __future__ import annotations
@@ -133,16 +142,8 @@ def precision_sweep(cfg, params, smoke: bool = False) -> dict:
 
     # Registry audit: every plan resolved at a dialed width must consume
     # the stored decomposition (truncation), never requantize the weight.
-    dialed = [
-        p for p in plan_mod.DEFAULT_REGISTRY.plans()
-        if p.w_shift > 0
-    ]
-    routes = sorted({p.kernel for p in dialed})
-    truncated_ok = (
-        decompose_calls["n"] == 0
-        and bool(dialed)
-        and all(p.trunc_cache and not p.requant_w for p in dialed)
-    )
+    audit = plan_mod.truncation_audit()
+    truncated_ok = decompose_calls["n"] == 0 and audit["truncated_ok"]
     return {
         "workload": {"prompt_lens": lens, "gen": gen, "n_slots": n_slots},
         "stored_bits": 8,
@@ -150,7 +151,7 @@ def precision_sweep(cfg, params, smoke: bool = False) -> dict:
         "speedup_4_vs_8": round(tok_per_s["w4a4"] / tok_per_s["w8a8"], 2),
         "speedup_6_vs_8": round(tok_per_s["w6a6"] / tok_per_s["w8a8"], 2),
         "requantize_calls_during_sweep": decompose_calls["n"],
-        "truncated_plan_routes": routes,
+        "truncated_plan_routes": audit["routes"],
         "verdict": "ok" if truncated_ok else "requantized",
     }
 
@@ -356,6 +357,136 @@ def integrity_sweep(cfg, params, smoke: bool = False) -> dict:
     }
 
 
+def autopilot_sweep(cfg, params, smoke: bool = False) -> dict:
+    """Scripted overload ramp: static 8-bit vs the SLA autopilot engine.
+
+    The workload oversubscribes the slot array (``n_req >> n_slots``
+    arriving within a few steps), so a static 8-bit engine queues the
+    tail far past the SLA. The autopilot engine under the same ramp must
+    hold p99 queue-wait within ``sla_queue_steps`` by descending
+    precision tiers and, only past the lowest tier, shedding the queue
+    tail (DESIGN.md §10). Three hard verdicts ride the CI parity gate:
+
+    * ``autopilot_sla`` / ``static_overload``: the autopilot holds the
+      SLA the static baseline demonstrably exceeds (if the ramp stops
+      overloading the static engine the check is vacuous — that fails
+      too);
+    * ``undegraded_tokens_vs_static``: requests admitted at the widest
+      tier must emit tokens bit-identical to the static 8-bit run —
+      mixed-tier decode is invisible to never-degraded traffic;
+    * ``degraded_tokens_vs_single_tier``: requests admitted at a lower
+      tier must match a single-tier run of that tier bit for bit — the
+      per-slot tier contract, not an approximation;
+    * ``shed_only_at_lowest``: every shed reason names the lowest tier
+      (the ladder is exhausted before any request is dropped).
+    """
+    from repro.runtime.autopilot import AutopilotPolicy
+
+    policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+    if smoke:
+        plen, gen, n_slots, n_req, sla = 4, 5, 2, 8, 6
+    else:
+        plen, gen, n_slots, n_req, sla = 8, 8, 2, 12, 8
+    ap_policy = AutopilotPolicy(
+        sla_queue_steps=sla,
+        degrade_patience=2,
+        upgrade_patience=4,
+        cooldown_steps=2,
+        shadow_frac=0.5,
+    )
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (plen,)),
+                    max_new_tokens=gen, arrival_step=i // n_slots)
+            for i in range(n_req)
+        ]
+
+    kw = dict(n_slots=n_slots, max_len=plen + gen)
+    ap_engine = ContinuousBatchingEngine(
+        cfg, params, policy, autopilot=ap_policy, **kw
+    )
+    ap_engine.run(requests())  # warm: compiles every tier it descends through
+    ap_res, ap_stats = ap_engine.run(requests())
+    apst = ap_stats["autopilot"]
+
+    static = ContinuousBatchingEngine(cfg, params, policy, **kw)
+    static.run(requests())  # warm
+    st_res, st_stats = static.run(requests())
+
+    # Per-tier contract parity: each finished request must match a
+    # single-tier run of its admission tier, bit for bit. Tier w8a8
+    # reuses the measured static run (same engine, same compiled steps).
+    tier_runs = {"w8a8": st_res}
+    lowest_w = min(w for _, w in ap_engine._tiers)
+    parity = {"undegraded_tokens_vs_static": "ok",
+              "degraded_tokens_vs_single_tier": "ok"}
+    for rid_s, tier_name in sorted(apst["request_tiers"].items()):
+        rid = int(rid_s)
+        if tier_name not in tier_runs:
+            w = int(tier_name.split("a")[0][1:])
+            static.set_precision(None if w == 8 else w)
+            tier_runs[tier_name], _ = static.run(requests())
+        want = tier_runs[tier_name].get(rid)
+        got = ap_res.get(rid)
+        if got is None or want is None or not np.array_equal(got, want):
+            key = ("undegraded_tokens_vs_static" if tier_name == "w8a8"
+                   else "degraded_tokens_vs_single_tier")
+            parity[key] = "mismatch"
+
+    shed_reasons = [
+        r for r in ap_stats["failed"].values() if r.startswith("overload:")
+    ]
+    parity["shed_only_at_lowest"] = (
+        "ok" if all(f"tier w{lowest_w}" in r for r in shed_reasons)
+        else "mismatch"
+    )
+    ap_p99 = apst["p99_queue_steps"]
+    st_p99 = st_stats["p99_queue_steps"]
+    parity["autopilot_sla"] = "ok" if ap_p99 <= sla else "violated"
+    parity["static_overload"] = "ok" if st_p99 > sla else "vacuous"
+
+    total_toks = max(sum(apst["tier_tokens"].values()), 1)
+    return {
+        "workload": {
+            "prompt_len": plen, "gen": gen, "n_slots": n_slots,
+            "n_requests": n_req, "arrival": "i // n_slots",
+        },
+        "sla_queue_steps": sla,
+        "tok_per_s": {
+            "static_w8": round(st_stats["tok_per_s"], 2),
+            "autopilot": round(ap_stats["tok_per_s"], 2),
+        },
+        "p99_queue_steps": {
+            "static_w8": round(st_p99, 2),
+            "autopilot": round(ap_p99, 2),
+        },
+        "shed": apst["shed"],
+        "switches": [[s, list(t), r] for s, t, r in apst["switches"]],
+        "tier_token_frac": {
+            name: round(n / total_toks, 3)
+            for name, n in sorted(apst["tier_tokens"].items())
+        },
+        "shadow": {
+            "probes": apst["shadow_probes"],
+            "kl_ewma": (
+                None if apst["shadow_kl_ewma"] is None
+                else round(apst["shadow_kl_ewma"], 5)
+            ),
+        },
+        "parity": parity,
+        "note": (
+            "same burst workload through a static 8-bit engine and the "
+            "autopilot engine; the autopilot descends the tier ladder "
+            "under queue pressure and sheds the deadline-hopeless tail "
+            "only past the lowest tier. Parity compares each finished "
+            "request against a single-tier run of its admission tier "
+            "(the per-request tier contract)"
+        ),
+    }
+
+
 def serving_bench(json_path: str | None = None, smoke: bool = False):
     """Returns report rows; writes the ``serving`` JSON section."""
     from kernel_bench import JSON_PATH, _write_bench_section
@@ -402,6 +533,7 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
     sweep = precision_sweep(cfg, params, smoke=smoke)
     sparsity = sparsity_sweep(cfg, params, smoke=smoke)
     integrity = integrity_sweep(cfg, params, smoke=smoke)
+    autopilot = autopilot_sweep(cfg, params, smoke=smoke)
 
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
@@ -458,6 +590,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         path, "integrity",
         {"bench": "integrity", "arch": cfg.name, "smoke": smoke, **integrity},
     )
+    _write_bench_section(
+        path, "autopilot",
+        {"bench": "autopilot", "arch": cfg.name, "smoke": smoke, **autopilot},
+    )
     rows = [
         ("serving/cb_int8_tok_s", payload["tok_per_s"]["cb_int8_kv"],
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
@@ -470,6 +606,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         ("serving/integrity_detect_overhead_x", integrity["overhead_detect_vs_off_x"],
          f"faults_{integrity['parity']['fault_detection']}"
          f"_recovery_{integrity['parity']['fault_recovery_tokens']}"),
+        ("serving/autopilot_p99_queue_steps", autopilot["p99_queue_steps"]["autopilot"],
+         f"static_{autopilot['p99_queue_steps']['static_w8']}"
+         f"_sla_{autopilot['parity']['autopilot_sla']}"
+         f"_shed_{autopilot['shed']}"),
     ]
     return rows
 
@@ -484,15 +624,19 @@ if __name__ == "__main__":
                     help="run only the occupancy-sparsity sweep and print it")
     ap.add_argument("--integrity-sweep", action="store_true",
                     help="run only the ABFT/fault-injection sweep and print it")
+    ap.add_argument("--autopilot-sweep", action="store_true",
+                    help="run only the SLA-autopilot overload ramp and print it")
     args = ap.parse_args()
-    if args.precision_sweep or args.sparsity_sweep or args.integrity_sweep:
+    if (args.precision_sweep or args.sparsity_sweep or args.integrity_sweep
+            or args.autopilot_sweep):
         import json as _json
 
         cfg = get_reduced(ARCH)
         params = init_params(cfg, jax.random.PRNGKey(0))
         fn = (precision_sweep if args.precision_sweep
               else sparsity_sweep if args.sparsity_sweep
-              else integrity_sweep)
+              else integrity_sweep if args.integrity_sweep
+              else autopilot_sweep)
         print(_json.dumps(fn(cfg, params, smoke=args.smoke), indent=2))
     else:
         for name, val, derived in serving_bench(args.json, smoke=args.smoke):

@@ -51,6 +51,7 @@ __all__ = [
     "make_plan",
     "plan_for_operands",
     "plan_cacheable",
+    "truncation_audit",
 ]
 
 
@@ -161,6 +162,29 @@ class PlanRegistry:
 #: Process-wide default registry (``make_plan`` / ``with_precision`` use it
 #: unless given another one; tests may instantiate private registries).
 DEFAULT_REGISTRY = PlanRegistry()
+
+
+def truncation_audit(registry: Optional[PlanRegistry] = None) -> dict:
+    """Audit the no-requantization invariant over every *dialed* plan in
+    ``registry`` (default: the process registry): a plan resolved with
+    ``w_shift > 0`` — executing below its stored width — must consume the
+    stored decomposition by MSB-prefix truncation (``trunc_cache``),
+    never re-decompose the weight (``requant_w``). The precision-sweep
+    bench and the autopilot bench both gate on this; the engine's dial
+    check calls it after binding a new tier.
+
+    Returns ``{"dialed_plans", "routes", "truncated_ok"}`` where
+    ``truncated_ok`` is False when no dialed plan exists (vacuous audits
+    must not pass) or any dialed plan requantizes.
+    """
+    reg = DEFAULT_REGISTRY if registry is None else registry
+    dialed = [p for p in reg.plans() if p.w_shift > 0]
+    return {
+        "dialed_plans": len(dialed),
+        "routes": sorted({p.kernel for p in dialed}),
+        "truncated_ok": bool(dialed)
+        and all(p.trunc_cache and not p.requant_w for p in dialed),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -182,6 +182,17 @@ class PrecisionPolicy:
         """:meth:`lookup` with the runtime dial applied."""
         return self.effective(self.lookup(layer_name))
 
+    def storage_width(self) -> Optional[int]:
+        """Widest configured (pre-dial) weight width across the default
+        and every override, or ``None`` when the policy is fully dense.
+        This is the width weights are stored and decomposed at — the
+        ceiling any runtime dial or autopilot tier must stay under,
+        since MSB-prefix truncation has no planes above it."""
+        widths = [p.w_bits for _, p in self.overrides if p.active]
+        if self.default.active:
+            widths.append(self.default.w_bits)
+        return max(widths) if widths else None
+
     def describe(self) -> str:
         lines = [
             f"PrecisionPolicy(level={self.level}, variant={self.variant}, mode={self.mode})",

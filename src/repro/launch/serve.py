@@ -38,7 +38,9 @@ to serve per-tier traffic, e.g.::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -51,10 +53,11 @@ from repro.core.precision import PrecisionPolicy
 from repro.launch import sampling
 from repro.launch.steps import make_cb_decode_step, make_prefill_step, make_serve_step
 from repro.models.cache import (
-    cache_kv_bytes, cache_slot_checksums, init_cache, insert_slot,
+    cache_kv_bytes, cache_slot_checksums, init_cache, insert_slot, select_slots,
 )
 from repro.models.quant import quantize_params
 from repro.models.transformer import init_params
+from repro.runtime.autopilot import Autopilot, AutopilotPolicy
 from repro.runtime.faults import FaultInjector, FaultSpec
 from repro.runtime.scheduler import Request, SlotScheduler
 
@@ -106,12 +109,8 @@ class _PrecisionDial:
 
     def _dial_check(self, precision: Tuple[int, int]) -> None:
         pol = self.policy
-        w_widths = [
-            p.w_bits
-            for p in [pol.default] + [p for _, p in pol.overrides]
-            if p.active
-        ]
-        if not w_widths:
+        stored = pol.storage_width()
+        if stored is None:
             raise ValueError("set_precision needs an active quantization policy")
         a, w = precision
         if min(a, w) < 1:
@@ -120,11 +119,11 @@ class _PrecisionDial:
         # has no planes above it); activations quantize fresh per token, so
         # an over-wide activation dial is merely clamped by
         # policy.effective() and needs no rejection here.
-        if w > max(w_widths):
+        if w > stored:
             raise ValueError(
                 f"runtime weight precision {w} exceeds the stored width "
-                f"{max(w_widths)} — weights were quantized/decomposed at "
-                f"{max(w_widths)} bits; the dial can only truncate, never extend"
+                f"{stored} — weights were quantized/decomposed at "
+                f"{stored} bits; the dial can only truncate, never extend"
             )
         if pol.level != "bitplane":
             raise ValueError(
@@ -342,6 +341,25 @@ class Engine(_PrecisionDial, _IntegrityRuntime):
         return tokens, tps
 
 
+_DEGRADE_ALIAS_WARNED = False
+
+
+def _degrade_alias_policy(
+    degrade_after: Optional[int], degrade_to: int
+) -> AutopilotPolicy:
+    """PR 6's ``degrade_after``/``degrade_to`` engine kwargs, expressed
+    as the autopilot policy they always were: a pure scrub-rate rule (no
+    SLA, so depth/latency pressure never fires) that drops to the
+    ``degrade_to`` tier once the scrub counter crosses the threshold.
+    ``upgrade_patience`` is irrelevant — with no SLA there is no headroom
+    signal, and the scrub cap pins the ladder anyway."""
+    return AutopilotPolicy(
+        scrub_degrade_after=degrade_after,
+        scrub_degrade_to=degrade_to,
+        shed=False,
+    )
+
+
 class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
     """Slot-scheduled serving over a shared, optionally int8, KV cache.
 
@@ -361,6 +379,16 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
     tree); in-flight slots continue decoding across the switch. A
     ``precision_schedule`` on :meth:`run` automates the switch at given
     decode steps — the drop-8-to-4-under-pressure pattern.
+
+    ``autopilot`` (an :class:`~repro.runtime.autopilot.AutopilotPolicy`)
+    closes the loop instead: a per-run controller watches queue depth,
+    per-token decode latency, the scrub counter and a shadow-KL quality
+    probe, and moves the *admission* tier down/up the precision ladder
+    with hysteresis, escalating to load shedding past the lowest tier.
+    In-flight requests keep the tier they were admitted at — the engine
+    groups active slots by tier and runs one plane-prefix decode pass
+    per tier against the shared packed weights, merging per-slot
+    (mixed-tier decode, DESIGN.md §10).
     """
 
     def __init__(
@@ -377,6 +405,7 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         audit_interval: int = 1,
         max_retries: int = 2,
         quarantine_after: int = 2,
+        autopilot: Optional[AutopilotPolicy] = None,
         degrade_after: Optional[int] = None,
         degrade_to: int = 4,
     ):
@@ -400,11 +429,55 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         self._prefill_key, self._decode_key = jax.random.split(base)
         self._insert = jax.jit(insert_slot, donate_argnums=(0,))
         self.quarantine_after = quarantine_after
-        self.degrade_after = degrade_after
-        self.degrade_to = degrade_to
+        if degrade_after is not None:
+            # PR 6's one-shot scrub-degrade hook, folded into the autopilot
+            # policy (scrub rate is just one more controller input now)
+            global _DEGRADE_ALIAS_WARNED
+            if not _DEGRADE_ALIAS_WARNED:
+                warnings.warn(
+                    "degrade_after/degrade_to are deprecated: pass "
+                    "autopilot=AutopilotPolicy(scrub_degrade_after=..., "
+                    "scrub_degrade_to=...) instead (the kwargs construct "
+                    "exactly that policy)",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+                _DEGRADE_ALIAS_WARNED = True
+            if autopilot is not None:
+                raise ValueError(
+                    "pass either autopilot= or the deprecated degrade_after/"
+                    "degrade_to aliases, not both — fold the scrub rule into "
+                    "the policy via scrub_degrade_after/scrub_degrade_to"
+                )
+            autopilot = _degrade_alias_policy(degrade_after, degrade_to)
+        if autopilot is not None:
+            stored = policy.storage_width()
+            if stored is None:
+                raise ValueError(
+                    "autopilot needs an active quantization policy (the "
+                    "tier ladder truncates the stored decomposition)"
+                )
+            # keep only servable rungs; widest rung is pinned to the
+            # storage width so tier 0 IS the static engine (same compiled
+            # steps, bit-identical tokens for never-degraded slots)
+            tiers = tuple(
+                (min(a, stored), min(w, stored))
+                for a, w in autopilot.tiers
+                if min(a, w) <= stored
+            )
+            tiers = tuple(dict.fromkeys(tiers))  # dedupe, keep order
+            if tiers[0] != (stored, stored):
+                tiers = ((stored, stored),) + tiers
+            self._tiers = tiers
+            # the controller must see the clamped ladder: rung indices
+            # are shared between Autopilot state and engine dispatch
+            autopilot = dataclasses.replace(autopilot, tiers=tiers)
+        self.autopilot_policy = autopilot
         self._init_integrity(params, value_bits, audit_interval, max_retries)
         if self.integrity != "off":
             self._slot_fp = jax.jit(cache_slot_checksums)
+        self._select = jax.jit(select_slots)
+        self._shadow_compiled: dict = {}
         self._init_dial()
 
     def _make_steps(self, precision):
@@ -424,12 +497,60 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                     self.cfg, self.policy, precision=precision, collector=scol
                 ),
                 # scrub-and-retry re-executes the step from the pre-step
-                # cache, so integrity mode must not donate it
-                donate_argnums=() if check else (1,),
+                # cache, and a mixed-tier step feeds the SAME pre-step
+                # cache to one pass per tier — neither may donate it
+                donate_argnums=(
+                    () if check or self.autopilot_policy is not None else (1,)
+                ),
             ),
             pcol,
             scol,
         )
+
+    # -- autopilot plumbing (DESIGN.md §10) ---------------------------------
+
+    def _tier_precision(self, tier_index: int) -> Optional[Tuple[int, int]]:
+        """Ladder rung -> the runtime dial it compiles at. Rung 0 (the
+        storage width) maps to ``None`` so never-degraded traffic shares
+        the static engine's compiled steps — the bit-identity the CI
+        parity gate checks is structural, not coincidental."""
+        if tier_index == 0:
+            return None
+        return self._tiers[tier_index]
+
+    def _shadow_steps(self, precision):
+        """Lazily-compiled logits-returning decode step per tier for the
+        shadow quality probe (no collector, no donation: the probe reads
+        the pre-step cache and discards its outputs)."""
+        if precision not in self._shadow_compiled:
+            self._shadow_compiled[precision] = jax.jit(
+                make_cb_decode_step(
+                    self.cfg, self.policy, precision=precision,
+                    with_logits=True,
+                )
+            )
+        return self._shadow_compiled[precision]
+
+    def _shadow_kl(self, cache, tokens, temps, key, tier_index, active) -> float:
+        """Mean KL(widest || tier) over the active slots' next-token
+        distributions — the cheap quality proxy the controller's
+        ``kl_budget`` guard consumes. Runs two extra (undonated) decode
+        passes; the policy's ``shadow_frac`` bounds how often."""
+        ref = self._shadow_steps(None)
+        deg = self._shadow_steps(self._tier_precision(tier_index))
+        *_, ref_logits = ref(self.q_params, cache, tokens, temps, key)
+        *_, deg_logits = deg(self.q_params, cache, tokens, temps, key)
+        # slice to the real vocab BEFORE log_softmax: the padded tail
+        # would otherwise contribute, and masking it -inf would NaN the KL
+        v = self.cfg.vocab_size
+        lp_ref = jax.nn.log_softmax(
+            ref_logits[..., :v].astype(jnp.float32), axis=-1
+        )
+        lp_deg = jax.nn.log_softmax(
+            deg_logits[..., :v].astype(jnp.float32), axis=-1
+        )
+        kl = jnp.sum(jnp.exp(lp_ref) * (lp_ref - lp_deg), axis=-1)
+        return float(jnp.mean(kl[jnp.asarray(active)]))
 
     def _first_token(self, logits, request: Request) -> jax.Array:
         logits = sampling.mask_vocab(logits, self.cfg.vocab_size)
@@ -437,15 +558,21 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         temps = jnp.full((logits.shape[0],), request.temperature, jnp.float32)
         return sampling.sample_tokens(logits, temps, key)[0]
 
-    def _prefill_checked(self, req: Request, integ: Optional[dict]):
+    def _prefill_checked(self, req: Request, integ: Optional[dict], steps=None):
         """Prefill one request, harvesting ABFT alarms (scrub-and-retry
-        on alarm in scrub mode)."""
+        on alarm in scrub mode). ``steps``: a compiled
+        (prefill, step, pcol, scol) tuple to use instead of the bound
+        one — the autopilot admits each request at its contract tier's
+        prefill regardless of what the dial was last bound to."""
+        prefill, _, pcol, _ = steps if steps is not None else (
+            self._prefill, None, self._prefill_col, None
+        )
         batch = {"tokens": jnp.asarray(req.tokens)[None, :]}
         if self.integrity == "off":
-            return self._prefill(self.q_params, batch)
+            return prefill(self.q_params, batch)
         for attempt in range(self.max_retries + 1):
-            logits, seq_cache, alarms = self._prefill(self.q_params, batch)
-            bad, n = self._harvest(self._prefill_col, alarms)
+            logits, seq_cache, alarms = prefill(self.q_params, batch)
+            bad, n = self._harvest(pcol, alarms)
             integ["abft_checks"] += n
             if not bad:
                 return logits, seq_cache
@@ -457,6 +584,42 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                 integ["step_retries"] += 1
         raise integrity.IntegrityError(
             f"prefill ABFT alarm (rid {req.rid}) persisted through "
+            f"{self.max_retries} scrub-and-retry attempts"
+        )
+
+    def _decode_pass(
+        self, steps, cache, tokens, temps, key, step_i, integ, injector
+    ):
+        """One full-slot-array decode pass through ``steps``'s compiled
+        cb step, with the inline ABFT harvest + bounded scrub-and-retry
+        loop. The mixed-tier step runs this once per active tier against
+        the same (undonated) pre-step cache; the single-tier engines run
+        it once per iteration. Returns (next_tokens, new_cache)."""
+        check = self.integrity != "off"
+        scrub_mode = self.integrity == "scrub"
+        _, step_fn, _, scol = steps
+        for attempt in range(self.max_retries + 1):
+            res = step_fn(self.q_params, cache, tokens, temps, key)
+            if not check:
+                return res
+            ntok, ncache, alarms = res
+            bad, n = self._harvest(scol, alarms)
+            integ["abft_checks"] += n
+            if not bad:
+                return ntok, ncache
+            integ["abft_alarms"] += 1
+            if injector is not None:
+                injector.mark_detected("params", step_i)
+            if not scrub_mode:
+                return ntok, ncache  # detect: record and commit as-is
+            if attempt < self.max_retries:
+                # re-execute from the pre-step cache/tokens (not donated
+                # under integrity) with scrubbed weights and the same
+                # fold_in key: bit-identical retry
+                self._scrub()
+                integ["step_retries"] += 1
+        raise integrity.IntegrityError(
+            f"decode ABFT alarm at step {step_i} persisted through "
             f"{self.max_retries} scrub-and-retry attempts"
         )
 
@@ -515,7 +678,19 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         SEU test harness. With ``policy.integrity != "off"`` detections
         feed the injector's event log; in scrub mode every params fault
         is scrubbed-and-retried (bit-identical tokens) and KV faults are
-        contained per-slot (requeue / quarantine)."""
+        contained per-slot (requeue / quarantine).
+
+        With an engine-level ``autopilot`` policy the loop runs closed:
+        the controller observes (queue depth, per-token latency EWMA,
+        scrub count, shadow KL) each iteration and moves the *admission*
+        tier; in-flight slots keep their admission tier (mixed-tier
+        decode), and under sustained pressure at the lowest tier the
+        queue tail is shed (``stats['autopilot']`` reports switches,
+        per-tier token counts, shed counts and the quality probe).
+        Scheduled entries racing an autopilot switch on the same decode
+        step resolve deterministically: the autopilot wins, the schedule
+        entry is consumed and recorded in
+        ``stats['autopilot']['schedule_conflicts']``."""
         if isinstance(injector, (str, FaultSpec)):
             injector = FaultInjector(injector)
         schedule = dict(precision_schedule or {})
@@ -540,7 +715,19 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         }
         slot_faults: dict[int, int] = {}
         scrubs0 = self._scrubs
-        degraded = False
+        ap = (
+            Autopilot(self.autopilot_policy, self.n_slots)
+            if self.autopilot_policy is not None
+            else None
+        )
+        slot_tier: dict[int, int] = {}  # in-flight tier contracts
+        request_tiers: dict[int, tuple] = {}
+        tier_tokens: dict[int, int] = {}
+        schedule_conflicts: list = []
+        shadow_probes = 0
+        pending_kl: Optional[float] = None
+        last_latency = float("nan")
+        last_emitted = 0
         step_i = 0
         decode_steps = 0
         decoded_tokens = 0
@@ -548,6 +735,8 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         t0 = time.time()
         while not sched.done:
             sched.expire(step_i)
+            active_now = set(sched.active_slots)
+            slot_tier = {s: t for s, t in slot_tier.items() if s in active_now}
             if not sched.servable:
                 for rid in sched.pending_rids:
                     sched.drop_pending(
@@ -581,68 +770,143 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                         self._contain_kv(
                             sched, bad_slots, slot_faults, step_i, integ
                         )
+                        active_now = set(sched.active_slots)
+                        slot_tier = {
+                            s: t for s, t in slot_tier.items() if s in active_now
+                        }
                     kv_ref = sums  # re-baseline (corrupt extents are dead:
                     # their tenants were requeued; readmission overwrites)
-            if (
-                self.degrade_after
-                and not degraded
-                and self._scrubs - scrubs0 >= self.degrade_after
-                and (self._precision is None or self._precision[1] > self.degrade_to)
-            ):
-                # scrub storm: shed precision so each retried step costs
-                # fewer plane passes while upsets keep arriving
-                self.set_precision(self.degrade_to)
-                switches.append((decode_steps, self._precision))
-                degraded = True
+            decision = None
+            if ap is not None:
+                decision = ap.observe(
+                    step_i,
+                    sched.queue_depth(step_i),
+                    scrubs=self._scrubs - scrubs0,
+                    step_latency_s=last_latency,
+                    tokens_emitted=last_emitted,
+                    shadow_kl=pending_kl,
+                )
+                pending_kl = None
+                if decision.switched:
+                    switches.append((decode_steps, ap.tier))
             due = [s for s in schedule if s <= decode_steps]
             for s in sorted(due):
-                self.set_precision(schedule.pop(s))
-                switches.append((decode_steps, self._precision))
+                prec = schedule.pop(s)
+                if ap is None:
+                    # legacy open-loop semantics: a scheduled switch
+                    # rebinds the global dial, in-flight slots included
+                    self.set_precision(prec)
+                    switches.append((decode_steps, self._precision))
+                elif decision is not None and decision.switched:
+                    # race: both landed on this decode step — the
+                    # closed-loop controller wins, the entry is consumed
+                    schedule_conflicts.append((decode_steps, s, prec))
+                else:
+                    forced = ap.force(step_i, _norm_precision(prec))
+                    if forced.switched:
+                        switches.append((decode_steps, ap.tier))
+            if ap is not None and ap.shedding:
+                waiting = sched.waiting(step_i)
+                if waiting:
+                    est = max(
+                        1,
+                        round(
+                            sum(r.max_new_tokens for r in waiting)
+                            / len(waiting)
+                        ),
+                    )
+                    for rid in ap.shed_victims(
+                        waiting, step_i, service_estimate=est
+                    ):
+                        sched.shed(
+                            rid,
+                            f"overload: shed from queue tail at step "
+                            f"{step_i} (autopilot, tier w{ap.tier[1]})",
+                        )
             for slot, req in sched.admissible(step_i):
-                logits, seq_cache = self._prefill_checked(req, integ if check else None)
+                # tier is a per-request contract fixed at admission: the
+                # prefill AND every decode step run at this tier, across
+                # any later controller transitions
+                tier_steps = (
+                    self._steps_for(self._tier_precision(ap.tier_index))
+                    if ap is not None
+                    else None
+                )
+                logits, seq_cache = self._prefill_checked(
+                    req, integ if check else None, steps=tier_steps
+                )
                 tok = self._first_token(logits, req)
                 cache = self._insert(cache, seq_cache, jnp.int32(slot))
                 tokens = tokens.at[slot, 0].set(tok)
-                sched.start(slot, req, int(tok))
+                done_now = sched.start(slot, req, int(tok))
+                if ap is not None:
+                    request_tiers[req.rid] = ap.tier
+                    if not done_now:
+                        slot_tier[slot] = ap.tier_index
             if sched.active_slots:
+                t_step = time.time()
                 key = jax.random.fold_in(self._decode_key, step_i)
                 temps = jnp.asarray(sched.temperatures())
-                for attempt in range(self.max_retries + 1):
-                    res = self._step(self.q_params, cache, tokens, temps, key)
-                    if not check:
-                        ntok, ncache = res
-                        break
-                    ntok, ncache, alarms = res
-                    bad, n = self._harvest(self._step_col, alarms)
-                    integ["abft_checks"] += n
-                    if not bad:
-                        break
-                    integ["abft_alarms"] += 1
-                    if injector is not None:
-                        injector.mark_detected("params", step_i)
-                    if not scrub_mode:
-                        break  # detect: record and commit as-is
-                    if attempt < self.max_retries:
-                        # re-execute from the pre-step cache/tokens (not
-                        # donated under integrity) with scrubbed weights
-                        # and the same fold_in key: bit-identical retry
-                        self._scrub()
-                        integ["step_retries"] += 1
-                    else:
-                        raise integrity.IntegrityError(
-                            f"decode ABFT alarm at step {step_i} persisted "
-                            f"through {self.max_retries} scrub-and-retry "
-                            "attempts"
+                active = sched.active_slots
+                if ap is None:
+                    ntok, ncache = self._decode_pass(
+                        self._steps_for(self._precision), cache, tokens,
+                        temps, key, step_i, integ, injector,
+                    )
+                else:
+                    # mixed-tier decode: one plane-prefix pass per tier
+                    # present among the active slots, all against the
+                    # same pre-step cache; each slot keeps the pass of
+                    # its contract tier (free slots ride the base pass —
+                    # their lanes are garbage the scheduler never reads)
+                    present = sorted({slot_tier.get(s, 0) for s in active})
+                    ntok, ncache = self._decode_pass(
+                        self._steps_for(self._tier_precision(present[0])),
+                        cache, tokens, temps, key, step_i, integ, injector,
+                    )
+                    for ti in present[1:]:
+                        tok_t, cache_t = self._decode_pass(
+                            self._steps_for(self._tier_precision(ti)),
+                            cache, tokens, temps, key, step_i, integ,
+                            injector,
                         )
+                        mask_np = np.zeros((self.n_slots,), bool)
+                        for s_ in active:
+                            if slot_tier.get(s_, 0) == ti:
+                                mask_np[s_] = True
+                        mask = jnp.asarray(mask_np)
+                        ntok = jnp.where(mask[:, None], tok_t, ntok)
+                        ncache = self._select(ncache, cache_t, mask)
+                    frac = ap.policy.shadow_frac
+                    if (
+                        frac > 0.0
+                        and ap.tier_index > 0
+                        and int(decode_steps * frac)
+                        > int((decode_steps - 1) * frac)
+                    ):
+                        # shadow quality probe against the pre-step state
+                        pending_kl = self._shadow_kl(
+                            cache, tokens, temps, key, ap.tier_index, active
+                        )
+                        shadow_probes += 1
                 tokens, cache = ntok, ncache
                 toks_np = np.asarray(tokens[:, 0])
-                for slot in sched.active_slots:
+                for slot in active:
+                    if ap is not None:
+                        ti = slot_tier.get(slot, 0)
+                        tier_tokens[ti] = tier_tokens.get(ti, 0) + 1
                     sched.record(slot, int(toks_np[slot]))
                     decoded_tokens += 1
+                last_latency = time.time() - t_step
+                last_emitted = len(active)
+                sched.observe_step(step_i, last_latency)
                 decode_steps += 1
                 step_i += 1
             else:
                 # nothing in flight: fast-forward to the next arrival
+                sched.observe_step(step_i)
+                last_latency = float("nan")
+                last_emitted = 0
                 nxt = sched.next_arrival()
                 step_i = step_i + 1 if nxt is None else max(nxt, step_i + 1)
             if check and self.audit_interval:
@@ -650,6 +914,8 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         jax.block_until_ready(tokens)
         wall = max(time.time() - t0, 1e-9)
         s = sched.stats()
+        waits = np.asarray(s.queue_waits, np.float64)
+        p99_wait = float(np.percentile(waits, 99)) if waits.size else 0.0
         stats = {
             "wall_s": wall,
             "decode_steps": decode_steps,
@@ -663,6 +929,7 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
             "admitted": s.admitted,
             "peak_occupancy": s.peak_occupancy,
             "queue_steps": s.queue_steps,
+            "p99_queue_steps": p99_wait,
             "precision_switches": switches,
             "failed": dict(sched.failed),
             "requeued": s.requeued,
@@ -672,6 +939,26 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
             integ["mode"] = self.integrity
             integ["scrubs"] = self._scrubs - scrubs0
             stats["integrity"] = integ
+        if ap is not None:
+            stats["autopilot"] = {
+                "tiers": [list(t) for t in self._tiers],
+                "final_tier": list(ap.tier),
+                "switches": list(ap.switches),
+                "shed": s.shed,
+                "request_tiers": {
+                    rid: f"w{w}a{a}" for rid, (a, w) in request_tiers.items()
+                },
+                "tier_tokens": {
+                    f"w{self._tiers[ti][1]}a{self._tiers[ti][0]}": n
+                    for ti, n in sorted(tier_tokens.items())
+                },
+                "shadow_probes": shadow_probes,
+                "shadow_kl_ewma": ap.shadow_kl_ewma,
+                "latency_ewma_ms": ap.latency_ewma_ms,
+                "p99_queue_steps": p99_wait,
+                "schedule_conflicts": schedule_conflicts,
+                "depth_history": list(s.depth_history),
+            }
         return sched.finished, stats
 
 
@@ -739,6 +1026,27 @@ def build_parser() -> argparse.ArgumentParser:
                     "'planes@2,kv@5x2;seed=7'; sites: planes, sign, "
                     "occupancy, checksum, scale, kv, kv_scale "
                     "(continuous batching only)")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="closed-loop SLA autopilot (DESIGN.md §10): watch "
+                    "queue depth, per-token decode latency and the shadow "
+                    "quality probe, and move the admission precision tier "
+                    "down/up the 8-6-4 ladder with hysteresis; past the "
+                    "lowest tier, shed the queue tail. In-flight requests "
+                    "keep their admission tier (mixed-tier decode). "
+                    "Continuous batching only; needs --level bitplane")
+    ap.add_argument("--sla-ms", type=float, default=None,
+                    help="autopilot wall-clock SLA: per-emitted-token decode "
+                    "latency EWMA above this is pressure (degrade), below "
+                    "half of it is headroom (upgrade)")
+    ap.add_argument("--sla-queue-steps", type=int, default=None,
+                    help="autopilot queue SLA: per-request queue-wait budget "
+                    "in engine steps — the deterministic signal the shedding "
+                    "ladder evicts against (predicted wait > budget)")
+    ap.add_argument("--shadow-frac", type=float, default=0.0,
+                    help="fraction of decode steps shadow-scored for quality "
+                    "while degraded: an extra logits pass at the stored "
+                    "width and the current tier, KL between them fed to the "
+                    "controller (0 disables the probe)")
     ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
                     help="per-request deadline: fail any request not "
                     "finished within STEPS engine iterations of its "
@@ -804,6 +1112,32 @@ def validate_args(args) -> None:
             args.inject_faults = FaultSpec.parse(args.inject_faults)
         except ValueError as e:
             die(f"--inject-faults: {e}")
+    if args.autopilot:
+        if args.mode == "lockstep":
+            die("--autopilot drives the continuous-batching engine "
+                "(--mode cb): the lockstep engine has no queue to watch")
+        if not args.bits:
+            die("--autopilot needs an active quantization policy "
+                "(--bits > 0): the tier ladder truncates the stored "
+                "decomposition")
+        if args.level != "bitplane":
+            die("--autopilot needs --level bitplane (the precision ladder "
+                "is served by plane-prefix truncation)")
+        if args.no_plane_cache:
+            die("--autopilot needs the weight-plane cache (drop "
+                "--no-plane-cache): tier switches truncate the stored "
+                "decomposition instead of re-quantizing")
+    for flag, val in (("--sla-ms", args.sla_ms is not None),
+                      ("--sla-queue-steps", args.sla_queue_steps is not None),
+                      ("--shadow-frac", args.shadow_frac != 0.0)):
+        if val and not args.autopilot:
+            die(f"{flag} is an autopilot knob: add --autopilot")
+    if args.sla_ms is not None and args.sla_ms <= 0:
+        die("--sla-ms must be > 0")
+    if args.sla_queue_steps is not None and args.sla_queue_steps < 1:
+        die("--sla-queue-steps must be >= 1")
+    if not 0.0 <= args.shadow_frac <= 1.0:
+        die("--shadow-frac must be in [0, 1]")
     if args.deadline is not None:
         if args.mode == "lockstep":
             die("--deadline is a continuous-batching feature (--mode cb): "
@@ -901,12 +1235,22 @@ def main():
     )
     n_slots = args.n_slots or args.batch
     max_len = max(lens) + args.gen
+    ap_policy = (
+        AutopilotPolicy(
+            sla_ms=args.sla_ms,
+            sla_queue_steps=args.sla_queue_steps,
+            shadow_frac=args.shadow_frac,
+        )
+        if args.autopilot
+        else None
+    )
     engine = ContinuousBatchingEngine(
         cfg, params, policy,
         n_slots=n_slots, max_len=max_len,
         kv_quant=not args.no_kv_quant,
         plane_cache=not args.no_plane_cache,
         audit_interval=args.audit_interval,
+        autopilot=ap_policy,
     )
     if args.precision:
         engine.set_precision(args.precision)
@@ -944,6 +1288,21 @@ def main():
     )
     for step_i, prec in stats["precision_switches"]:
         print(f"[serve] precision switch at decode step {step_i}: -> {prec}")
+    if "autopilot" in stats:
+        apst = stats["autopilot"]
+        print(
+            f"[serve] autopilot: final tier {tuple(apst['final_tier'])}, "
+            f"{len(apst['switches'])} switches, {apst['shed']} shed, "
+            f"p99 queue wait {apst['p99_queue_steps']:.1f} steps, "
+            f"tier tokens {apst['tier_tokens']}"
+        )
+        for sw_step, sw_tier, sw_reason in apst["switches"]:
+            print(f"[serve]   step {sw_step}: -> {tuple(sw_tier)} ({sw_reason})")
+        if apst["shadow_probes"]:
+            print(
+                f"[serve]   shadow probes {apst['shadow_probes']}, "
+                f"KL ewma {apst['shadow_kl_ewma']:.5f}"
+            )
     if "integrity" in stats:
         ig = stats["integrity"]
         print(

@@ -225,6 +225,7 @@ def make_cb_decode_step(
     policy=None,
     precision: Optional[Tuple[int, int]] = None,
     collector=None,
+    with_logits: bool = False,
 ):
     """One continuous-batching engine iteration over the whole slot array.
 
@@ -239,7 +240,12 @@ def make_cb_decode_step(
     against the same weight tree (plane-prefix truncation); the engine
     compiles one such step per precision tier and swaps mid-serving.
     ``collector``: collect ABFT alarms; the step gains a third output,
-    the alarm vector (see :func:`_collected`)."""
+    the alarm vector (see :func:`_collected`).
+    ``with_logits``: additionally return the step's raw (pre-mask)
+    per-slot logits as the last output — the autopilot's shadow quality
+    probe scores per-tier logit KL from them (slice ``[:vocab_size]``
+    before any softmax: positions past it are padding, and the masked
+    logits' ``-inf`` would poison a KL)."""
     from repro.launch import sampling
 
     decode = make_decode_step(cfg, policy, precision=precision)
@@ -248,10 +254,14 @@ def make_cb_decode_step(
         (logits, cache), alarms = _collected(
             collector, lambda: decode(params, cache, {"tokens": tokens})
         )
+        raw_logits = logits
         logits = sampling.mask_vocab(logits, cfg.vocab_size)
         next_tok = sampling.sample_tokens(logits, temps, key)[:, None]
-        if collector is None:
-            return next_tok, cache
-        return next_tok, cache, alarms
+        out = (next_tok, cache)
+        if collector is not None:
+            out = out + (alarms,)
+        if with_logits:
+            out = out + (raw_logits,)
+        return out
 
     return cb_step

@@ -187,6 +187,48 @@ def insert_slot(cache, seq_cache, slot):
     return out
 
 
+def select_slots(cache_a, cache_b, take_b):
+    """Per-slot merge of two same-layout caches: slot ``i`` of the result
+    comes from ``cache_b`` where ``take_b[i]`` else ``cache_a``.
+
+    ``take_b`` is a ``(n_slots,)`` bool vector. This is the mixed-tier
+    decode combinator (DESIGN.md §10): the engine runs one full-array
+    decode pass per active precision tier against the same pre-step
+    cache, then keeps each slot's post-step cache from the pass matching
+    that slot's admission tier. Slot lanes are independent inside a step
+    (per-row activation quantization, per-slot KV lengths), so the merge
+    is exactly a lane select — leafwise ``jnp.where`` with the mask
+    broadcast along the slot axis (axis 0 for ``step``/``layers``/
+    ``tail`` leaves, axis 1 for ``periods`` leaves).
+    """
+    import jax
+
+    take_b = jnp.asarray(take_b, jnp.bool_)
+
+    def sel(axis):
+        def one(a, b):
+            mask = take_b.reshape(
+                tuple(a.shape[i] if i == axis else 1 for i in range(a.ndim))
+            )
+            return jnp.where(mask, b, a)
+
+        return one
+
+    out = {"step": sel(0)(cache_a["step"], cache_b["step"])}
+    if "layers" in cache_a:
+        out["layers"] = jax.tree_util.tree_map(
+            sel(0), cache_a["layers"], cache_b["layers"]
+        )
+        return out
+    out["periods"] = jax.tree_util.tree_map(
+        sel(1), cache_a["periods"], cache_b["periods"]
+    )
+    out["tail"] = jax.tree_util.tree_map(
+        sel(0), cache_a["tail"], cache_b["tail"]
+    )
+    return out
+
+
 def cache_slot_checksums(cache) -> jnp.ndarray:
     """Per-slot uint32 bit-pattern fold of the whole decode cache.
 

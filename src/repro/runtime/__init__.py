@@ -1,10 +1,18 @@
-"""Serving/training runtime: request scheduling, fault tolerance.
+"""Serving/training runtime: request scheduling, recovery, autopilot.
 
-Fault side: retries, stragglers, elastic re-meshing. Serving side: the
-slot-based request scheduler behind the continuous-batching engine.
+Recovery side (``recovery.py``): retries, stragglers, elastic
+re-meshing. Serving side: the slot-based request scheduler behind the
+continuous-batching engine (``scheduler.py``), the seeded SEU injector
+(``faults.py``), and the SLA autopilot controller (``autopilot.py``).
 """
 
-from repro.runtime.fault import (
+from repro.runtime.autopilot import (
+    Autopilot,
+    AutopilotDecision,
+    AutopilotPolicy,
+    OverloadError,
+)
+from repro.runtime.recovery import (
     ElasticMesh,
     HealthMonitor,
     StragglerDetector,
@@ -13,8 +21,12 @@ from repro.runtime.fault import (
 from repro.runtime.scheduler import Request, SchedulerStats, SlotScheduler
 
 __all__ = [
+    "Autopilot",
+    "AutopilotDecision",
+    "AutopilotPolicy",
     "ElasticMesh",
     "HealthMonitor",
+    "OverloadError",
     "Request",
     "SchedulerStats",
     "SlotScheduler",

@@ -1,0 +1,132 @@
+"""Train-time recovery runtime: step retry, straggler detection, elastic
+re-meshing.
+
+(Renamed from ``runtime/fault.py`` to stop colliding with
+``runtime/faults.py``, the serving-side SEU injector — this module is
+about *recovering* from infrastructure failures, that one is about
+*injecting* silicon ones. ``runtime/fault.py`` remains as a
+deprecation shim.)
+
+On a real multi-pod deployment the failure modes are preempted hosts,
+flaky ICI links, and slow chips. The policies here are the
+single-controller versions of the standard mitigations:
+
+* ``retry_step``        — transient-failure retry with exponential backoff;
+                          after ``max_retries`` the exception escalates to
+                          the driver, which restores from the last
+                          checkpoint (see launch/train.py).
+* ``StragglerDetector`` — robust step-time outlier detection
+                          (median + k*MAD); at scale the driver uses this
+                          to evict/replace slow hosts. Detection is also
+                          the trigger for re-balancing microbatches.
+* ``ElasticMesh``       — rebuild the mesh for a changed healthy-device
+                          count and re-shard restored state onto it; data
+                          order is preserved because the pipeline is a
+                          pure function of (seed, step, rank).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def retry_step(
+    fn: Callable,
+    *args,
+    max_retries: int = 3,
+    backoff_s: float = 0.5,
+    retriable: tuple = (RuntimeError, jax.errors.JaxRuntimeError),
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+    **kwargs,
+):
+    """Run ``fn``; retry transient runtime failures with backoff."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except retriable as e:  # noqa: PERF203
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Flags steps slower than median + k*MAD over a sliding window."""
+
+    window: int = 50
+    k: float = 6.0
+    min_samples: int = 10
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record a step time; returns True when it is a straggler."""
+        self._step += 1
+        hist = self._times[-self.window :]
+        is_outlier = False
+        if len(hist) >= self.min_samples:
+            med = float(np.median(hist))
+            mad = float(np.median(np.abs(np.asarray(hist) - med))) or 1e-6
+            if seconds > med + self.k * 1.4826 * mad:
+                is_outlier = True
+                self.flagged.append((self._step, seconds))
+        self._times.append(seconds)
+        return is_outlier
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+class ElasticMesh:
+    """Rebuilds (data, model) meshes when the healthy-device count changes.
+
+    Keeps the model axis fixed (TP degree is a property of the model
+    sharding) and flexes the data axis — the standard elastic policy.
+    """
+
+    def __init__(self, model_axis: int = 1):
+        self.model_axis = model_axis
+
+    def mesh_for(self, n_devices: int):
+        data = max(n_devices // self.model_axis, 1)
+        return make_mesh((data, self.model_axis), ("data", "model"))
+
+    def reshard(self, state, new_shardings):
+        """Move restored (host) state onto the new mesh's shardings."""
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(np.asarray(x), s), state, new_shardings
+        )
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Heartbeat bookkeeping for worker liveness (single-controller stub:
+    at scale this is fed by per-host heartbeats over the control plane)."""
+
+    timeout_s: float = 60.0
+
+    def __post_init__(self):
+        self._last: dict[str, float] = {}
+
+    def beat(self, worker: str, t: Optional[float] = None):
+        self._last[worker] = time.time() if t is None else t
+
+    def dead_workers(self, now: Optional[float] = None) -> Sequence[str]:
+        now = time.time() if now is None else now
+        return [w for w, t in self._last.items() if now - t > self.timeout_s]

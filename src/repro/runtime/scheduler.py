@@ -88,6 +88,12 @@ class SchedulerStats:
     failed: int = 0  # deadline-expired / fault-exhausted / unservable
     requeued: int = 0  # fault retries returned to the queue
     quarantined_slots: int = 0
+    shed: int = 0  # overload-evicted from the queue tail (autopilot)
+    # controller inputs, recorded via observe_step(): one entry per
+    # observed engine iteration, aligned by position
+    depth_history: tuple = ()  # queue depth at each observed step
+    latency_history: tuple = ()  # per-step wall latency (s), NaN if unknown
+    queue_waits: tuple = ()  # per-admission steps waited past arrival
 
 
 class SlotScheduler:
@@ -122,6 +128,10 @@ class SlotScheduler:
         self._queue_steps = 0
         self._failed = 0
         self._requeued = 0
+        self._shed = 0
+        self._depth_history: list[int] = []
+        self._latency_history: list[float] = []
+        self._queue_waits: list[int] = []
 
     # -- queue side ---------------------------------------------------------
 
@@ -147,7 +157,9 @@ class SlotScheduler:
         caller must follow each yield with :meth:`start`."""
         while self._free and self._pending and self._pending[0].arrival_step <= step:
             req = self._pending.popleft()
-            self._queue_steps += step - req.arrival_step
+            waited = step - req.arrival_step
+            self._queue_steps += waited
+            self._queue_waits.append(waited)
             yield self._free[-1], req
 
     def start(self, slot: int, request: Request, first_token: int) -> bool:
@@ -260,6 +272,37 @@ class SlotScheduler:
         self._pending = deque(r for r in self._pending if r.rid != rid)
         self.fail(rid, reason)
 
+    # -- controller signals (DESIGN.md §10) ---------------------------------
+
+    def queue_depth(self, step: int) -> int:
+        """Number of pending requests that have *arrived* by ``step`` —
+        the autopilot's instantaneous backlog signal. Pre-submitted
+        requests with a future ``arrival_step`` do not count: they are
+        scripted traffic, not demand the engine is failing to serve."""
+        return sum(1 for r in self._pending if r.arrival_step <= step)
+
+    def waiting(self, step: int) -> list[Request]:
+        """Arrived-but-unadmitted requests in queue order at ``step``
+        (the shedding ladder's candidate pool)."""
+        return [r for r in self._pending if r.arrival_step <= step]
+
+    def observe_step(self, step: int, latency_s: float = float("nan")) -> None:
+        """Record one engine iteration's controller inputs: queue depth
+        at ``step`` and the step's wall latency (NaN when the caller did
+        not time it). Histories are exported via :meth:`stats`."""
+        self._depth_history.append(self.queue_depth(step))
+        self._latency_history.append(float(latency_s))
+
+    def shed(self, rid: int, reason: str) -> None:
+        """Overload-evict a pending request (autopilot shedding ladder):
+        it fails with ``reason`` and counts in ``stats().shed`` so load
+        shedding is distinguishable from deadline/fault failures."""
+        if not any(r.rid == rid for r in self._pending):
+            raise KeyError(f"rid {rid} is not pending; only queued requests shed")
+        self._pending = deque(r for r in self._pending if r.rid != rid)
+        self.fail(rid, reason)
+        self._shed += 1
+
     def quarantine(self, slot: int) -> None:
         """Retire a repeatedly-faulting slot: it leaves the free pool and
         is never admitted into again (an occupying request must be
@@ -301,4 +344,8 @@ class SlotScheduler:
             failed=self._failed,
             requeued=self._requeued,
             quarantined_slots=len(self._quarantined),
+            shed=self._shed,
+            depth_history=tuple(self._depth_history),
+            latency_history=tuple(self._latency_history),
+            queue_waits=tuple(self._queue_waits),
         )

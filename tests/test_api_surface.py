@@ -68,6 +68,11 @@ PLAN_SURFACE = {
     "registry: 'Optional[PlanRegistry]' = None) -> 'MatmulPlan'",
     "plan_cacheable": "(policy: 'PrecisionPolicy', prec: 'LayerPrecision') "
     "-> 'bool'",
+    # PR 7: the no-requantization audit moved from an inline bench check
+    # into the plan module so the engine's dial check and the autopilot
+    # bench section gate on the same invariant
+    "truncation_audit": "(registry: 'Optional[PlanRegistry]' = None) "
+    "-> 'dict'",
 }
 
 OPS_SURFACE = {

@@ -1,0 +1,595 @@
+"""SLA autopilot: control law, scheduler signals, mixed-tier decode.
+
+Three layers, mirroring DESIGN.md §10:
+
+* the pure-Python control law (`repro.runtime.autopilot`): hysteresis
+  patience, cooldown refractory windows, the scrub-storm cap, the
+  KL-budget descent guard, and the deadline-aware shedding ladder — all
+  unit-tested without a device;
+* the `SlotScheduler` controller signals (`queue_depth`, `observe_step`
+  histories, `shed`), including their interaction with PR 6's
+  requeue/quarantine containment;
+* the engine integration: the per-request tier contract — mixed-tier
+  decode steps must emit tokens bit-identical to a single-tier run of
+  each slot's admission tier — the SLA-vs-static overload behavior the
+  CI bench gate also enforces, the `precision_schedule`-vs-autopilot
+  race (autopilot wins, entry consumed, recorded), and the deprecated
+  `degrade_after`/`degrade_to` alias path.
+"""
+
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core import plan as plan_mod
+from repro.core.precision import LayerPrecision, PrecisionPolicy
+from repro.models import init_params
+from repro.runtime.autopilot import (
+    Autopilot,
+    AutopilotPolicy,
+    OverloadError,
+)
+from repro.runtime.scheduler import AdmissionError, Request, SlotScheduler
+
+ARCH = "granite-3-8b"
+
+
+def _req(rid, arrival=0, gen=5, deadline=None, plen=4):
+    rng = np.random.default_rng(rid)
+    return Request(
+        rid=rid,
+        tokens=rng.integers(1, 100, (plen,)),
+        max_new_tokens=gen,
+        arrival_step=arrival,
+        deadline_step=deadline,
+    )
+
+
+# --------------------------------------------------------------------------
+# Control law (pure Python, no device)
+# --------------------------------------------------------------------------
+
+
+def _pol(**kw):
+    kw.setdefault("sla_queue_steps", 6)
+    kw.setdefault("degrade_patience", 2)
+    kw.setdefault("upgrade_patience", 3)
+    kw.setdefault("cooldown_steps", 4)
+    return AutopilotPolicy(**kw)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        AutopilotPolicy(tiers=())
+    with pytest.raises(ValueError, match="widest-first"):
+        AutopilotPolicy(tiers=((4, 4), (8, 8)))
+    with pytest.raises(ValueError, match="1..16-bit"):
+        AutopilotPolicy(tiers=((8, 8), (0, 4)))
+    with pytest.raises(ValueError, match="shadow_frac"):
+        AutopilotPolicy(shadow_frac=1.5)
+    with pytest.raises(ValueError, match="patience"):
+        AutopilotPolicy(degrade_patience=0)
+
+
+def test_overload_error_is_admission_error():
+    """Frontends with PR 6 typed-rejection handling catch shedding free."""
+    assert issubclass(OverloadError, AdmissionError)
+
+
+def test_descent_needs_sustained_pressure():
+    ap = Autopilot(_pol(), n_slots=2)
+    # one pressured step (depth >= n_slots) is noise, not a signal
+    d = ap.observe(0, queue_depth=5)
+    assert not d.switched and ap.tier == (8, 8)
+    d = ap.observe(1, queue_depth=5)
+    assert d.switched and ap.tier == (6, 6)
+    assert "queue depth" in d.reason
+
+
+def test_pressure_run_resets_on_quiet_step():
+    ap = Autopilot(_pol(degrade_patience=3), n_slots=2)
+    ap.observe(0, queue_depth=5)
+    ap.observe(1, queue_depth=5)
+    ap.observe(2, queue_depth=1)  # neither pressure nor headroom: reset
+    ap.observe(3, queue_depth=5)
+    d = ap.observe(4, queue_depth=5)
+    assert not d.switched  # the run restarted; 2 of 3 pressured steps
+    assert ap.observe(5, queue_depth=5).switched
+
+
+def test_cooldown_blocks_back_to_back_switches():
+    ap = Autopilot(_pol(cooldown_steps=5), n_slots=2)
+    ap.observe(0, queue_depth=5)
+    assert ap.observe(1, queue_depth=5).switched  # -> (6,6) at step 1
+    for step in range(2, 6):  # still inside the refractory window
+        assert not ap.observe(step, queue_depth=5).switched
+    assert ap.observe(6, queue_depth=5).switched  # window over -> (4,4)
+    assert ap.tier == (4, 4)
+
+
+def test_upgrade_is_stepwise_and_slower():
+    ap = Autopilot(_pol(cooldown_steps=0), n_slots=2)
+    ap.observe(0, queue_depth=5)
+    ap.observe(1, queue_depth=5)
+    ap.observe(2, queue_depth=5)
+    ap.observe(3, queue_depth=5)
+    assert ap.tier == (4, 4)
+    # headroom (depth <= depth_low == 0) must persist upgrade_patience
+    # steps, and recovery climbs ONE rung, never jumps to the top
+    assert not ap.observe(4, queue_depth=0).switched
+    assert not ap.observe(5, queue_depth=0).switched
+    d = ap.observe(6, queue_depth=0)
+    assert d.switched and ap.tier == (6, 6)
+    assert "headroom" in d.reason
+
+
+def test_alternating_signals_never_flap():
+    ap = Autopilot(_pol(), n_slots=2)
+    for step in range(40):  # bursty depth: pressure never sustained
+        ap.observe(step, queue_depth=5 if step % 2 == 0 else 0)
+    assert ap.switches == [] and ap.tier == (8, 8)
+
+
+def test_shed_only_past_lowest_tier():
+    ap = Autopilot(_pol(cooldown_steps=0), n_slots=2)
+    seen_shed_before_bottom = False
+    for step in range(10):
+        d = ap.observe(step, queue_depth=5)
+        if d.shed_active and ap.tier != (4, 4):
+            seen_shed_before_bottom = True
+        if d.shed_active:
+            break
+    assert not seen_shed_before_bottom
+    assert ap.shedding and ap.tier == (4, 4)
+    assert "lowest tier" in d.reason
+
+
+def test_recovery_lifts_shedding_before_climbing():
+    ap = Autopilot(_pol(cooldown_steps=0, upgrade_patience=2), n_slots=2)
+    for step in range(8):
+        ap.observe(step, queue_depth=5)
+    assert ap.shedding
+    ap.observe(8, queue_depth=0)
+    d = ap.observe(9, queue_depth=0)
+    assert not ap.shedding and not d.switched  # lifted, tier unchanged
+    assert "shedding lifted" in d.reason and ap.tier == (4, 4)
+    ap.observe(10, queue_depth=0)
+    d = ap.observe(11, queue_depth=0)
+    assert d.switched and ap.tier == (6, 6)  # only now the climb starts
+
+
+def test_scrub_storm_degrades_immediately_and_caps_recovery():
+    ap = Autopilot(
+        _pol(scrub_degrade_after=3, scrub_degrade_to=4, cooldown_steps=0,
+             upgrade_patience=1),
+        n_slots=2,
+    )
+    d = ap.observe(0, queue_depth=0, scrubs=3)  # no patience needed
+    assert d.switched and ap.tier == (4, 4) and "scrub storm" in d.reason
+    # sustained headroom cannot climb above the scrub cap: the storm is
+    # cumulative, so the one-way PR 6 semantics hold
+    for step in range(1, 6):
+        assert not ap.observe(step, queue_depth=0, scrubs=3).switched
+    assert ap.tier == (4, 4)
+
+
+def test_kl_budget_blocks_descent_and_escalates_to_shedding():
+    ap = Autopilot(_pol(kl_budget=0.1, cooldown_steps=0), n_slots=2)
+    ap.observe(0, queue_depth=5)
+    ap.observe(1, queue_depth=5)
+    assert ap.tier == (6, 6)
+    # quality budget already spent: pressure may NOT buy another descent
+    ap.observe(2, queue_depth=5, shadow_kl=0.5)
+    d = ap.observe(3, queue_depth=5, shadow_kl=0.5)
+    assert not d.switched and ap.tier == (6, 6)
+    assert d.shed_active and "quality budget" in d.reason
+
+
+def test_latency_ewma_skips_tokenless_steps():
+    ap = Autopilot(_pol(sla_ms=10.0), n_slots=2)
+    ap.observe(0, queue_depth=0, step_latency_s=5.0, tokens_emitted=0)
+    assert ap.latency_ewma_ms is None  # bookkeeping step: not attributable
+    ap.observe(1, queue_depth=0, step_latency_s=0.004, tokens_emitted=2)
+    assert ap.latency_ewma_ms == pytest.approx(2.0)
+
+
+def test_latency_pressure_descends_without_queue():
+    ap = Autopilot(_pol(sla_ms=1.0, depth_high=10_000), n_slots=2)
+    ap.observe(0, queue_depth=0, step_latency_s=0.01, tokens_emitted=1)
+    d = ap.observe(1, queue_depth=0, step_latency_s=0.01, tokens_emitted=1)
+    assert d.switched and "latency over SLA" in d.reason
+
+
+def test_force_snaps_to_ladder_rung():
+    ap = Autopilot(_pol(), n_slots=2)
+    d = ap.force(0, (6, 6))
+    assert d.switched and ap.tier == (6, 6)
+    d = ap.force(1, (5, 5))  # no exact rung: widest rung no wider than it
+    assert d.switched and ap.tier == (4, 4)
+    assert not ap.force(2, (4, 4)).switched  # already there: no-op
+
+
+def test_shed_victims_evicts_hopeless_tail_only():
+    pol = _pol(sla_queue_steps=6)
+    ap = Autopilot(pol, n_slots=2)
+    waiting = [_req(i, arrival=0) for i in range(6)]
+    victims = ap.shed_victims(waiting, step=2, service_estimate=4)
+    # already waited 2; predicted = 2 + (pos//2 + 1)*4: positions 0,1
+    # predict 6 (keep), positions 2,3 predict 10 (shed) — and survivors
+    # keep their queue position, so everyone behind a victim moves up
+    assert victims == [2, 3, 4, 5][: len(victims)] and 0 not in victims
+    assert 1 not in victims
+
+
+def test_shed_victims_respects_tighter_deadline():
+    ap = Autopilot(_pol(sla_queue_steps=100), n_slots=1)
+    soon = _req(0, arrival=0, deadline=4)
+    late = _req(1, arrival=0, deadline=50)
+    # predicted wait 1*3 = 3 > deadline budget (4 - 2 - 1 = 1) for rid 0
+    victims = ap.shed_victims([soon, late], step=2, service_estimate=3)
+    assert victims == [0]
+
+
+def test_shed_victims_rejects_degenerate_estimate():
+    ap = Autopilot(_pol(), n_slots=2)
+    with pytest.raises(ValueError, match="service_estimate"):
+        ap.shed_victims([], step=0, service_estimate=0)
+
+
+# --------------------------------------------------------------------------
+# Scheduler controller signals (satellite 1)
+# --------------------------------------------------------------------------
+
+
+def test_queue_depth_counts_only_arrived_requests():
+    sched = SlotScheduler(n_slots=2)
+    sched.submit(_req(0, arrival=0))
+    sched.submit(_req(1, arrival=0))
+    sched.submit(_req(2, arrival=9))  # scripted future traffic: not demand
+    assert sched.queue_depth(0) == 2
+    assert [r.rid for r in sched.waiting(0)] == [0, 1]
+    assert sched.queue_depth(9) == 3
+
+
+def test_observe_step_records_depth_and_latency_histories():
+    sched = SlotScheduler(n_slots=2)
+    sched.submit(_req(0, arrival=1))
+    sched.observe_step(0, 0.25)
+    sched.observe_step(1)  # untimed step: NaN placeholder keeps alignment
+    s = sched.stats()
+    assert s.depth_history == (0, 1)
+    assert s.latency_history[0] == 0.25 and np.isnan(s.latency_history[1])
+
+
+def test_queue_waits_recorded_per_admission():
+    sched = SlotScheduler(n_slots=1)
+    sched.submit(_req(0, arrival=0))
+    sched.submit(_req(1, arrival=0))
+    for slot, req in sched.admissible(3):
+        sched.start(slot, req, 7)
+    assert sched.stats().queue_waits == (3,)  # rid 1 still queued
+
+
+def test_shed_is_typed_counted_and_pending_only():
+    sched = SlotScheduler(n_slots=1)
+    sched.submit(_req(0, arrival=0))
+    sched.submit(_req(1, arrival=0))
+    for slot, req in sched.admissible(0):
+        sched.start(slot, req, 7)
+    sched.shed(1, "overload: shed from queue tail at step 0")
+    s = sched.stats()
+    assert s.shed == 1 and s.failed == 1
+    assert sched.failed[1].startswith("overload:")
+    assert sched.pending_rids == []
+    with pytest.raises(KeyError):
+        sched.shed(0, "active requests are never shed")  # rid 0 is in-flight
+
+
+def test_signals_track_requeue_and_quarantine():
+    """The containment paths feed the same backlog signal: a requeued
+    request re-enters the depth count, and a shed can evict it."""
+    sched = SlotScheduler(n_slots=2)
+    for i in range(3):
+        sched.submit(_req(i, arrival=0))
+    for slot, req in sched.admissible(0):
+        sched.start(slot, req, 7)
+    assert sched.queue_depth(0) == 1  # rid 2 waiting
+    sched.requeue(0, arrival_step=2)  # rid 0 faulted: back to the queue
+    sched.quarantine(0)
+    assert sched.queue_depth(1) == 1  # rid 0's backoff hasn't passed
+    assert sched.queue_depth(2) == 2  # now it is demand again
+    assert [r.rid for r in sched.waiting(2)] == [2, 0]
+    sched.shed(0, "overload: shed retried request")
+    assert sched.stats().shed == 1 and sched.queue_depth(2) == 1
+    # quarantined slot never returns to the free pool for admissions
+    assert all(slot != 0 for slot, _ in sched.admissible(2))
+
+
+# --------------------------------------------------------------------------
+# Satellite surfaces: storage_width + truncation_audit
+# --------------------------------------------------------------------------
+
+
+def test_storage_width_is_widest_configured_weight():
+    assert PrecisionPolicy.uniform(8, 8).storage_width() == 8
+    assert PrecisionPolicy.off().storage_width() is None
+    mixed = PrecisionPolicy(
+        default=LayerPrecision(4, 4),
+        overrides=(("lm_head", LayerPrecision(8, 8)),),
+    )
+    assert mixed.storage_width() == 8
+
+
+def test_truncation_audit_vacuous_registry_fails():
+    """An audit over a registry with no dialed plans must NOT report ok —
+    'nothing requantized' because nothing ran is the silent-pass the
+    bench verdict guards against."""
+    audit = plan_mod.truncation_audit(plan_mod.PlanRegistry())
+    assert audit["dialed_plans"] == 0 and audit["truncated_ok"] is False
+
+
+# --------------------------------------------------------------------------
+# Engine integration: tier contracts, SLA, races, aliases
+# --------------------------------------------------------------------------
+
+N_SLOTS, PLEN, GEN_E, N_REQ, SLA = 2, 4, 5, 8, 6
+
+_ENGINE_CACHE: dict = {}
+
+
+def _engine_setup():
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    if "base" not in _ENGINE_CACHE:
+        cfg = get_reduced(ARCH)
+        params = init_params(cfg, __import__("jax").random.PRNGKey(0))
+        policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+        _ENGINE_CACHE["base"] = (cfg, params, policy)
+    return _ENGINE_CACHE["base"]
+
+
+def _burst(cfg, n_req=N_REQ, gen=GEN_E):
+    rng = np.random.default_rng(0)
+    return [
+        Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (PLEN,)),
+                max_new_tokens=gen, arrival_step=i // N_SLOTS)
+        for i in range(n_req)
+    ]
+
+
+def _overload_run():
+    """One shared overload ramp: the autopilot run plus a static run per
+    tier the autopilot admitted at (engine builds and jit compiles are
+    the expensive part, so every engine-level test reads this cache)."""
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    if "overload" in _ENGINE_CACHE:
+        return _ENGINE_CACHE["overload"]
+    cfg, params, policy = _engine_setup()
+    ap_policy = AutopilotPolicy(
+        sla_queue_steps=SLA, degrade_patience=2, upgrade_patience=4,
+        cooldown_steps=2, shadow_frac=0.5,
+    )
+    kw = dict(n_slots=N_SLOTS, max_len=PLEN + GEN_E)
+    ap_engine = ContinuousBatchingEngine(
+        cfg, params, policy, autopilot=ap_policy, **kw
+    )
+    ap_res, ap_stats = ap_engine.run(_burst(cfg))
+
+    static = ContinuousBatchingEngine(cfg, params, policy, **kw)
+    static_runs = {}
+    tiers_used = set(ap_stats["autopilot"]["request_tiers"].values())
+    for tier_name in sorted(tiers_used):
+        w = int(tier_name.split("a")[0][1:])
+        static.set_precision(None if w == 8 else w)
+        static_runs[tier_name], st_stats = static.run(_burst(cfg))
+        static_runs.setdefault("_stats_" + tier_name, st_stats)
+    _ENGINE_CACHE["overload"] = (ap_res, ap_stats, static_runs)
+    return _ENGINE_CACHE["overload"]
+
+
+def test_mixed_tier_decode_bit_identical_per_slot():
+    """THE acceptance criterion: every request finished by the autopilot
+    run must match, bit for bit, a single-tier run of its admission
+    tier — never-degraded traffic is indistinguishable from a static
+    8-bit engine, degraded traffic from a statically-dialed one."""
+    ap_res, ap_stats, static_runs = _overload_run()
+    apst = ap_stats["autopilot"]
+    assert ap_res, "overload run finished no requests"
+    tiers_seen = set()
+    for rid, toks in ap_res.items():
+        tier_name = apst["request_tiers"][rid]
+        tiers_seen.add(tier_name)
+        np.testing.assert_array_equal(
+            toks, static_runs[tier_name][rid],
+            err_msg=f"rid {rid} (tier {tier_name}) diverged from the "
+            "single-tier run of its admission tier",
+        )
+    # the run must actually have exercised mixed tiers, or the test is
+    # asserting nothing about the merge path
+    assert len(tiers_seen) >= 2
+    assert len(apst["tier_tokens"]) >= 2
+
+
+def test_autopilot_holds_sla_where_static_exceeds_it():
+    ap_res, ap_stats, static_runs = _overload_run()
+    apst = ap_stats["autopilot"]
+    st_stats = static_runs["_stats_w8a8"]
+    assert st_stats["p99_queue_steps"] > SLA  # the ramp really overloads
+    assert apst["p99_queue_steps"] <= SLA
+    # ladder descended under pressure, and shedding happened only at the
+    # lowest tier (the reason string embeds the tier at shed time)
+    assert any("degrade" in why for _, _, why in apst["switches"])
+    lowest_w = min(w for _, w in apst["tiers"])
+    shed_reasons = [
+        r for r in ap_stats["failed"].values() if r.startswith("overload:")
+    ]
+    assert len(shed_reasons) == apst["shed"] and apst["shed"] > 0
+    assert all(f"tier w{lowest_w}" in r for r in shed_reasons)
+    # shadow probes ran and scored a finite KL
+    assert apst["shadow_probes"] > 0
+    assert apst["shadow_kl_ewma"] is not None
+
+
+def test_schedule_entry_racing_autopilot_switch_is_consumed():
+    """Deterministic race: with patience 1 / no cooldown the controller
+    switches on the first pressured step; a schedule entry due that same
+    decode step must lose, be consumed (never re-fire), and be recorded
+    in schedule_conflicts."""
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    cfg, params, policy = _engine_setup()
+    engine = ContinuousBatchingEngine(
+        cfg, params, policy,
+        autopilot=AutopilotPolicy(
+            sla_queue_steps=SLA, degrade_patience=1, upgrade_patience=8,
+            cooldown_steps=0,
+        ),
+        n_slots=N_SLOTS, max_len=PLEN + GEN_E,
+    )
+    _, dry = engine.run(_burst(cfg))
+    first_switch = dry["autopilot"]["switches"][0][0]  # controller step
+    # decode_steps and controller step coincide until the first
+    # fast-forward; the burst arrives from step 0 so they are equal here
+    _, stats = engine.run(_burst(cfg), precision_schedule={first_switch: 6})
+    apst = stats["autopilot"]
+    assert len(apst["schedule_conflicts"]) == 1
+    dstep, entry_step, prec = apst["schedule_conflicts"][0]
+    assert entry_step == first_switch and prec == 6
+    # the switch recorded at that step is the controller's, and the
+    # consumed entry never forces a later switch
+    assert not any(
+        "scheduled switch" in why for _, _, why in apst["switches"]
+    )
+    assert all(s == first_switch for s, *_ in apst["schedule_conflicts"])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_schedule_race_property_deterministic_over_traces(seed):
+    """Property over seeded arrival traces + schedule placements: the
+    run is reproducible step for step (the control law is depth-driven,
+    so wall clock never leaks into decisions), a scheduled entry fires
+    at most once (conflict XOR forced sync), and on conflict the
+    autopilot's switch is the one that stands."""
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    cfg, params, policy = _engine_setup()
+    if "race_engine" not in _ENGINE_CACHE:
+        _ENGINE_CACHE["race_engine"] = ContinuousBatchingEngine(
+            cfg, params, policy,
+            autopilot=AutopilotPolicy(
+                sla_queue_steps=SLA, degrade_patience=1, upgrade_patience=6,
+                cooldown_steps=1,
+            ),
+            n_slots=N_SLOTS, max_len=PLEN + GEN_E,
+        )
+    engine = _ENGINE_CACHE["race_engine"]
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.integers(0, 5, size=6))
+    reqs = [
+        Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (PLEN,)),
+                max_new_tokens=GEN_E, arrival_step=int(a))
+        for i, a in enumerate(arrivals)
+    ]
+    schedule = {int(rng.integers(0, 10)): 6}
+
+    def run():
+        res, stats = engine.run(list(reqs), precision_schedule=dict(schedule))
+        return res, stats["autopilot"], stats["precision_switches"]
+
+    res_a, ap_a, sw_a = run()
+    res_b, ap_b, sw_b = run()
+    assert ap_a["switches"] == ap_b["switches"]
+    assert ap_a["schedule_conflicts"] == ap_b["schedule_conflicts"]
+    assert sw_a == sw_b
+    for rid in res_a:
+        np.testing.assert_array_equal(res_a[rid], res_b[rid])
+    # an entry fires at most once: it cannot both conflict and force
+    forced = sum(1 for _, _, why in ap_a["switches"] if "scheduled" in why)
+    assert forced + len(ap_a["schedule_conflicts"]) <= len(schedule)
+    for dstep, _, _ in ap_a["schedule_conflicts"]:
+        # the switch that stands at the conflicted step is the autopilot's
+        assert any(s == dstep for s, _ in sw_a)
+
+
+def test_degrade_alias_constructs_equivalent_policy_and_warns_once():
+    import repro.launch.serve as serve_mod
+    from repro.launch.serve import ContinuousBatchingEngine
+
+    cfg, params, policy = _engine_setup()
+    kw = dict(n_slots=N_SLOTS, max_len=PLEN + GEN_E)
+    serve_mod._DEGRADE_ALIAS_WARNED = False
+    with pytest.warns(DeprecationWarning, match="degrade_after/degrade_to"):
+        eng = ContinuousBatchingEngine(
+            cfg, params, policy, degrade_after=3, degrade_to=4, **kw
+        )
+    # the alias IS an autopilot policy: pure scrub rule, shedding off,
+    # ladder clamped to the storage width exactly as an explicit policy
+    expected = ContinuousBatchingEngine(
+        cfg, params, policy,
+        autopilot=AutopilotPolicy(
+            scrub_degrade_after=3, scrub_degrade_to=4, shed=False
+        ),
+        **kw,
+    )
+    assert eng.autopilot_policy == expected.autopilot_policy
+    assert eng.autopilot_policy.shed is False
+    assert eng._tiers == expected._tiers
+    # one-shot: a second alias construction stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ContinuousBatchingEngine(
+            cfg, params, policy, degrade_after=3, degrade_to=4, **kw
+        )
+    # and mixing the alias with an explicit policy is a hard error
+    with pytest.raises(ValueError, match="not both"):
+        ContinuousBatchingEngine(
+            cfg, params, policy, degrade_after=3,
+            autopilot=AutopilotPolicy(), **kw
+        )
+
+
+def test_alias_without_sla_ignores_queue_pressure():
+    """The alias policy must behave like PR 6's hook: no SLA signals, so
+    depth never degrades — only the scrub counter can."""
+    from repro.launch.serve import _degrade_alias_policy
+
+    ap = Autopilot(_degrade_alias_policy(5, 4), n_slots=2)
+    for step in range(20):
+        assert not ap.observe(step, queue_depth=100).switched
+    assert ap.observe(20, queue_depth=0, scrubs=5).switched
+    assert ap.tier == (4, 4)
+
+
+# --------------------------------------------------------------------------
+# runtime/fault.py -> recovery.py rename (satellite 3)
+# --------------------------------------------------------------------------
+
+
+def test_fault_module_shim_warns_and_reexports():
+    sys.modules.pop("repro.runtime.fault", None)
+    with pytest.warns(DeprecationWarning, match="renamed to repro.runtime.recovery"):
+        shim = importlib.import_module("repro.runtime.fault")
+    recovery = importlib.import_module("repro.runtime.recovery")
+    for name in ("retry_step", "StragglerDetector", "ElasticMesh",
+                 "HealthMonitor"):
+        assert getattr(shim, name) is getattr(recovery, name)
+
+
+def test_runtime_package_exports_recovery_and_autopilot():
+    import repro.runtime as rt
+
+    for name in ("Autopilot", "AutopilotPolicy", "AutopilotDecision",
+                 "OverloadError", "retry_step", "StragglerDetector",
+                 "SlotScheduler"):
+        assert name in rt.__all__ and hasattr(rt, name)

@@ -28,6 +28,8 @@ def _doc(
     integrity_overhead=1.01,
     parity="ok",
     nan_metric=False,
+    ap_p99=3.0,
+    static_p99=9.0,
 ):
     """A minimal but complete healthy report, knobs per failure mode."""
     return {
@@ -56,6 +58,15 @@ def _doc(
                 "parity": {
                     "fault_detection": "ok",
                     "fault_recovery_tokens": "ok",
+                },
+            },
+            "autopilot": {
+                "sla_queue_steps": 6,
+                "p99_queue_steps": {"autopilot": ap_p99, "static_w8": static_p99},
+                "parity": {
+                    "undegraded_tokens_vs_static": "ok",
+                    "degraded_tokens_vs_single_tier": "ok",
+                    "shed_only_at_lowest": "ok",
                 },
             },
         },
@@ -169,3 +180,35 @@ def test_fault_verdicts_hard_fail_via_parity(tmp_path, capsys, check, verdict):
 def test_parity_mismatch_fails(tmp_path, capsys):
     assert _run(tmp_path, _doc(parity="mismatch")) == 1
     assert "PARITY FAIL" in capsys.readouterr().out
+
+
+def test_autopilot_sla_violation_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(ap_p99=7.5)) == 1
+    out = capsys.readouterr().out
+    assert "violates the scripted SLA" in out
+
+
+def test_autopilot_vacuous_ramp_fails(tmp_path, capsys):
+    # static baseline holding the SLA means the ramp proves nothing
+    assert _run(tmp_path, _doc(static_p99=5.0)) == 1
+    out = capsys.readouterr().out
+    assert "vacuous" in out and "re-tune the ramp" in out
+
+
+def test_missing_autopilot_section_fails(tmp_path, capsys):
+    fresh = _doc()
+    del fresh["benches"]["autopilot"]
+    assert _run(tmp_path, fresh) == 1
+    assert "no autopilot section" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("check", [
+    "undegraded_tokens_vs_static",
+    "degraded_tokens_vs_single_tier",
+    "shed_only_at_lowest",
+])
+def test_autopilot_tier_contract_hard_fails_via_parity(tmp_path, capsys, check):
+    fresh = _doc()
+    fresh["benches"]["autopilot"]["parity"][check] = "mismatch"
+    assert _run(tmp_path, fresh) == 1
+    assert f"autopilot.parity.{check}" in capsys.readouterr().out
