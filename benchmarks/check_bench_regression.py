@@ -26,6 +26,16 @@ committed baseline and fails (exit 1) when:
   stay cheap enough to leave on in production. Its parity entries (100%
   injected-fault detection, bit-identical scrub recovery, detect==off
   tokens) hard-fail like every other parity verdict;
+* the ``tp_serving`` section's per-device plane-cache bytes stop
+  shrinking with model parallelism: at model_parallel = P the footprint
+  must stay within ``--tp-shrink-slack`` (default 1.25x) of 1/P of the
+  single-device footprint — the whole point of sharding the weight-plane
+  caches is that each device holds ~its slice. A missing or skipped
+  section fails (the bench runs on 8 virtual CPU devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, which
+  kernel_bench.py sets by default). Its parity entries (sharded tokens
+  vs the single-device oracle) hard-fail like every other parity
+  verdict;
 * the ``autopilot`` section's overload ramp stops holding its SLA: the
   autopilot run's p99 queue steps must be within ``sla_queue_steps``
   while the static 8-bit baseline exceeds it (a ramp the static engine
@@ -258,6 +268,49 @@ def _autopilot_failures(doc: dict) -> list[str]:
     return fails
 
 
+def _tp_serving_failures(doc: dict, slack: float) -> list[str]:
+    """Footprint gate on the tensor-parallel serving sweep. Token parity
+    vs the single-device oracle rides the hard parity gate; this checks
+    the capacity claim: per-device plane-cache bytes at model_parallel=P
+    must be within ``slack`` of base/P (pack-word padding and the few
+    replicated non-TP leaves are the tolerated overhead)."""
+    tp = doc.get("benches", {}).get("tp_serving")
+    if not tp:
+        return [
+            "no tp_serving section in the fresh run — serving_bench "
+            "stopped emitting the tensor-parallel sweep the gate is "
+            "supposed to check"
+        ]
+    if "skipped" in tp:
+        return [
+            f"tp_serving sweep was skipped ({tp['skipped']}) — the bench "
+            "leg must run with XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8"
+        ]
+    per_dev = tp.get("plane_cache_bytes_per_device", {})
+    base = per_dev.get("model1", 0)
+    fails = []
+    for mp in tp.get("model_parallel", []):
+        if mp == 1:
+            continue
+        got = per_dev.get(f"model{mp}", float("inf"))
+        ceiling = base / mp * slack
+        verdict = "ok" if got <= ceiling else "REGRESSED"
+        print(
+            f"[gate] tp_serving: model={mp} plane-cache bytes/device "
+            f"{got} (1/P of base = {base / mp:.0f}, slack {slack:.2f}x) "
+            f"{verdict}"
+        )
+        if got > ceiling:
+            fails.append(
+                f"tp_serving model={mp} plane-cache bytes/device {got} "
+                f"exceeds base/{mp} * {slack:.2f} = {ceiling:.0f} — the "
+                "weight-plane caches stopped sharding down with model "
+                "parallelism"
+            )
+    return fails
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -296,6 +349,12 @@ def main(argv=None) -> int:
         help="max tolerated detect-vs-off decode overhead from the "
         "integrity sweep (ABFT + audits must stay within 15%% to be an "
         "always-on production mode)",
+    )
+    ap.add_argument(
+        "--tp-shrink-slack", type=float, default=1.25,
+        help="max tolerated per-device plane-cache bytes at "
+        "model_parallel=P as a multiple of 1/P of the single-device "
+        "footprint (pack-word padding + replicated non-TP leaves)",
     )
     args = ap.parse_args(argv)
 
@@ -342,6 +401,7 @@ def main(argv=None) -> int:
     failures.extend(_sparsity_failures(fresh, args.sparsity_floor))
     failures.extend(_integrity_failures(fresh, args.integrity_ceiling))
     failures.extend(_autopilot_failures(fresh))
+    failures.extend(_tp_serving_failures(fresh, args.tp_shrink_slack))
 
     parity = _parity_failures(fresh)
     for p in parity:

@@ -22,6 +22,10 @@ import os
 import platform
 import time
 
+# the serving bench's tp_serving sweep (driven from this process) needs 8
+# virtual CPU devices; must be set before jax initializes the backend
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -47,15 +47,28 @@ Reports, into the ``serving`` section of BENCH_kernel.json:
   static 8-bit run exactly). ``check_bench_regression`` hard-fails on
   the SLA and parity verdicts.
 
+* a ``tp_serving`` section (PR 8): continuous-batching decode through the
+  tensor-parallel packed-plane path at model_parallel = 1/2/4 on virtual
+  CPU devices — decode tok/s (smoke signal only on one physical CPU),
+  per-device plane-cache bytes (must shrink ~1/model_parallel, gated by
+  ``check_bench_regression --tp-shrink-slack``), and token parity
+  against the single-device oracle (hard CI gate).
+
 CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]
 [--precision-sweep] [--sparsity-sweep] [--integrity-sweep]
-[--autopilot-sweep]`` (each sweep alone).
+[--autopilot-sweep] [--tp-sweep]`` (each sweep alone).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
+
+# the tp_serving sweep needs 8 virtual CPU devices; no-op when driven
+# from kernel_bench.py (which sets this before jax initializes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -487,6 +500,98 @@ def autopilot_sweep(cfg, params, smoke: bool = False) -> dict:
     }
 
 
+def tp_serving_sweep(cfg, params, smoke: bool = False) -> dict:
+    """Tensor-parallel packed-plane serving (DESIGN.md §11): decode tok/s
+    and per-device plane-cache bytes at model_parallel = 1/2/4, with the
+    model=1 run as the token-parity oracle.
+
+    Runs on virtual CPU devices in CI (``XLA_FLAGS=--xla_force_host_
+    platform_device_count=8``), so the wall-clock columns are smoke
+    signals only — sharding one physical CPU across 8 virtual devices
+    speeds nothing up. The content the gate consumes is (a) the parity
+    dict (sharded tokens must equal the single-device oracle bit for
+    bit, hard CI fail) and (b) the per-device plane-cache footprint,
+    which must shrink ~1/model_parallel (``check_bench_regression
+    --tp-shrink-slack``).
+
+    The sweep builds its own config/params: the stock reduced config has
+    2 KV heads (indivisible at model=4), so n_kv_heads is bumped to 4 and
+    the SAME modified config serves every model_parallel *including* the
+    oracle — apples to apples.
+    """
+    n_dev = len(jax.devices())
+    meshes = [p for p in (1, 2, 4) if p <= n_dev]
+    if len(meshes) < 3:
+        return {
+            "skipped": (
+                f"needs 4 devices for model_parallel=4, found {n_dev} — "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                "(kernel_bench.py sets it by default when unset)"
+            ),
+        }
+    tcfg = dataclasses.replace(cfg, n_kv_heads=4)
+    tparams = init_params(tcfg, jax.random.PRNGKey(0))
+    policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+    if smoke:
+        lens, gen, n_slots, stagger = [4, 8, 6], 4, 2, 1
+    else:
+        lens, gen, n_slots, stagger = [8, 32, 16, 64], 12, 2, 2
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=i, tokens=rng.integers(0, tcfg.vocab_size, (s,)),
+                    max_new_tokens=gen, arrival_step=i * stagger)
+            for i, s in enumerate(lens)
+        ]
+
+    tok_per_s, plane_bytes, results = {}, {}, {}
+    for mp in meshes:
+        engine = ContinuousBatchingEngine(
+            tcfg, tparams, policy, n_slots=n_slots, max_len=max(lens) + gen,
+            model_parallel=mp,
+        )
+        engine.run(requests())  # warm: compile the sharded prefill + decode
+        res, stats = engine.run(requests())
+        tok_per_s[f"model{mp}"] = round(stats["tok_per_s"], 2)
+        plane_bytes[f"model{mp}"] = engine.plane_cache_bytes_per_device()
+        results[mp] = {rid: np.asarray(t) for rid, t in res.items()}
+
+    parity = {}
+    for mp in meshes[1:]:
+        ok = sorted(results[mp]) == sorted(results[1]) and all(
+            np.array_equal(results[mp][rid], results[1][rid])
+            for rid in results[1]
+        )
+        parity[f"tp{mp}_tokens_vs_single_device"] = "ok" if ok else "mismatch"
+
+    base_bytes = plane_bytes["model1"]
+    return {
+        "workload": {
+            "prompt_lens": lens,
+            "gen": gen,
+            "n_slots": n_slots,
+            "arrival_stagger_steps": stagger,
+            "n_kv_heads": tcfg.n_kv_heads,
+        },
+        "model_parallel": meshes,
+        "tok_per_s": tok_per_s,
+        "plane_cache_bytes_per_device": plane_bytes,
+        "shrink_x": {
+            f"model{mp}": round(base_bytes / plane_bytes[f"model{mp}"], 3)
+            for mp in meshes[1:]
+        },
+        "parity": parity,
+        "note": (
+            "virtual CPU devices: tok/s columns are smoke signals, not "
+            "speedups; the gated content is token parity vs the model=1 "
+            "oracle and the ~1/P per-device plane-cache footprint "
+            "(col-parallel q/k/v/gate/up, row-parallel o/down, "
+            "vocab-parallel lm_head)"
+        ),
+    }
+
+
 def serving_bench(json_path: str | None = None, smoke: bool = False):
     """Returns report rows; writes the ``serving`` JSON section."""
     from kernel_bench import JSON_PATH, _write_bench_section
@@ -534,6 +639,7 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
     sparsity = sparsity_sweep(cfg, params, smoke=smoke)
     integrity = integrity_sweep(cfg, params, smoke=smoke)
     autopilot = autopilot_sweep(cfg, params, smoke=smoke)
+    tp_serving = tp_serving_sweep(cfg, params, smoke=smoke)
 
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
@@ -594,6 +700,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         path, "autopilot",
         {"bench": "autopilot", "arch": cfg.name, "smoke": smoke, **autopilot},
     )
+    _write_bench_section(
+        path, "tp_serving",
+        {"bench": "tp_serving", "arch": cfg.name, "smoke": smoke, **tp_serving},
+    )
     rows = [
         ("serving/cb_int8_tok_s", payload["tok_per_s"]["cb_int8_kv"],
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
@@ -611,6 +721,13 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
          f"_sla_{autopilot['parity']['autopilot_sla']}"
          f"_shed_{autopilot['shed']}"),
     ]
+    if "skipped" in tp_serving:
+        rows.append(("serving/tp4_plane_bytes_shrink_x", 0.0, "skipped"))
+    else:
+        rows.append((
+            "serving/tp4_plane_bytes_shrink_x", tp_serving["shrink_x"]["model4"],
+            f"parity_{tp_serving['parity']['tp4_tokens_vs_single_device']}",
+        ))
     return rows
 
 
@@ -626,9 +743,12 @@ if __name__ == "__main__":
                     help="run only the ABFT/fault-injection sweep and print it")
     ap.add_argument("--autopilot-sweep", action="store_true",
                     help="run only the SLA-autopilot overload ramp and print it")
+    ap.add_argument("--tp-sweep", action="store_true",
+                    help="run only the tensor-parallel serving sweep and "
+                    "print it (needs 4+ devices; see XLA_FLAGS note)")
     args = ap.parse_args()
     if (args.precision_sweep or args.sparsity_sweep or args.integrity_sweep
-            or args.autopilot_sweep):
+            or args.autopilot_sweep or args.tp_sweep):
         import json as _json
 
         cfg = get_reduced(ARCH)
@@ -636,7 +756,8 @@ if __name__ == "__main__":
         fn = (precision_sweep if args.precision_sweep
               else sparsity_sweep if args.sparsity_sweep
               else integrity_sweep if args.integrity_sweep
-              else autopilot_sweep)
+              else autopilot_sweep if args.autopilot_sweep
+              else tp_serving_sweep)
         print(_json.dumps(fn(cfg, params, smoke=args.smoke), indent=2))
     else:
         for name, val, derived in serving_bench(args.json, smoke=args.smoke):

@@ -21,6 +21,14 @@ Bit-planes additionally support a *packed* storage format
 32 plane values per int32 word, ternary Booth {-1,0,+1} planes pack as a
 sign/magnitude word pair — 32× / 16× less HBM traffic than int8 plane
 tensors. See DESIGN.md §"Packed plane format" for the word layout.
+
+Packed words are why tensor-parallel sharding (DESIGN.md §11) slices
+*values*, never plane words: a K-shard boundary falls mid-word, so
+``sharding.tp.shard_quantized`` slices the quantized ``w_q`` per shard
+and re-runs the decomposition here per shard. ABFT checksums and
+occupancy masks are computed over the per-shard planes by the same code
+path as the single-device build — per-shard integrity needs no special
+casing in this module.
 """
 
 from __future__ import annotations

@@ -116,6 +116,14 @@ class PlanKey:
     bk: Optional[int]
     sparsity: str = "off"  # occupancy-gated sparse plane execution
     integrity: str = "off"  # ABFT row-sum checking: off / detect / scrub
+    #: tensor-parallel placement: None (unsharded) or a static
+    #: ``(axis_name, axis_size, role)`` triple, role "col" | "row". The
+    #: m/k/n fields of a sharded key are the *local* (per-shard) shape, so
+    #: tile resolution sees what the device executes — the field exists so
+    #: a shard plan never aliases an unsharded plan of the same local
+    #: shape (their collective/epilogue contracts differ: a "row" plan is
+    #: built without an epilogue and its caller psums the raw accumulator).
+    shard: Optional[tuple] = None
 
 
 class PlanRegistry:
@@ -751,11 +759,16 @@ def plan_for_operands(
     bk: Optional[int] = None,
     sparsity: str = "off",
     integrity: str = "off",
+    shard: Optional[tuple] = None,
     registry: Optional[PlanRegistry] = None,
 ) -> MatmulPlan:
     """Policy-free plan construction from explicit operand metadata (the
     compatibility shim and kernel-level callers use this; model code goes
-    through :func:`make_plan`)."""
+    through :func:`make_plan`).
+
+    ``shard``: static tensor-parallel placement triple
+    ``(axis_name, axis_size, role)`` — see :class:`PlanKey`. ``shapes``
+    must then be the *local* per-shard shapes."""
     if sparsity not in ("off", "gate", "compact"):
         raise ValueError(
             f"sparsity must be 'off', 'gate' or 'compact', got {sparsity!r}"
@@ -779,6 +792,7 @@ def plan_for_operands(
         bm=bm, bn=bn, bk=bk,
         sparsity=sparsity,
         integrity=integrity,
+        shard=shard,
     )
     return (DEFAULT_REGISTRY if registry is None else registry).get(key)
 
@@ -797,6 +811,7 @@ def make_plan(
     bm: Optional[int] = None,
     bn: Optional[int] = None,
     bk: Optional[int] = None,
+    shard: Optional[tuple] = None,
 ) -> MatmulPlan:
     """Resolve the execution plan for one layer of a policy.
 
@@ -806,7 +821,9 @@ def make_plan(
     (:meth:`PrecisionPolicy.with_runtime_bits`) lowers the executed width
     below it, the plan consumes the stored decomposition's plane prefix.
     Activations are assumed quantized at the *effective* width by the
-    caller (they are re-quantized per token anyway).
+    caller (they are re-quantized per token anyway). ``shard`` is the
+    static tensor-parallel placement triple (with local ``shapes``) — see
+    :class:`PlanKey`.
     """
     configured = policy.lookup(layer_name)
     if not configured.active:
@@ -831,6 +848,7 @@ def make_plan(
         bm=bm, bn=bn, bk=bk,
         sparsity=policy.sparsity,
         integrity=policy.integrity,
+        shard=shard,
         registry=registry,
     )
 

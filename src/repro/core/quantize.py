@@ -28,16 +28,23 @@ def _qmax(bits: int) -> int:
     return max(hi, 1)
 
 
-def quantize(x: jax.Array, bits: int, axis=None) -> Quantized:
+def quantize(x: jax.Array, bits: int, axis=None, *, amax=None) -> Quantized:
     """Symmetric quantization of ``x`` to ``bits``-bit integers.
 
     ``axis``: axis/axes to *reduce* when computing the scale (None =
     per-tensor). E.g. for a ``(K, N)`` weight, ``axis=0`` gives a per-
     output-channel ``(1, N)`` scale; for ``(..., K)`` activations,
     ``axis=-1`` gives per-token scales.
+
+    ``amax``: precomputed |x| maximum, broadcastable against ``x``,
+    overriding the local reduction. The tensor-parallel row-parallel path
+    passes the cross-shard ``lax.pmax`` of the local maxima here so every
+    shard quantizes a K-sharded activation with the *global* per-token
+    scale — bit-identical to the unsharded quantization.
     """
     qmax = _qmax(bits)
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    if amax is None:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
     scale = jnp.maximum(amax, 1e-8).astype(jnp.float32) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax - 1 if bits > 1 else 0, qmax)
     store_dtype = jnp.int8 if bits <= 8 else jnp.int32

@@ -51,11 +51,15 @@ from repro.configs import ARCH_NAMES, get_config, get_reduced
 from repro.core import integrity
 from repro.core.precision import PrecisionPolicy
 from repro.launch import sampling
-from repro.launch.steps import make_cb_decode_step, make_prefill_step, make_serve_step
+from repro.launch.steps import (
+    make_cb_decode_step, make_prefill_step, make_serve_step,
+    make_tp_cb_decode_step, make_tp_prefill_step,
+)
 from repro.models.cache import (
     cache_kv_bytes, cache_slot_checksums, init_cache, insert_slot, select_slots,
 )
 from repro.models.quant import quantize_params
+from repro.sharding.tp import TPContext, plane_cache_device_bytes, shard_quantized
 from repro.models.transformer import init_params
 from repro.runtime.autopilot import Autopilot, AutopilotPolicy
 from repro.runtime.faults import FaultInjector, FaultSpec
@@ -177,16 +181,41 @@ class _IntegrityRuntime:
             # of recoverability; detect mode skips it)
             self._src_params = params
 
+    def _requantize(self, params):
+        """Deterministic source -> serving-tree rebuild. Load time and
+        scrub recovery share this one code path, so a scrub rebuild
+        reproduces the load-time fingerprint regardless of layout — the
+        flat single-device tree or the TP-stacked sharded one
+        (DESIGN.md §11)."""
+        tp = getattr(self, "tp", None)
+        if tp is None:
+            return quantize_params(
+                params, self.policy,
+                plane_cache=self.plane_cache, value_bits=self._value_bits,
+            )
+        tree, self._tp_specs = shard_quantized(
+            params, self.policy, tp,
+            plane_cache=self.plane_cache, value_bits=self._value_bits,
+        )
+        # Commit the stacked tree to the mesh once: every leaf lands
+        # shard-resident, so the jitted shard_map steps never re-transfer
+        # the plane cache per call.
+        from jax.sharding import NamedSharding
+
+        return jax.device_put(
+            tree,
+            jax.tree_util.tree_map(
+                lambda s: NamedSharding(tp.mesh, s), self._tp_specs
+            ),
+        )
+
     def _scrub(self) -> None:
         if self._src_params is None:
             raise integrity.IntegrityError(
                 "scrub requested but source parameters were not retained "
                 "(integrity mode is not 'scrub')"
             )
-        self.q_params = quantize_params(
-            self._src_params, self.policy,
-            plane_cache=self.plane_cache, value_bits=self._value_bits,
-        )
+        self.q_params = self._requantize(self._src_params)
         fp = int(self._fp_fn(self.q_params))
         if fp != self._params_ref:
             raise integrity.IntegrityError(
@@ -238,12 +267,9 @@ class Engine(_PrecisionDial, _IntegrityRuntime):
         # ``value_bits`` serves a narrow checkpoint from the uniform-width
         # cache (quantize_params); with policy.sparsity="compact" the
         # resulting zero planes are dropped here, at load time.
+        self._value_bits = value_bits
         self.q_params = (
-            quantize_params(
-                params, policy, plane_cache=plane_cache, value_bits=value_bits
-            )
-            if policy.default.active
-            else params
+            self._requantize(params) if policy.default.active else params
         )
         self.sample_fn = sample_fn or sampling.greedy
         self.max_len = max_len
@@ -408,6 +434,7 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         autopilot: Optional[AutopilotPolicy] = None,
         degrade_after: Optional[int] = None,
         degrade_to: int = 4,
+        model_parallel: int = 1,
     ):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
@@ -417,12 +444,30 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         self.max_len = max_len
         self.kv_quant = kv_quant
         self.plane_cache = plane_cache
+        self.model_parallel = int(model_parallel)
+        self.tp = None
+        if self.model_parallel > 1:
+            # Tensor-parallel serving (DESIGN.md §11): shard the packed
+            # plane caches column/row-parallel and the KV cache by head,
+            # run the steps under shard_map, stay token-bit-identical to
+            # the single-device engine.
+            if not policy.default.active:
+                raise ValueError(
+                    "model_parallel > 1 requires an active quantization "
+                    "policy: TP relays out the quantized serving tree "
+                    "(shard_quantized), there is no dense TP path"
+                )
+            if max(policy.default.a_bits, policy.default.w_bits) > 8:
+                raise ValueError(
+                    "model_parallel > 1 requires <= 8-bit operands: the "
+                    "row-parallel partial sums must accumulate exactly in "
+                    "int32 for the psum to be bit-identical"
+                )
+            self.tp = TPContext.create(self.model_parallel)
+            self.tp.local_config(cfg)  # fail fast on head divisibility
+        self._value_bits = value_bits
         self.q_params = (
-            quantize_params(
-                params, policy, plane_cache=plane_cache, value_bits=value_bits
-            )
-            if policy.default.active
-            else params
+            self._requantize(params) if policy.default.active else params
         )
         base = jax.random.PRNGKey(seed)
         # disjoint streams: first-token sampling folds rid, decode folds step
@@ -484,6 +529,30 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         check = self.integrity != "off"
         pcol = integrity.Collector() if check else None
         scol = integrity.Collector() if check else None
+        if self.tp is not None:
+            # shard_map steps: no donation in any mode — the scrub retry
+            # and mixed-tier protocols re-read the pre-step cache, and the
+            # sharded buffers are committed to the mesh (re-layout on
+            # donation would cost more than the copy it saves on CPU CI).
+            return (
+                jax.jit(
+                    make_tp_prefill_step(
+                        self.cfg, self.tp, self._tp_specs, self.policy,
+                        max_len=self.max_len, kv_quant=self.kv_quant,
+                        precision=precision, collector=pcol,
+                    )
+                ),
+                jax.jit(
+                    make_tp_cb_decode_step(
+                        self.cfg, self.tp, self._tp_specs, self.policy,
+                        max_len=self.max_len, n_slots=self.n_slots,
+                        kv_quant=self.kv_quant, precision=precision,
+                        collector=scol,
+                    )
+                ),
+                pcol,
+                scol,
+            )
         return (
             jax.jit(
                 make_prefill_step(
@@ -523,13 +592,30 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         shadow quality probe (no collector, no donation: the probe reads
         the pre-step cache and discards its outputs)."""
         if precision not in self._shadow_compiled:
-            self._shadow_compiled[precision] = jax.jit(
-                make_cb_decode_step(
+            if self.tp is not None:
+                step = make_tp_cb_decode_step(
+                    self.cfg, self.tp, self._tp_specs, self.policy,
+                    max_len=self.max_len, n_slots=self.n_slots,
+                    kv_quant=self.kv_quant, precision=precision,
+                    with_logits=True,
+                )
+            else:
+                step = make_cb_decode_step(
                     self.cfg, self.policy, precision=precision,
                     with_logits=True,
                 )
-            )
+            self._shadow_compiled[precision] = jax.jit(step)
         return self._shadow_compiled[precision]
+
+    def plane_cache_bytes_per_device(self) -> int:
+        """Resident packed-plane bytes per device — the ``tp_serving``
+        bench's footprint metric (shrinks ~1/model_parallel; DESIGN.md
+        §11)."""
+        if self.tp is None:
+            return plane_cache_device_bytes(self.q_params)
+        return plane_cache_device_bytes(
+            self.q_params, self._tp_specs, n_shards=self.tp.size
+        )
 
     def _shadow_kl(self, cache, tokens, temps, key, tier_index, active) -> float:
         """Mean KL(widest || tier) over the active slots' next-token
@@ -1047,6 +1133,14 @@ def build_parser() -> argparse.ArgumentParser:
                     "while degraded: an extra logits pass at the stored "
                     "width and the current tier, KL between them fed to the "
                     "controller (0 disables the probe)")
+    ap.add_argument("--model-parallel", type=int, default=1, metavar="P",
+                    help="tensor-parallel serving over P devices "
+                    "(DESIGN.md §11): plane caches shard column-parallel "
+                    "(q/k/v/gate/up) and row-parallel (o/down), the KV "
+                    "cache by head; tokens are bit-identical to P=1. "
+                    "Needs P devices (CI: XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8), --bits in "
+                    "[1,8], head counts divisible by P; --mode cb only")
     ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
                     help="per-request deadline: fail any request not "
                     "finished within STEPS engine iterations of its "
@@ -1138,6 +1232,22 @@ def validate_args(args) -> None:
         die("--sla-queue-steps must be >= 1")
     if not 0.0 <= args.shadow_frac <= 1.0:
         die("--shadow-frac must be in [0, 1]")
+    if args.model_parallel < 1:
+        die("--model-parallel must be >= 1")
+    if args.model_parallel > 1:
+        if args.mode == "lockstep":
+            die("--model-parallel drives the continuous-batching engine "
+                "(--mode cb)")
+        if not args.bits:
+            die("--model-parallel needs an active quantization policy "
+                "(--bits > 0): TP shards the quantized serving tree")
+        if args.bits > 8:
+            die("--model-parallel needs --bits <= 8: the row-parallel "
+                "partial sums must accumulate exactly in int32")
+        if len(jax.devices()) < args.model_parallel:
+            die(f"--model-parallel {args.model_parallel} needs that many "
+                f"devices; this host exposes {len(jax.devices())} (CPU CI "
+                "sets XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     if args.deadline is not None:
         if args.mode == "lockstep":
             die("--deadline is a continuous-batching feature (--mode cb): "
@@ -1251,7 +1361,10 @@ def main():
         plane_cache=not args.no_plane_cache,
         audit_interval=args.audit_interval,
         autopilot=ap_policy,
+        model_parallel=args.model_parallel,
     )
+    if args.model_parallel > 1:
+        tag += f" tp={args.model_parallel}"
     if args.precision:
         engine.set_precision(args.precision)
     requests = [

@@ -220,6 +220,128 @@ def make_serve_step(
     return serve_step
 
 
+def _tp_shard_map(fn, tp, in_specs, out_specs):
+    """``shard_map`` with the repo's compatibility/compile settings.
+
+    ``check_rep=False``: the bodies return replicated values by
+    construction (identical deterministic math per shard after psum/pmax),
+    but jax 0.4's replication checker cannot prove that through the
+    integer plane kernels."""
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        fn, mesh=tp.mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def make_tp_prefill_step(
+    cfg: ModelConfig,
+    tp,
+    param_specs,
+    policy=None,
+    max_len: Optional[int] = None,
+    kv_quant: bool = False,
+    precision: Optional[Tuple[int, int]] = None,
+    collector=None,
+):
+    """Tensor-parallel :func:`make_prefill_step`: same signature and
+    outputs, executed under ``shard_map`` over ``tp.mesh``.
+
+    ``tp`` is a :class:`repro.sharding.tp.TPContext`; ``param_specs`` the
+    spec tree returned by ``shard_quantized`` alongside the stacked
+    parameter tree this step consumes. The inner step is built with the
+    *local* model config, so ``init_cache`` inside the body allocates the
+    per-shard (head-sharded) KV extent and every plan resolves per-shard
+    tiles from the local shapes. Logits and tokens come back replicated;
+    the KV cache comes back as a global head-sharded array tree; ABFT
+    alarms are OR-reduced across shards before leaving the body.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    local_cfg = tp.local_config(cfg)
+    inner = make_prefill_step(
+        local_cfg, policy=policy, max_len=max_len, kv_quant=kv_quant,
+        precision=precision, collector=collector,
+    )
+    # Rank/structure template for the output cache specs (extents are
+    # irrelevant — specs only need leaf names and ranks).
+    cache_specs = tp.cache_specs(
+        jax.eval_shape(
+            lambda: init_cache(cfg, 1, max_len or 8, cfg.dtype, kv_quant=kv_quant)
+        )
+    )
+
+    def body(params, batch):
+        local = tp.localize(params, param_specs)
+        with tp.scope():
+            out = inner(local, batch)
+        if collector is None:
+            return out
+        logits, cache, alarms = out
+        return logits, cache, tp.reduce_alarms(alarms)
+
+    out_specs = (P(), cache_specs) + ((P(),) if collector is not None else ())
+    return _tp_shard_map(body, tp, (param_specs, P()), out_specs)
+
+
+def make_tp_cb_decode_step(
+    cfg: ModelConfig,
+    tp,
+    param_specs,
+    policy=None,
+    max_len: Optional[int] = None,
+    n_slots: int = 1,
+    kv_quant: bool = False,
+    precision: Optional[Tuple[int, int]] = None,
+    collector=None,
+    with_logits: bool = False,
+):
+    """Tensor-parallel :func:`make_cb_decode_step`: cb_step(params, cache,
+    tokens, temps, key) under ``shard_map`` over ``tp.mesh``.
+
+    The slot cache rides through sharded head-parallel (its specs are
+    derived from a ``(n_slots, max_len)`` eval-shape template — only leaf
+    names/ranks matter); tokens/temps/key replicate. Sampling runs
+    redundantly and bit-identically on every shard from the replicated
+    post-psum logits, so the returned tokens are replicated without a
+    collective. See DESIGN.md §11.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    local_cfg = tp.local_config(cfg)
+    inner = make_cb_decode_step(
+        local_cfg, policy=policy, precision=precision, collector=collector,
+        with_logits=with_logits,
+    )
+    cache_specs = tp.cache_specs(
+        jax.eval_shape(
+            lambda: init_cache(
+                cfg, n_slots, max_len or 8, cfg.dtype, kv_quant=kv_quant
+            )
+        )
+    )
+
+    def body(params, cache, tokens, temps, key):
+        local = tp.localize(params, param_specs)
+        with tp.scope():
+            out = inner(local, cache, tokens, temps, key)
+        if collector is None:
+            return out
+        lst = list(out)
+        lst[2] = tp.reduce_alarms(lst[2])
+        return tuple(lst)
+
+    extras = ((P(),) if collector is not None else ()) + (
+        (P(),) if with_logits else ()
+    )
+    return _tp_shard_map(
+        body,
+        tp,
+        (param_specs, cache_specs, P(), P(), P()),
+        (P(), cache_specs) + extras,
+    )
+
+
 def make_cb_decode_step(
     cfg: ModelConfig,
     policy=None,

@@ -19,6 +19,13 @@ storing them (keeps 32k-token training under the HBM budget).
 Decode attends over an S-sharded KV cache with plain masked attention;
 the partial max/sum reductions over the sharded axis become the
 flash-decode collectives under GSPMD.
+
+Under tensor-parallel serving (DESIGN.md §11) this whole block is
+**head-local**: QKV projections are col-parallel (each shard produces
+its own heads), the KV cache arrives head-sharded, rope/softmax/
+weighted-sum never mix heads, and O is the row-parallel projection whose
+psum happens inside :func:`repro.layers.linear.linear_apply` — nothing
+in this module needs a collective or even knows it is sharded.
 """
 
 from __future__ import annotations

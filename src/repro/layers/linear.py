@@ -38,6 +38,7 @@ from repro.core import plan as plan_mod
 from repro.core.precision import PrecisionPolicy
 from repro.core.quantize import fake_quant, quantize
 from repro.kernels import ops
+from repro.sharding.tp import current_tp, tp_role
 
 
 def _accum_dtype(w_bits: int, a_bits: int):
@@ -108,20 +109,62 @@ def linear_apply(
         if not prec.active:
             raise ValueError(f"layer {name}: quantized params but inactive policy")
         eff = policy.effective(prec)
+        tp = current_tp()
+        role = tp_role(name) if tp is not None else None
+        shard = None if role is None else (tp.axis, tp.size, role)
+        if role == "row":
+            # Row-parallel (K-sharded) projection — DESIGN.md §11. The
+            # per-token scale must be the GLOBAL |x| max (pmax across
+            # shards), or shards would quantize against different scales
+            # and the partial sums would not compose. The plan runs
+            # without an epilogue so it returns the raw int32 shard
+            # accumulator; the psum of those is exact (int32 wraparound is
+            # associative), and the dequant/bias/activation epilogue is
+            # applied once, post-psum — with the plan's truncation
+            # correction (scale_mult) folded in by hand, exactly as the
+            # plan itself would for an in-plan epilogue.
+            xf = x.astype(jnp.float32)
+            xq = quantize(xf, eff.a_bits, axis=-1, amax=tp.global_amax(xf))
+            plan = plan_mod.make_plan(
+                policy, name, (x.shape, params["w_q"].shape), backend,
+                w_planes=params.get("w_planes"),
+                w_stored_bits=prec.w_bits,
+                has_epilogue=False,
+                accum_dtype=_accum_dtype(eff.w_bits, eff.a_bits),
+                shard=shard,
+            )
+            acc = plan(
+                xq.values, params["w_q"], w_planes=params.get("w_planes")
+            )
+            acc = jax.lax.psum(acc, tp.axis)
+            return ops.apply_epilogue(
+                acc,
+                ops.Epilogue(
+                    a_scale=xq.scale,
+                    w_scale=params["w_scale"] * plan.scale_mult,
+                    bias=bias,
+                    activation=activation,
+                    out_dtype=x.dtype,
+                ),
+            )
         xq = quantize(x.astype(jnp.float32), eff.a_bits, axis=-1)
         # Compile-once execution plan, interned by (shape, precision,
         # backend, cache layout). ``w_stored_bits`` is the width the
         # checkpoint was quantized/decomposed at: when the runtime dial
         # lowers eff.w_bits below it, the plan consumes the top planes of
-        # the existing decomposition (no re-quantization).
+        # the existing decomposition (no re-quantization). Column-parallel
+        # shards take this path unchanged — replicated input, locally
+        # sliced weight/scale columns, no collective — with the shard
+        # triple on the key so local-shape plans never alias global ones.
         plan = plan_mod.make_plan(
             policy, name, (x.shape, params["w_q"].shape), backend,
             w_planes=params.get("w_planes"),
             w_stored_bits=prec.w_bits,
             has_epilogue=True,
             accum_dtype=_accum_dtype(eff.w_bits, eff.a_bits),
+            shard=shard,
         )
-        return plan(
+        out = plan(
             xq.values,
             params["w_q"],
             w_planes=params.get("w_planes"),
@@ -133,6 +176,12 @@ def linear_apply(
                 out_dtype=x.dtype,
             ),
         )
+        if role == "vocab":
+            # vocab-parallel lm_head: the sampler needs the full vocab, so
+            # gather the sharded logits (tiled = axis-ordered concat of the
+            # exact per-shard columns — bit-identical to the unsharded run)
+            out = jax.lax.all_gather(out, tp.axis, axis=out.ndim - 1, tiled=True)
+        return out
 
     w = params["w"]
     if not prec.active:

@@ -18,6 +18,14 @@ With ``kv_quant=True`` attention KV is stored int8 with per-(position,
 head) float32 scales (``k_q``/``k_scale``/``v_q``/``v_scale``) and is
 quantized on append — see DESIGN.md §6 for the layout and the HBM-byte
 accounting (``cache_kv_bytes``).
+
+Under tensor-parallel serving (DESIGN.md §11) the attention leaves —
+int8 KV *and* their scale vectors — shard **head-parallel** on the
+KV-head axis (``sharding.tp.TPContext.cache_specs`` maps leaf names to
+specs); attention is head-local, so :func:`insert_slot` and
+:func:`select_slots` run unchanged per shard with no collective, and
+the same functions drive both the single-device and the sharded engine
+(the parity tests compare them leafwise, bit for bit).
 """
 
 from __future__ import annotations

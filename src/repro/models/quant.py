@@ -21,6 +21,13 @@ execution plan fetched with a runtime-dialed policy
 with zero re-quantization. Which layers are cacheable is the plan
 module's contract (:func:`repro.core.plan.plan_cacheable`), so quantize
 time and plan resolution can never disagree about cache usability.
+
+Tensor-parallel serving (DESIGN.md §11) composes with this module by
+ordering, not modification: ``sharding.tp.shard_quantized`` calls
+:func:`quantize_params` over the **full** weights first (global scales),
+slices ``w_q`` per shard, and re-runs the plane decomposition per shard
+— so sharded plane caches, checksums, and occupancy masks are exact
+slices/recomputations of what this module would build on one device.
 """
 
 from __future__ import annotations

@@ -1,4 +1,5 @@
-"""Sharding rules: logical axes -> mesh PartitionSpecs."""
+"""Sharding: GSPMD logical-axis rules (``rules``) and the explicit
+tensor-parallel relayout of the packed-plane serving stack (``tp``)."""
 
 from repro.sharding.rules import (
     MeshRules,
@@ -12,14 +13,26 @@ from repro.sharding.rules import (
     tree_param_specs,
     use_rules,
 )
+from repro.sharding.tp import (
+    TPContext,
+    current_tp,
+    plane_cache_device_bytes,
+    shard_quantized,
+    tp_role,
+)
 
 __all__ = [
     "MeshRules",
+    "TPContext",
     "batch_specs",
     "constrain",
     "current_rules",
+    "current_tp",
     "param_spec",
+    "plane_cache_device_bytes",
     "rules_for_mesh",
+    "shard_quantized",
+    "tp_role",
     "tree_cache_specs",
     "tree_param_shardings",
     "tree_param_specs",

@@ -10,6 +10,17 @@ Axis roles:
   * ``pod``  — pure data parallel across pods (gradients reduce over
     pod x data; parameters are NOT sharded over pod, keeping FSDP
     all-gathers on intra-pod ICI instead of cross-pod DCN).
+
+This module is the *GSPMD* sharding surface: rules are installed with
+:class:`use_rules`, model code calls :func:`constrain`, and the compiler
+propagates the layout (training, dry-runs). The packed-plane *serving*
+stack shards explicitly instead — :mod:`repro.sharding.tp` relays the
+quantized tree out per shard and runs steps under ``shard_map``, where
+:func:`current_rules` is None and every ``constrain`` call no-ops (the
+two systems compose by staying out of each other's way). Note the KV
+difference: :func:`cache_spec` here seq-shards KV (the flash-decode
+layout for GSPMD decode), while TP serving shards KV by head
+(DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -25,6 +36,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
+    """Resolved logical->mesh-axis mapping for one mesh.
+
+    Built by :func:`rules_for_mesh`; installed ambiently with
+    :class:`use_rules` so model code never threads a mesh argument. Every
+    resolver in this module (``constrain``/``param_spec``/``cache_spec``)
+    reads the installed instance via :func:`current_rules`.
+    """
+
     mesh: Mesh
     batch_axes: Tuple[str, ...]
     fsdp_axis: Optional[str]
@@ -38,6 +57,14 @@ _RULES: contextvars.ContextVar[Optional[MeshRules]] = contextvars.ContextVar(
 
 
 def rules_for_mesh(mesh: Mesh, *, seq_shard: bool = True) -> MeshRules:
+    """Derive :class:`MeshRules` from a mesh's axis names.
+
+    Recognizes the ``pod``/``data``/``model`` axes of the
+    :mod:`repro.launch.mesh` constructors; absent axes resolve to
+    "replicated". ``seq_shard=False`` turns off sequence-parallel
+    activation sharding (useful when the model axis is saturated by
+    tensor parallelism on short sequences).
+    """
     names = mesh.axis_names
     return MeshRules(
         mesh=mesh,
@@ -49,7 +76,13 @@ def rules_for_mesh(mesh: Mesh, *, seq_shard: bool = True) -> MeshRules:
 
 
 class use_rules:
-    """Context manager installing the mesh rules for model tracing."""
+    """Context manager installing the mesh rules for model tracing.
+
+    ``with use_rules(rules_for_mesh(mesh)): ...`` makes every
+    :func:`constrain` / ``*_specs`` call inside resolve against ``mesh``;
+    ``use_rules(None)`` explicitly disables sharding (all resolvers
+    no-op). Re-entrant and contextvar-scoped, so concurrent traces with
+    different meshes don't interfere."""
 
     def __init__(self, rules: Optional[MeshRules]):
         self.rules = rules
@@ -63,6 +96,11 @@ class use_rules:
 
 
 def current_rules() -> Optional[MeshRules]:
+    """The ambiently installed :class:`MeshRules`, or None when tracing
+    outside any :class:`use_rules` scope (single-device, or inside a
+    ``shard_map`` body on the TP serving path — per-shard arrays there
+    must not get GSPMD constraints, and ``None`` makes every resolver
+    no-op)."""
     return _RULES.get()
 
 
@@ -90,7 +128,13 @@ def _resolve(logical, rules: MeshRules):
 
 
 def constrain(x: jax.Array, logical: Tuple) -> jax.Array:
-    """Sharding-constrain an activation; drops axes that don't divide."""
+    """Sharding-constrain an activation by logical axis names.
+
+    ``logical`` is one name per dim of ``x`` from {"batch", "seq",
+    "model", "vocab", "fsdp", None}. Axes whose resolved mesh extent does
+    not divide the dim are dropped (never an error), and with no rules
+    installed the array is returned unchanged — model code can call this
+    unconditionally."""
     rules = _RULES.get()
     if rules is None:
         return x
@@ -188,6 +232,9 @@ def tree_param_specs(params) -> dict:
 
 
 def tree_param_shardings(params):
+    """Like :func:`tree_param_specs` but returns ``NamedSharding`` objects
+    bound to the installed mesh (the form ``jax.device_put`` / ``jit``
+    in/out shardings consume). Requires rules to be installed."""
     rules = _RULES.get()
     specs = tree_param_specs(params)
     return jax.tree_util.tree_map(lambda s: NamedSharding(rules.mesh, s), specs)
@@ -207,6 +254,9 @@ _BATCH_LOGICAL = {
 
 
 def batch_specs(batch_tree) -> dict:
+    """Pytree of PartitionSpecs for an input batch: every leaf is sharded
+    ``("batch", None, ...)`` (data-parallel over leading dim) with known
+    leaf names (tokens/targets/features/...) resolved explicitly."""
     rules = _RULES.get()
 
     def leaf_spec(path, leaf):
@@ -260,6 +310,9 @@ def cache_spec(path: str, leaf) -> P:
 
 
 def tree_cache_specs(cache_tree):
+    """Pytree of PartitionSpecs matching a decode-cache pytree (leafwise
+    :func:`cache_spec`). GSPMD/flash-decode layout — the TP serving engine
+    uses :func:`repro.sharding.tp.TPContext.cache_specs` instead."""
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: cache_spec(_path_str(path), leaf), cache_tree
     )

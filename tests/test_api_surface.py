@@ -1,9 +1,10 @@
-"""Public-API snapshot (ISSUE 4 satellite): the exported names and
-signatures of ``repro.core.plan`` and ``repro.kernels.ops`` are a
-contract — the serving engines, benches, and external callers build plans
-against them. A signature drift must be a conscious decision: update the
-snapshot below in the same commit that changes the API, and say why in
-the message. Runs in the CI lint job (fast: imports + inspect only).
+"""Public-API snapshot: the exported names and signatures of
+``repro.core.plan``, ``repro.kernels.ops``, ``repro.sharding`` and
+``repro.launch.mesh`` are a contract — the serving engines, benches, and
+external callers build plans and meshes against them. A signature drift
+must be a conscious decision: update the snapshot below in the same
+commit that changes the API, and say why in the message. Runs in the CI
+lint job (fast: imports + inspect only).
 """
 
 import dataclasses
@@ -11,6 +12,9 @@ import inspect
 
 import repro.core.plan as plan_mod
 import repro.kernels.ops as ops_mod
+import repro.launch.mesh as mesh_mod
+import repro.sharding.rules as rules_mod
+import repro.sharding.tp as tp_mod
 
 
 def _sig(obj) -> str:
@@ -43,10 +47,13 @@ PLAN_SURFACE = {
     "'pack_block', 'a_shift', 'w_shift', 'scale_mult', 'requant_w', "
     "'trunc_cache', 'gate', 'check') methods('with_precision', "
     "'sparsity_stats', 'integrity_stats', 'describe')",
+    # PR 8: 'shard' carries the tensor-parallel placement triple
+    # (axis_name, axis_size, role) so per-shard plans (local m/k/n) never
+    # alias their global counterparts in the registry
     "PlanKey": "dataclass('m', 'k', 'n', 'a_bits', 'w_bits', 'a_in_bits', "
     "'w_in_bits', 'variant', 'level', 'mode', 'backend', 'accum', "
     "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk', "
-    "'sparsity', 'integrity') methods()",
+    "'sparsity', 'integrity', 'shard') methods()",
     "PlanRegistry": "class methods('get', 'clear', 'plans')",
     "DEFAULT_REGISTRY": "PlanRegistry",
     "make_plan": "(policy: 'PrecisionPolicy', layer_name: 'str', shapes, "
@@ -54,7 +61,8 @@ PLAN_SURFACE = {
     "w_stored_bits: 'Optional[int]' = None, has_epilogue: 'bool' = True, "
     "accum_dtype: 'Any' = None, registry: 'Optional[PlanRegistry]' = None, "
     "bm: 'Optional[int]' = None, bn: 'Optional[int]' = None, "
-    "bk: 'Optional[int]' = None) -> 'MatmulPlan'",
+    "bk: 'Optional[int]' = None, shard: 'Optional[tuple]' = None) "
+    "-> 'MatmulPlan'",
     "plan_for_operands": "(shapes, *, a_bits: 'int', w_bits: 'int', "
     "variant: 'str' = 'booth', level: 'str' = 'digit', "
     "mode: 'str' = 'fully_serial', backend: 'str' = 'auto', "
@@ -64,7 +72,7 @@ PLAN_SURFACE = {
     "fused: 'Optional[bool]' = None, packed: 'Optional[bool]' = None, "
     "bm: 'Optional[int]' = None, bn: 'Optional[int]' = None, "
     "bk: 'Optional[int]' = None, sparsity: 'str' = 'off', "
-    "integrity: 'str' = 'off', "
+    "integrity: 'str' = 'off', shard: 'Optional[tuple]' = None, "
     "registry: 'Optional[PlanRegistry]' = None) -> 'MatmulPlan'",
     "plan_cacheable": "(policy: 'PrecisionPolicy', prec: 'LayerPrecision') "
     "-> 'bool'",
@@ -110,6 +118,41 @@ OPS_SURFACE = {
 }
 
 
+# PR 8 (tensor-parallel serving): the GSPMD rules surface and the explicit
+# TP serving surface are both contracts — DESIGN.md §11 documents which one
+# applies where.
+RULES_SURFACE = {
+    "MeshRules": "dataclass('mesh', 'batch_axes', 'fsdp_axis', "
+    "'model_axis', 'seq_shard') methods()",
+    "rules_for_mesh": "(mesh: 'Mesh', *, seq_shard: 'bool' = True) "
+    "-> 'MeshRules'",
+    "use_rules": "class methods()",
+    "current_rules": "() -> 'Optional[MeshRules]'",
+    "constrain": "(x: 'jax.Array', logical: 'Tuple') -> 'jax.Array'",
+    "param_spec": "(path: 'str', arr) -> 'P'",
+    "tree_param_specs": "(params) -> 'dict'",
+    "tree_param_shardings": "(params)",
+    "batch_specs": "(batch_tree) -> 'dict'",
+    "tree_cache_specs": "(cache_tree)",
+}
+
+TP_SURFACE = {
+    "tp_role": "(name: 'str') -> 'Optional[str]'",
+    "current_tp": "() -> 'Optional[TPContext]'",
+    "shard_quantized": "(params, policy, tp: 'TPContext', *, "
+    "plane_cache: 'bool' = True, value_bits=None)",
+    "plane_cache_device_bytes": "(tree, specs=None, *, "
+    "n_shards: 'int' = 1) -> 'int'",
+}
+
+MESH_SURFACE = {
+    "make_production_mesh": "(*, multi_pod: 'bool' = False) -> 'Mesh'",
+    "make_mesh": "(shape, axes) -> 'Mesh'",
+    "make_host_mesh": "(model: 'int' = 1) -> 'Mesh'",
+    "make_tp_mesh": "(model: 'int') -> 'Mesh'",
+}
+
+
 def test_plan_module_exports():
     assert sorted(plan_mod.__all__) == sorted(PLAN_SURFACE)
 
@@ -122,6 +165,28 @@ def test_plan_api_surface():
 def test_ops_api_surface():
     got = {name: _describe(getattr(ops_mod, name)) for name in OPS_SURFACE}
     assert got == OPS_SURFACE
+
+
+def test_sharding_api_surface():
+    for mod, surface in (
+        (rules_mod, RULES_SURFACE),
+        (tp_mod, TP_SURFACE),
+        (mesh_mod, MESH_SURFACE),
+    ):
+        got = {name: _describe(getattr(mod, name)) for name in surface}
+        assert got == surface
+
+
+def test_tp_context_surface():
+    """TPContext is snapshotted by attribute presence (not a vars() render:
+    classmethod callability differs across the CI python matrix) plus the
+    dataclass field set."""
+    assert tuple(
+        f.name for f in dataclasses.fields(tp_mod.TPContext)
+    ) == ("mesh", "size", "axis")
+    for m in ("create", "scope", "local_config", "reduce_alarms",
+              "global_amax", "shard_spec", "localize", "cache_specs"):
+        assert callable(getattr(tp_mod.TPContext, m)), m
 
 
 def test_plan_callable_contract():

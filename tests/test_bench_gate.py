@@ -30,6 +30,8 @@ def _doc(
     nan_metric=False,
     ap_p99=3.0,
     static_p99=9.0,
+    tp_bytes4=250_000,
+    tp_skipped=None,
 ):
     """A minimal but complete healthy report, knobs per failure mode."""
     return {
@@ -69,6 +71,20 @@ def _doc(
                     "shed_only_at_lowest": "ok",
                 },
             },
+            "tp_serving": (
+                {"skipped": tp_skipped} if tp_skipped else {
+                    "model_parallel": [1, 2, 4],
+                    "plane_cache_bytes_per_device": {
+                        "model1": 1_000_000,
+                        "model2": 520_000,
+                        "model4": tp_bytes4,
+                    },
+                    "parity": {
+                        "tp2_tokens_vs_single_device": "ok",
+                        "tp4_tokens_vs_single_device": "ok",
+                    },
+                }
+            ),
         },
     }
 
@@ -212,3 +228,43 @@ def test_autopilot_tier_contract_hard_fails_via_parity(tmp_path, capsys, check):
     fresh["benches"]["autopilot"]["parity"][check] = "mismatch"
     assert _run(tmp_path, fresh) == 1
     assert f"autopilot.parity.{check}" in capsys.readouterr().out
+
+
+def test_tp_serving_footprint_regression_fails(tmp_path, capsys):
+    # base/4 * 1.25 = 312_500; a per-device footprint above that means the
+    # plane caches stopped sharding down
+    assert _run(tmp_path, _doc(tp_bytes4=400_000)) == 1
+    out = capsys.readouterr().out
+    assert "stopped sharding down" in out
+
+
+def test_tp_shrink_slack_flag_overrides(tmp_path):
+    assert _run(tmp_path, _doc(tp_bytes4=400_000)) == 1  # default 1.25
+    assert _run(
+        tmp_path, _doc(tp_bytes4=400_000), extra=["--tp-shrink-slack", "1.7"]
+    ) == 0
+
+
+def test_missing_tp_serving_section_fails(tmp_path, capsys):
+    fresh = _doc()
+    del fresh["benches"]["tp_serving"]
+    assert _run(tmp_path, fresh) == 1
+    assert "no tp_serving section" in capsys.readouterr().out
+
+
+def test_skipped_tp_serving_section_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(tp_skipped="needs 4 devices, found 1")) == 1
+    out = capsys.readouterr().out
+    assert "tp_serving sweep was skipped" in out
+    assert "xla_force_host_platform_device_count" in out
+
+
+@pytest.mark.parametrize("check", [
+    "tp2_tokens_vs_single_device",
+    "tp4_tokens_vs_single_device",
+])
+def test_tp_parity_hard_fails(tmp_path, capsys, check):
+    fresh = _doc()
+    fresh["benches"]["tp_serving"]["parity"][check] = "mismatch"
+    assert _run(tmp_path, fresh) == 1
+    assert f"tp_serving.parity.{check}" in capsys.readouterr().out
