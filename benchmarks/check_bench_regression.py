@@ -36,6 +36,14 @@ committed baseline and fails (exit 1) when:
   kernel_bench.py sets by default). Its parity entries (sharded tokens
   vs the single-device oracle) hard-fail like every other parity
   verdict;
+* the ``paged_serving`` section's resident-KV shrink falls below
+  ``--kv-shrink-floor`` (default 1.2x): at 80% shared prefixes under
+  slot churn, the paged engine's peak resident page bytes must sit
+  below the dense engine's always-resident cache — the ratio collapsing
+  toward 1x means paged allocation or CoW prefix sharing silently
+  stopped saving memory. A missing or skipped section fails loudly, and
+  its token-parity verdicts (paged chunked AND monolithic vs the dense
+  oracle, bit for bit) hard-fail like every other parity entry;
 * the ``autopilot`` section's overload ramp stops holding its SLA: the
   autopilot run's p99 queue steps must be within ``sla_queue_steps``
   while the static 8-bit baseline exceeds it (a ramp the static engine
@@ -311,6 +319,24 @@ def _tp_serving_failures(doc: dict, slack: float) -> list[str]:
     return fails
 
 
+def _paged_serving_failures(doc: dict, floor: float) -> list[str]:
+    """Residency gate on the paged-KV serving sweep. Token parity vs the
+    dense oracle (chunked and monolithic prefill) rides the hard parity
+    gate; this checks the subsystem's capacity claim: at 80% shared
+    prefixes under slot churn, peak resident page bytes must sit below
+    the dense engine's always-resident cache by ``floor``. A missing or
+    skipped section fails loudly, like every other serving sweep."""
+    return _floor_failures(
+        doc.get("benches", {}).get("paged_serving"),
+        section="paged_serving",
+        key="kv_shrink_x",
+        floor=floor,
+        label="dense-vs-paged resident KV bytes",
+        missing="paged-KV residency sweep",
+        collapse="paged allocation + CoW prefix sharing",
+    )
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -355,6 +381,13 @@ def main(argv=None) -> int:
         help="max tolerated per-device plane-cache bytes at "
         "model_parallel=P as a multiple of 1/P of the single-device "
         "footprint (pack-word padding + replicated non-TP leaves)",
+    )
+    ap.add_argument(
+        "--kv-shrink-floor", type=float, default=1.2,
+        help="min tolerated dense/paged resident-KV-bytes ratio from the "
+        "paged_serving sweep at 80%% shared prefixes (measured ~1.8x on "
+        "the smoke workload; the failure mode is paged allocation or CoW "
+        "sharing silently holding as many pages as dense residency)",
     )
     args = ap.parse_args(argv)
 
@@ -402,6 +435,7 @@ def main(argv=None) -> int:
     failures.extend(_integrity_failures(fresh, args.integrity_ceiling))
     failures.extend(_autopilot_failures(fresh))
     failures.extend(_tp_serving_failures(fresh, args.tp_shrink_slack))
+    failures.extend(_paged_serving_failures(fresh, args.kv_shrink_floor))
 
     parity = _parity_failures(fresh)
     for p in parity:

@@ -54,9 +54,18 @@ Reports, into the ``serving`` section of BENCH_kernel.json:
   ``check_bench_regression --tp-shrink-slack``), and token parity
   against the single-device oracle (hard CI gate).
 
+* a ``paged_serving`` section (PR 9): the paged-KV engine — block-table
+  indirection, chunked prefill, copy-on-write shared-prefix reuse — on a
+  slot-churn ramp where 80% of the prompts open on one shared prefix.
+  Token parity vs the dense engine (chunked AND monolithic prefill) is a
+  hard CI gate; peak resident KV bytes must sit below the dense
+  residency by ``check_bench_regression --kv-shrink-floor``; decode
+  inter-token p99 (per-iteration wall incl. prefill work) contrasts
+  chunked against monolithic prefill stalls.
+
 CLI: ``python benchmarks/serving_bench.py [--smoke] [--json PATH]
 [--precision-sweep] [--sparsity-sweep] [--integrity-sweep]
-[--autopilot-sweep] [--tp-sweep]`` (each sweep alone).
+[--autopilot-sweep] [--tp-sweep] [--paged-sweep]`` (each sweep alone).
 """
 
 from __future__ import annotations
@@ -592,6 +601,131 @@ def tp_serving_sweep(cfg, params, smoke: bool = False) -> dict:
     }
 
 
+def paged_serving_sweep(cfg, params, smoke: bool = False) -> dict:
+    """Paged KV serving (DESIGN.md §12): residency, decode p99, parity.
+
+    High-slot-churn workload where 80% of the prompts open on one shared
+    system prefix, served three ways from the same request stream:
+
+    * the **dense** engine — the token-parity oracle, whose cache
+      residency is ``n_slots * max_len`` positions no matter what the
+      prompts look like;
+    * the **paged** engine with chunked prefill + CoW prefix sharing —
+      the shipping configuration. Its ``kv_bytes_resident_peak`` (pages
+      ever live at once x per-page bytes) must sit below the dense
+      residency by ``check_bench_regression --kv-shrink-floor``;
+    * the paged engine with **monolithic** prefill — the decode-p99
+      contrast: a full prefill stalls the whole engine iteration, while
+      chunked prefill bounds the stall to one chunk, so the chunked
+      engine's inter-token p99 under the prefill-heavy ramp stays below
+      the monolithic engine's (reported as ``decode_iter_p99_ms``; the
+      wall-clock ratio is host-noisy, so the hard CI gates are the two
+      token-parity verdicts and the residency floor).
+    """
+    policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+    ps = 8
+    if smoke:
+        n_slots, gen, max_len, n_req = 3, 4, 48, 10
+        prefix_len, body_max = 16, 12
+    else:
+        n_slots, gen, max_len, n_req = 4, 8, 96, 20
+        prefix_len, body_max = 32, 24
+    shared_n = int(n_req * 0.8)
+
+    def requests():
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, cfg.vocab_size, (prefix_len,))
+        body = np.random.default_rng(1)
+        reqs = []
+        for i in range(n_req):
+            shared = i % n_req < shared_n  # first 80% share the prefix
+            blen = int(body.integers(4, body_max))
+            toks = (
+                np.concatenate([prefix, body.integers(0, cfg.vocab_size, (blen,))])
+                if shared
+                else body.integers(0, cfg.vocab_size, (prefix_len + blen,))
+            )
+            reqs.append(Request(
+                rid=i, tokens=toks, max_new_tokens=gen,
+                arrival_step=i,  # tight ramp: prefills land mid-decode
+                shared_prefix_len=prefix_len if shared else 0,
+            ))
+        return reqs
+
+    kw = dict(n_slots=n_slots, max_len=max_len)
+    dense = ContinuousBatchingEngine(cfg, params, policy, **kw)
+    dense.run(requests())  # warm: compile per-length prefills + decode
+    res_dense, st_dense = dense.run(requests())
+
+    chunked = ContinuousBatchingEngine(
+        cfg, params, policy, page_size=ps, prefill_chunk=ps,
+        share_prefixes=True, **kw,
+    )
+    chunked.run(requests())  # warm
+    res_ch, st_ch = chunked.run(requests())
+
+    mono = ContinuousBatchingEngine(
+        cfg, params, policy, page_size=ps, share_prefixes=True, **kw,
+    )
+    mono.run(requests())  # warm
+    res_mono, st_mono = mono.run(requests())
+
+    def same(res):
+        return sorted(res) == sorted(res_dense) and all(
+            np.array_equal(res[rid], res_dense[rid]) for rid in res_dense
+        )
+
+    pg = st_ch["paging"]
+    dense_bytes = st_dense["kv_cache_bytes"]
+    resident = max(pg["kv_bytes_resident_peak"], 1)
+    return {
+        "workload": {
+            "n_requests": n_req, "gen": gen, "n_slots": n_slots,
+            "max_len": max_len, "prefix_len": prefix_len,
+            "shared_frac": round(shared_n / n_req, 2),
+            "arrival": "i (1-step ramp)",
+        },
+        "page_size": ps,
+        "prefill_chunk": ps,
+        "tok_per_s": {
+            "dense": round(st_dense["tok_per_s"], 2),
+            "paged_chunked": round(st_ch["tok_per_s"], 2),
+            "paged_monolithic": round(st_mono["tok_per_s"], 2),
+        },
+        "decode_iter_p99_ms": {
+            "dense_monolithic": round(st_dense["decode_iter_p99_ms"], 2),
+            "paged_chunked": round(st_ch["decode_iter_p99_ms"], 2),
+            "paged_monolithic": round(st_mono["decode_iter_p99_ms"], 2),
+        },
+        "kv_bytes": {
+            "dense_resident": dense_bytes,
+            "paged_resident_peak": pg["kv_bytes_resident_peak"],
+            "page_nbytes": pg["page_nbytes"],
+            "peak_used_pages": pg["peak_used_pages"],
+        },
+        "kv_shrink_x": round(dense_bytes / resident, 3),
+        "sharing": {
+            "shared_prefix_hits": pg["shared_prefix_hits"],
+            "prefix_entries": pg["prefix_entries"],
+            "prefix_evictions": pg["prefix_evictions"],
+        },
+        "prefill_chunks": st_ch["prefill_chunks"],
+        "parity": {
+            "paged_chunked_tokens_vs_dense": "ok" if same(res_ch) else "mismatch",
+            "paged_monolithic_tokens_vs_dense": (
+                "ok" if same(res_mono) else "mismatch"
+            ),
+        },
+        "note": (
+            "kv_shrink_x = dense cache residency / peak paged page bytes "
+            "at 80% shared prefixes under slot churn — the "
+            "--kv-shrink-floor gate; decode_iter_p99_ms is per-iteration "
+            "wall incl. prefill work (inter-token latency), where chunked "
+            "prefill bounds the stall a monolithic prefill imposes"
+        ),
+    }
+
+
 def serving_bench(json_path: str | None = None, smoke: bool = False):
     """Returns report rows; writes the ``serving`` JSON section."""
     from kernel_bench import JSON_PATH, _write_bench_section
@@ -640,6 +774,7 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
     integrity = integrity_sweep(cfg, params, smoke=smoke)
     autopilot = autopilot_sweep(cfg, params, smoke=smoke)
     tp_serving = tp_serving_sweep(cfg, params, smoke=smoke)
+    paged = paged_serving_sweep(cfg, params, smoke=smoke)
 
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
@@ -704,6 +839,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         path, "tp_serving",
         {"bench": "tp_serving", "arch": cfg.name, "smoke": smoke, **tp_serving},
     )
+    _write_bench_section(
+        path, "paged_serving",
+        {"bench": "paged_serving", "arch": cfg.name, "smoke": smoke, **paged},
+    )
     rows = [
         ("serving/cb_int8_tok_s", payload["tok_per_s"]["cb_int8_kv"],
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
@@ -728,6 +867,12 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
             "serving/tp4_plane_bytes_shrink_x", tp_serving["shrink_x"]["model4"],
             f"parity_{tp_serving['parity']['tp4_tokens_vs_single_device']}",
         ))
+    rows.append((
+        "serving/paged_kv_shrink_x", paged["kv_shrink_x"],
+        f"parity_{paged['parity']['paged_chunked_tokens_vs_dense']}"
+        f"_p99_chunked_{paged['decode_iter_p99_ms']['paged_chunked']}"
+        f"_mono_{paged['decode_iter_p99_ms']['paged_monolithic']}",
+    ))
     return rows
 
 
@@ -746,9 +891,12 @@ if __name__ == "__main__":
     ap.add_argument("--tp-sweep", action="store_true",
                     help="run only the tensor-parallel serving sweep and "
                     "print it (needs 4+ devices; see XLA_FLAGS note)")
+    ap.add_argument("--paged-sweep", action="store_true",
+                    help="run only the paged-KV serving sweep (residency, "
+                    "decode p99, parity) and print it")
     args = ap.parse_args()
     if (args.precision_sweep or args.sparsity_sweep or args.integrity_sweep
-            or args.autopilot_sweep or args.tp_sweep):
+            or args.autopilot_sweep or args.tp_sweep or args.paged_sweep):
         import json as _json
 
         cfg = get_reduced(ARCH)
@@ -757,6 +905,7 @@ if __name__ == "__main__":
               else sparsity_sweep if args.sparsity_sweep
               else integrity_sweep if args.integrity_sweep
               else autopilot_sweep if args.autopilot_sweep
+              else paged_serving_sweep if args.paged_sweep
               else tp_serving_sweep)
         print(_json.dumps(fn(cfg, params, smoke=args.smoke), indent=2))
     else:

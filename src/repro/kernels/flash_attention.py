@@ -253,3 +253,210 @@ def _scratch(rows: int, cols: int):
     import jax.experimental.pallas.tpu as pltpu  # deferred: CPU-safe import
 
     return pltpu.VMEM((rows, cols), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(
+    tables_ref,  # scalar-prefetch: (B, P) int32 block tables
+    lens_ref,  # scalar-prefetch: (B,) int32 valid lengths
+    q_ref,
+    k_ref,
+    v_ref,
+    k_scale_ref,
+    v_scale_ref,
+    o_ref,
+    m_scratch,
+    l_scratch,
+    acc_scratch,
+    *,
+    sm_scale: float,
+    page_size: int,
+    pages: int,
+):
+    bi = pl.program_id(0)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _reset():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    # Pages at or past the valid length hold no live positions (their
+    # table entries point at the null page): skip the whole block. Lanes
+    # with length 0 never run — their (0-initialized) accumulator yields
+    # finite garbage, like the dense kernel's free-slot lanes.
+    @pl.when(ki * page_size < lens_ref[bi])
+    def _run():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page_size, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        # int8 pools: fold the paged per-(position, head) scales exactly
+        # like the dense int8 path — no dequantized page tile exists.
+        s = s * k_scale_ref[0, :, 0][None, :]
+        k_pos = ki * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < lens_ref[bi], s, NEG_INF)
+
+        m_prev = m_scratch[...]
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scratch[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        p = p * v_scale_ref[0, :, 0][None, :]
+        acc_scratch[...] = acc_scratch[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scratch[...] = m_new
+
+    @pl.when(ki == pages - 1)
+    def _finish():
+        l = l_scratch[...]
+        o_ref[0, 0] = (acc_scratch[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "block_q", "out_dtype", "interpret"),
+)
+def paged_flash_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    k_scale_pool: jax.Array,
+    v_scale_pool: jax.Array,
+    block_tables: jax.Array,
+    kv_lens: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 1,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode attention straight off the paged int8 KV pools.
+
+    q: (B, Hq, Sq, D); pools: (n_pages, page_size, Hkv, D) int8 with
+    (n_pages, page_size, Hkv) f32 scales — the layout
+    ``models.paging.paged_init_cache`` stores (one layer's slice);
+    block_tables: (B, P) int32; kv_lens: (B,) int32.
+
+    The block tables and lengths ride in as **scalar-prefetch** operands
+    (``pltpu.PrefetchScalarGridSpec``): they land in SMEM before the
+    body runs, so each grid step's K/V block index map dereferences
+    ``tables[b, ki]`` and the DMA fetches exactly the physical page —
+    the gather is the schedule, no per-slot contiguous KV copy is ever
+    materialized. ``block_k`` is pinned to ``page_size``: one KV block
+    == one page. Pages at or past a lane's valid length are skipped
+    entirely (they point at the null page 0).
+
+    Causality is implicit: decode queries sit at position ``len - 1``
+    and the length mask admits exactly positions ``< len``.
+
+    Returns (B, Hq, Sq, D) in ``out_dtype`` (default bfloat16).
+    """
+    b, hq, sq, d = q.shape
+    n_pages, page_size, hkv, _ = k_pool.shape
+    if hq % hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}")
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    if sq % block_q:
+        raise ValueError(f"Sq={sq} must tile by block_q={block_q}")
+    if block_tables.shape[0] != b or block_tables.ndim != 2:
+        raise ValueError(
+            f"block_tables must be ({b}, P), got {block_tables.shape}"
+        )
+    if kv_lens.shape != (b,):
+        raise ValueError(f"kv_lens must be ({b},), got {kv_lens.shape}")
+    for name, pool, shape in (
+        ("v_pool", v_pool, k_pool.shape),
+        ("k_scale_pool", k_scale_pool, k_pool.shape[:-1]),
+        ("v_scale_pool", v_scale_pool, k_pool.shape[:-1]),
+    ):
+        if pool.shape != shape:
+            raise ValueError(f"{name} must be {shape}, got {pool.shape}")
+    pages = block_tables.shape[1]
+
+    import jax.experimental.pallas.tpu as pltpu  # CPU-safe (interpret mode)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        sm_scale=sm_scale,
+        page_size=page_size,
+        pages=pages,
+    )
+    # index maps receive the scalar-prefetch refs after the grid indices
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, sq // block_q, pages),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d),
+                lambda bi, hi, qi, ki, tables, lens: (bi, hi, qi, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, qi, ki, tables, lens: (
+                    tables[bi, ki], 0, hi // group, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, d),
+                lambda bi, hi, qi, ki, tables, lens: (
+                    tables[bi, ki], 0, hi // group, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1),
+                lambda bi, hi, qi, ki, tables, lens: (
+                    tables[bi, ki], 0, hi // group
+                ),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1),
+                lambda bi, hi, qi, ki, tables, lens: (
+                    tables[bi, ki], 0, hi // group
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d),
+            lambda bi, hi, qi, ki, tables, lens: (bi, hi, qi, 0),
+        ),
+        scratch_shapes=[
+            _scratch(block_q, 1),
+            _scratch(block_q, 1),
+            _scratch(block_q, d),
+        ],
+    )
+    out_dtype = jnp.bfloat16 if out_dtype is None else out_dtype
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, out_dtype),
+        compiler_params=dict(
+            mosaic=dict(
+                dimension_semantics=(
+                    "parallel", "parallel", "parallel", "arbitrary"
+                )
+            )
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        kv_lens.astype(jnp.int32),
+        q,
+        k_pool,
+        v_pool,
+        k_scale_pool.astype(jnp.float32),
+        v_scale_pool.astype(jnp.float32),
+    )

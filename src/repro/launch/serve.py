@@ -41,6 +41,7 @@ import argparse
 import dataclasses
 import time
 import warnings
+from collections import deque
 from typing import Optional, Tuple
 
 import jax
@@ -52,9 +53,11 @@ from repro.core import integrity
 from repro.core.precision import PrecisionPolicy
 from repro.launch import sampling
 from repro.launch.steps import (
-    make_cb_decode_step, make_prefill_step, make_serve_step,
-    make_tp_cb_decode_step, make_tp_prefill_step,
+    make_cb_decode_step, make_chunk_prefill_step, make_prefill_step,
+    make_serve_step, make_tp_cb_decode_step, make_tp_chunk_prefill_step,
+    make_tp_prefill_step,
 )
+from repro.models import paging
 from repro.models.cache import (
     cache_kv_bytes, cache_slot_checksums, init_cache, insert_slot, select_slots,
 )
@@ -63,7 +66,7 @@ from repro.sharding.tp import TPContext, plane_cache_device_bytes, shard_quantiz
 from repro.models.transformer import init_params
 from repro.runtime.autopilot import Autopilot, AutopilotPolicy
 from repro.runtime.faults import FaultInjector, FaultSpec
-from repro.runtime.scheduler import Request, SlotScheduler
+from repro.runtime.scheduler import HISTORY_LIMIT, Request, SlotScheduler
 
 
 def _norm_precision(precision) -> Tuple[int, int]:
@@ -386,6 +389,33 @@ def _degrade_alias_policy(
     )
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """One staged prefill in flight (DESIGN.md §12): the request owns a
+    reserved slot and a raw bf16 scratch cache that fills in chunks —
+    one chunk per engine iteration under ``prefill_chunk``, or run to
+    completion at admission (monolithic staging, ``prefill_chunk=0``).
+    Commit quantizes the scratch once and installs it (paged scatter or
+    dense ``insert_slot``), then the slot starts decoding."""
+
+    slot: int
+    req: Request
+    steps: tuple  # compiled (chunk_fn, collector) at the admission dial
+    tier_index: int
+    precision: object  # the admission-time dial (registry tag + commit)
+    scratch: object
+    bounds: list  # [(a, b), ...] token ranges still to prefill
+    next_i: int = 0
+    logits: object = None  # last chunk's (1, V) last-token logits
+    table: object = None  # paged: (pages_per_slot,) block-table row
+    mask: object = None  # paged: owned-page write mask
+    snapshot_at: int = -1  # chunk index whose result is the prefix snapshot
+    snapshot: object = None
+    prefix_tokens: object = None  # register these at commit (miss path)
+    prefix_pages: tuple = ()
+    from_hit: bool = False  # resumed from a registry snapshot
+
+
 class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
     """Slot-scheduled serving over a shared, optionally int8, KV cache.
 
@@ -435,6 +465,10 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         degrade_after: Optional[int] = None,
         degrade_to: int = 4,
         model_parallel: int = 1,
+        page_size: int = 0,
+        kv_pages: Optional[int] = None,
+        prefill_chunk: int = 0,
+        share_prefixes: bool = False,
     ):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
@@ -444,6 +478,51 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         self.max_len = max_len
         self.kv_quant = kv_quant
         self.plane_cache = plane_cache
+        # paged KV + staged (chunked) prefill (DESIGN.md §12)
+        self.page_size = int(page_size)
+        self.paged = self.page_size > 0
+        self.prefill_chunk = int(prefill_chunk)
+        self.share_prefixes = bool(share_prefixes)
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
+        if self.share_prefixes and not self.paged:
+            raise ValueError(
+                "share_prefixes needs the paged KV cache (page_size > 0): "
+                "physical pages are the sharing unit"
+            )
+        self._pages_per_slot = 0
+        self._kv_pages = 0
+        if self.paged:
+            if not kv_quant:
+                raise ValueError(
+                    "paged KV requires kv_quant=True: pages hold int8 values "
+                    "plus their per-(position, head) scale vectors — there is "
+                    "no raw bf16 page layout (DESIGN.md §12)"
+                )
+            if max_len % self.page_size:
+                raise ValueError(
+                    f"max_len={max_len} must be divisible by "
+                    f"page_size={self.page_size} so the gathered per-slot view "
+                    "keeps the dense decode grid (token-bit parity)"
+                )
+            self._pages_per_slot = max_len // self.page_size
+            self._kv_pages = (
+                int(kv_pages)
+                if kv_pages is not None
+                else n_slots * self._pages_per_slot + 1
+            )
+            if self._kv_pages < self._pages_per_slot + 1:
+                raise ValueError(
+                    f"kv_pages={self._kv_pages} cannot hold one full slot "
+                    f"({self._pages_per_slot} pages) plus the null page"
+                )
+            paging._check_kinds(cfg)  # fail at construction, not first run
+        elif kv_pages is not None:
+            raise ValueError("kv_pages needs page_size > 0 (paged KV)")
+        # staged prefill: raw scratch + commit — the paged engine always
+        # stages (commit is the page scatter); dense engines stage when
+        # chunking is requested
+        self._staged = self.paged or self.prefill_chunk > 0
         self.model_parallel = int(model_parallel)
         self.tp = None
         if self.model_parallel > 1:
@@ -521,7 +600,26 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         self._init_integrity(params, value_bits, audit_interval, max_retries)
         if self.integrity != "off":
             self._slot_fp = jax.jit(cache_slot_checksums)
+            if self.paged:
+                self._paged_fp = jax.jit(paging.paged_checksums)
         self._select = jax.jit(select_slots)
+        if self.paged:
+            # scratch (argnum 1) is NOT donated: prefix-registry snapshots
+            # alias earlier chunk states of the same tree
+            self._commit_paged = jax.jit(paging.paged_commit, donate_argnums=(0,))
+            self._clear_slot = jax.jit(paging.clear_slot, donate_argnums=(0,))
+            self._select_paged = jax.jit(paging.select_paged)
+        elif self._staged:
+            if self.kv_quant:
+                self._commit_dense = jax.jit(
+                    lambda c, s, slot: insert_slot(
+                        c, paging.quantize_scratch(s), slot
+                    ),
+                    donate_argnums=(0,),
+                )
+            else:
+                self._commit_dense = jax.jit(insert_slot, donate_argnums=(0,))
+        self._chunk_compiled: dict = {}
         self._shadow_compiled: dict = {}
         self._init_dial()
 
@@ -548,6 +646,7 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                         max_len=self.max_len, n_slots=self.n_slots,
                         kv_quant=self.kv_quant, precision=precision,
                         collector=scol,
+                        cache_template=self._paged_template(),
                     )
                 ),
                 pcol,
@@ -598,6 +697,7 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                     max_len=self.max_len, n_slots=self.n_slots,
                     kv_quant=self.kv_quant, precision=precision,
                     with_logits=True,
+                    cache_template=self._paged_template(),
                 )
             else:
                 step = make_cb_decode_step(
@@ -672,6 +772,165 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
             f"prefill ABFT alarm (rid {req.rid}) persisted through "
             f"{self.max_retries} scrub-and-retry attempts"
         )
+
+    # -- staged prefill + paged KV plumbing (DESIGN.md §12) -----------------
+
+    def _paged_template(self):
+        """Zero-arg paged-cache builder for the TP step factories (their
+        KV sharding specs derive from its eval-shape), or None (dense)."""
+        if not self.paged:
+            return None
+        return lambda: paging.paged_init_cache(
+            self.cfg, self.n_slots, self.max_len, self.page_size,
+            self._kv_pages,
+        )
+
+    def _chunk_steps_for(self, precision):
+        """Compiled (chunk_fn, collector) per precision tier. The chunk
+        step is the same forward-with-raw-cache program monolithic
+        prefill runs, so any chunk schedule is bit-identical to it; the
+        scratch is never donated (registry snapshots alias it)."""
+        if precision not in self._chunk_compiled:
+            check = self.integrity != "off"
+            ccol = integrity.Collector() if check else None
+            if self.tp is not None:
+                fn = make_tp_chunk_prefill_step(
+                    self.cfg, self.tp, self._tp_specs, self.policy,
+                    max_len=self.max_len, precision=precision, collector=ccol,
+                )
+            else:
+                fn = make_chunk_prefill_step(
+                    self.cfg, self.policy, precision=precision, collector=ccol,
+                )
+            self._chunk_compiled[precision] = (jax.jit(fn), ccol)
+        return self._chunk_compiled[precision]
+
+    def _chunk_checked(self, steps, scratch, toks, rid, integ):
+        """One prefill chunk with ABFT harvest + bounded scrub-and-retry
+        (the scratch is undonated, so a retry re-runs the same chunk)."""
+        chunk_fn, ccol = steps
+        if self.integrity == "off":
+            return chunk_fn(self.q_params, scratch, toks)
+        for attempt in range(self.max_retries + 1):
+            logits, out, alarms = chunk_fn(self.q_params, scratch, toks)
+            bad, n = self._harvest(ccol, alarms)
+            integ["abft_checks"] += n
+            if not bad:
+                return logits, out
+            integ["abft_alarms"] += 1
+            if self.integrity != "scrub":
+                return logits, out  # detect: record and proceed
+            if attempt < self.max_retries:
+                self._scrub()
+                integ["step_retries"] += 1
+        raise integrity.IntegrityError(
+            f"chunked-prefill ABFT alarm (rid {rid}) persisted through "
+            f"{self.max_retries} scrub-and-retry attempts"
+        )
+
+    def _open_job(
+        self, slot, req, sched, pager, registry, tier_index
+    ) -> _PrefillJob:
+        """Reserve ``slot`` and stage ``req``'s prefill: resolve the
+        shared-prefix registry (hit: map its pages read-only and resume
+        from its scratch snapshot; miss: cut the chunk schedule at the
+        prefix boundary and snapshot there for registration at commit),
+        assign pages, and lay out the chunk bounds."""
+        sched.reserve(slot)
+        precision = (
+            self._tier_precision(tier_index)
+            if self.autopilot_policy is not None
+            else self._precision
+        )
+        steps = self._chunk_steps_for(precision)
+        S = int(req.tokens.size)
+        # always leave >= 1 suffix token: the request's first sampled
+        # token needs the last prompt position's logits from its own
+        # chunk, even on a full-prompt prefix hit
+        Lp = (
+            min(int(req.shared_prefix_len), S - 1)
+            if (self.share_prefixes and req.shared_prefix_len > 0)
+            else 0
+        )
+        entry = (
+            registry.lookup(req.tokens[:Lp], tag=precision) if Lp else None
+        )
+        if entry is not None:
+            scratch, start, shared = entry.scratch, Lp, list(entry.page_ids)
+        else:
+            scratch = init_cache(
+                self.cfg, 1, self.max_len, self.cfg.dtype, kv_quant=False
+            )
+            start, shared = 0, []
+        c = self.prefill_chunk if self.prefill_chunk > 0 else S
+        bounds, pos = [], start
+        while pos < S:
+            nxt = min(pos + c, S)
+            if entry is None and Lp and pos < Lp:
+                nxt = min(nxt, Lp)  # miss: land a chunk edge exactly at Lp
+            bounds.append((pos, nxt))
+            pos = nxt
+        job = _PrefillJob(
+            slot=slot, req=req, steps=steps, tier_index=tier_index,
+            precision=precision, scratch=scratch, bounds=bounds,
+            from_hit=entry is not None,
+        )
+        if entry is None and Lp:
+            job.snapshot_at = next(
+                i for i, (_, b) in enumerate(bounds) if b == Lp
+            )
+            job.prefix_tokens = req.tokens[:Lp].copy()
+        if self.paged:
+            n_total = pager.pages_needed(S + req.max_new_tokens - 1)
+            job.table, job.mask = pager.assign(slot, shared, n_total)
+            if job.prefix_tokens is not None:
+                n_prefix = Lp // self.page_size
+                job.prefix_pages = tuple(
+                    int(p) for p in job.table[:n_prefix]
+                )
+        return job
+
+    def _job_step(self, job: _PrefillJob, integ) -> bool:
+        """Run the job's next chunk; True when the prefill is complete."""
+        a, b = job.bounds[job.next_i]
+        toks = jnp.asarray(job.req.tokens[a:b])[None, :]
+        job.logits, job.scratch = self._chunk_checked(
+            job.steps, job.scratch, toks, job.req.rid, integ
+        )
+        if job.next_i == job.snapshot_at:
+            job.snapshot = job.scratch
+        job.next_i += 1
+        return job.next_i >= len(job.bounds)
+
+    def _job_commit(self, job, cache, tokens, sched, pager, registry):
+        """Install the finished scratch (paged scatter or dense insert),
+        sample the first token, start the slot. Returns
+        (cache, tokens, done_now)."""
+        req, slot = job.req, job.slot
+        tok = self._first_token(job.logits, req)
+        if self.paged:
+            cache = self._commit_paged(
+                cache, job.scratch, jnp.int32(slot),
+                jnp.asarray(job.table), jnp.asarray(job.mask),
+                jnp.int32(req.tokens.size),
+            )
+            if job.prefix_tokens is not None and registry is not None:
+                registry.register(
+                    job.prefix_tokens, job.prefix_pages, job.snapshot,
+                    tag=job.precision,
+                )
+        else:
+            cache = self._commit_dense(cache, job.scratch, jnp.int32(slot))
+        tokens = tokens.at[slot, 0].set(tok)
+        done_now = sched.start(slot, req, int(tok))
+        if done_now and self.paged:
+            # clear immediately, not deferred: a same-iteration admission
+            # may reallocate the freed pages before the next flush point,
+            # and this lane's garbage decode write must land on the null
+            # page, not in the new tenant's data
+            pager.release(slot)
+            cache = self._clear_slot(cache, jnp.int32(slot))
+        return cache, tokens, done_now
 
     def _decode_pass(
         self, steps, cache, tokens, temps, key, step_i, integ, injector
@@ -786,19 +1045,75 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
 
         check = self.integrity != "off"
         scrub_mode = self.integrity == "scrub"
-        cache = init_cache(
-            self.cfg, self.n_slots, self.max_len, self.cfg.dtype,
-            kv_quant=self.kv_quant,
-        )
+        allocator = pager = registry = None
+        job: Optional[_PrefillJob] = None
+        clears: list[int] = []  # deferred null-page clears (flushed pre-admission)
+        page_faults: dict[int, int] = {}
+        prefill_chunks = 0
+        shared_hits = 0
+        if self.paged:
+            cache = paging.paged_init_cache(
+                self.cfg, self.n_slots, self.max_len, self.page_size,
+                self._kv_pages,
+            )
+            allocator = paging.PageAllocator(self._kv_pages, self.page_size)
+            pager = paging.SlotPager(
+                allocator, self.n_slots, self._pages_per_slot
+            )
+            if self.share_prefixes:
+                registry = paging.PrefixRegistry(allocator)
+            self._page_nbytes = paging.page_nbytes(cache)
+
+            def _capacity(req: Request) -> bool:
+                # free-PAGE admission gate: the ask is the request's full
+                # extent minus whatever a registry hit would map shared;
+                # under pressure, evict cold registry entries (their
+                # pages free once no live slot also maps them)
+                S = int(req.tokens.size)
+                need = pager.pages_needed(S + req.max_new_tokens - 1)
+                protect = None
+                if self.share_prefixes and req.shared_prefix_len > 0:
+                    Lp = min(int(req.shared_prefix_len), S - 1)
+                    if Lp:
+                        prec = (
+                            self._tier_precision(ap.tier_index)
+                            if ap is not None
+                            else self._precision
+                        )
+                        protect = registry.key(req.tokens[:Lp], tag=prec)
+                        hit = registry.peek(req.tokens[:Lp], tag=prec)
+                        if hit is not None:
+                            need -= len(hit.page_ids)
+                while (
+                    allocator.free_pages < need
+                    and registry is not None
+                    and registry.evict_oldest(protect)
+                ):
+                    pass
+                return allocator.free_pages >= need
+        else:
+            cache = init_cache(
+                self.cfg, self.n_slots, self.max_len, self.cfg.dtype,
+                kv_quant=self.kv_quant,
+            )
+            _capacity = None
         tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         kv_bytes = cache_kv_bytes(cache)
-        kv_ref = np.asarray(self._slot_fp(cache)) if check else None
+        if not check:
+            kv_ref = None
+        elif self.paged:
+            kv_ref = tuple(np.asarray(x) for x in self._paged_fp(cache))
+        else:
+            kv_ref = np.asarray(self._slot_fp(cache))
         integ = {
             "audits": 0, "audit_alarms": 0,
             "abft_checks": 0, "abft_alarms": 0,
             "kv_checks": 0, "kv_alarms": 0,
             "step_retries": 0, "requeued": 0, "quarantined": 0,
         }
+        if self.paged:
+            integ["page_faults"] = 0
+            integ["pages_quarantined"] = 0
         slot_faults: dict[int, int] = {}
         scrubs0 = self._scrubs
         ap = (
@@ -818,10 +1133,22 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         decode_steps = 0
         decoded_tokens = 0
         switches = []
+        # Per-iteration wall time *including* admission/prefill work, for
+        # iterations that emitted decode tokens: the inter-token latency an
+        # active request experiences. A monolithic prefill stalls the whole
+        # iteration; chunked prefill bounds the stall to one chunk — the
+        # decode-p99 isolation the paged_serving bench gates (DESIGN.md §12).
+        decode_iter_lat: deque = deque(maxlen=HISTORY_LIMIT)
         t0 = time.time()
-        while not sched.done:
+        while not sched.done or job is not None:
+            t_iter = time.time()
+            pre_expire = set(sched.active_slots) if self.paged else set()
             sched.expire(step_i)
             active_now = set(sched.active_slots)
+            if self.paged:
+                for s_ in pre_expire - active_now:
+                    pager.release(s_)
+                    clears.append(s_)
             slot_tier = {s: t for s, t in slot_tier.items() if s in active_now}
             if not sched.servable:
                 for rid in sched.pending_rids:
@@ -845,23 +1172,96 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                             injector.mark_detected("params", step_i)
                         if scrub_mode:
                             self._scrub()
-                sums = np.asarray(self._slot_fp(cache))
-                integ["kv_checks"] += 1
-                bad_slots = np.flatnonzero(sums != kv_ref).tolist()
-                if bad_slots:
-                    integ["kv_alarms"] += len(bad_slots)
-                    if injector is not None:
-                        injector.mark_detected("kv", step_i)
-                    if scrub_mode:
-                        self._contain_kv(
-                            sched, bad_slots, slot_faults, step_i, integ
-                        )
-                        active_now = set(sched.active_slots)
-                        slot_tier = {
-                            s: t for s, t in slot_tier.items() if s in active_now
-                        }
-                    kv_ref = sums  # re-baseline (corrupt extents are dead:
-                    # their tenants were requeued; readmission overwrites)
+                if self.paged:
+                    sums = tuple(np.asarray(x) for x in self._paged_fp(cache))
+                    integ["kv_checks"] += 1
+                    bad_pages = [
+                        int(p)
+                        for p in np.flatnonzero(sums[0] != kv_ref[0])
+                        if p != 0  # null page: free lanes scatter there
+                    ]
+                    bad_meta = np.flatnonzero(sums[1] != kv_ref[1]).tolist()
+                    if bad_pages or bad_meta:
+                        integ["kv_alarms"] += len(bad_pages) + len(bad_meta)
+                        if injector is not None:
+                            injector.mark_detected("kv", step_i)
+                        if scrub_mode:
+                            # page -> holders: requeue live tenants, drop
+                            # registry entries, quarantine repeat offenders
+                            affected = set(bad_meta)
+                            for pid in bad_pages:
+                                integ["page_faults"] += 1
+                                page_faults[pid] = page_faults.get(pid, 0) + 1
+                                if registry is not None:
+                                    registry.drop_page(pid)
+                                affected.update(pager.slots_holding(pid))
+                                if page_faults[pid] >= self.quarantine_after:
+                                    allocator.quarantine(pid)
+                                    integ["pages_quarantined"] += 1
+                            if job is not None and job.slot in affected:
+                                affected.discard(job.slot)
+                                # a fault on a page the job merely MAPS
+                                # (shared prefix) poisons data it will
+                                # decode against — abort and resubmit; a
+                                # fault on an OWNED page is overwritten
+                                # wholesale by the commit scatter
+                                shared_held = set(pager.pages(job.slot)) - set(
+                                    pager.owned_pages(job.slot)
+                                )
+                                if shared_held & set(bad_pages):
+                                    jslot = job.slot
+                                    slot_faults[jslot] = (
+                                        slot_faults.get(jslot, 0) + 1
+                                    )
+                                    backoff = 1 << min(slot_faults[jslot], 4)
+                                    pager.release(jslot)
+                                    clears.append(jslot)
+                                    sched.unreserve(jslot)
+                                    rid = sched.resubmit(
+                                        job.req, step_i + backoff
+                                    )
+                                    integ["requeued"] += 1
+                                    if sched.retries(rid) > self.max_retries:
+                                        sched.drop_pending(
+                                            rid,
+                                            "retry budget exhausted: "
+                                            f"{sched.retries(rid)} KV faults "
+                                            f"on request {rid}",
+                                        )
+                                    job = None
+                            self._contain_kv(
+                                sched, sorted(affected), slot_faults,
+                                step_i, integ,
+                            )
+                            for s_ in active_now - set(sched.active_slots):
+                                pager.release(s_)
+                                clears.append(s_)
+                            active_now = set(sched.active_slots)
+                            slot_tier = {
+                                s: t for s, t in slot_tier.items()
+                                if s in active_now
+                            }
+                        kv_ref = sums  # re-baseline: corrupt pages are dead
+                        # (tenants requeued, registry entries dropped)
+                else:
+                    sums = np.asarray(self._slot_fp(cache))
+                    integ["kv_checks"] += 1
+                    bad_slots = np.flatnonzero(sums != kv_ref).tolist()
+                    if bad_slots:
+                        integ["kv_alarms"] += len(bad_slots)
+                        if injector is not None:
+                            injector.mark_detected("kv", step_i)
+                        if scrub_mode:
+                            self._contain_kv(
+                                sched, bad_slots, slot_faults, step_i, integ
+                            )
+                            active_now = set(sched.active_slots)
+                            slot_tier = {
+                                s: t for s, t in slot_tier.items()
+                                if s in active_now
+                            }
+                        kv_ref = sums  # re-baseline (corrupt extents are dead:
+                        # their tenants were requeued; readmission overwrites)
             decision = None
             if ap is not None:
                 decision = ap.observe(
@@ -909,26 +1309,94 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                             f"overload: shed from queue tail at step "
                             f"{step_i} (autopilot, tier w{ap.tier[1]})",
                         )
-            for slot, req in sched.admissible(step_i):
-                # tier is a per-request contract fixed at admission: the
-                # prefill AND every decode step run at this tier, across
-                # any later controller transitions
-                tier_steps = (
-                    self._steps_for(self._tier_precision(ap.tier_index))
-                    if ap is not None
-                    else None
-                )
-                logits, seq_cache = self._prefill_checked(
-                    req, integ if check else None, steps=tier_steps
-                )
-                tok = self._first_token(logits, req)
-                cache = self._insert(cache, seq_cache, jnp.int32(slot))
-                tokens = tokens.at[slot, 0].set(tok)
-                done_now = sched.start(slot, req, int(tok))
-                if ap is not None:
-                    request_tiers[req.rid] = ap.tier
-                    if not done_now:
-                        slot_tier[slot] = ap.tier_index
+            if self._staged:
+                # flush deferred clears BEFORE admission: pages released
+                # since the last flush may be reallocated and committed
+                # into right below, and the releasing slot's table must
+                # point at the null page before that happens
+                for s_ in clears:
+                    cache = self._clear_slot(cache, jnp.int32(s_))
+                clears.clear()
+                if (
+                    job is not None
+                    and job.req.deadline_step is not None
+                    and step_i >= job.req.deadline_step
+                ):
+                    if self.paged:
+                        pager.release(job.slot)
+                        clears.append(job.slot)
+                    sched.unreserve(job.slot)
+                    sched.fail(
+                        job.req.rid,
+                        f"deadline: staged prefill expired at step {step_i}",
+                    )
+                    job = None
+                if job is None:
+                    for slot, req in sched.admissible(
+                        step_i, capacity=_capacity
+                    ):
+                        # tier is a per-request contract fixed at
+                        # admission, like the dense path
+                        tier_index = ap.tier_index if ap is not None else 0
+                        job = self._open_job(
+                            slot, req, sched, pager, registry, tier_index
+                        )
+                        shared_hits += int(job.from_hit)
+                        if self.prefill_chunk > 0:
+                            # chunked: ONE job in flight, one chunk per
+                            # engine iteration — decode keeps its cadence
+                            # while the prefill burst drains in slices
+                            break
+                        # monolithic staging: run to completion now, so
+                        # admission timing matches the dense engine
+                        done = False
+                        while not done:
+                            done = self._job_step(job, integ)
+                            prefill_chunks += 1
+                        cache, tokens, done_now = self._job_commit(
+                            job, cache, tokens, sched, pager, registry
+                        )
+                        if ap is not None:
+                            request_tiers[job.req.rid] = self._tiers[
+                                job.tier_index
+                            ]
+                            if not done_now:
+                                slot_tier[job.slot] = job.tier_index
+                        job = None
+                if job is not None:
+                    if self._job_step(job, integ):
+                        cache, tokens, done_now = self._job_commit(
+                            job, cache, tokens, sched, pager, registry
+                        )
+                        if ap is not None:
+                            request_tiers[job.req.rid] = self._tiers[
+                                job.tier_index
+                            ]
+                            if not done_now:
+                                slot_tier[job.slot] = job.tier_index
+                        job = None
+                    prefill_chunks += 1
+            else:
+                for slot, req in sched.admissible(step_i):
+                    # tier is a per-request contract fixed at admission:
+                    # the prefill AND every decode step run at this tier,
+                    # across any later controller transitions
+                    tier_steps = (
+                        self._steps_for(self._tier_precision(ap.tier_index))
+                        if ap is not None
+                        else None
+                    )
+                    logits, seq_cache = self._prefill_checked(
+                        req, integ if check else None, steps=tier_steps
+                    )
+                    tok = self._first_token(logits, req)
+                    cache = self._insert(cache, seq_cache, jnp.int32(slot))
+                    tokens = tokens.at[slot, 0].set(tok)
+                    done_now = sched.start(slot, req, int(tok))
+                    if ap is not None:
+                        request_tiers[req.rid] = ap.tier
+                        if not done_now:
+                            slot_tier[slot] = ap.tier_index
             if sched.active_slots:
                 t_step = time.time()
                 key = jax.random.fold_in(self._decode_key, step_i)
@@ -962,7 +1430,20 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                                 mask_np[s_] = True
                         mask = jnp.asarray(mask_np)
                         ntok = jnp.where(mask[:, None], tok_t, ntok)
-                        ncache = self._select(ncache, cache_t, mask)
+                        if self.paged:
+                            # pool leaves merge per PHYSICAL page: take
+                            # this tier's writes only on pages owned by
+                            # its slots (decode never writes shared pages)
+                            pmask_np = np.zeros((self._kv_pages,), bool)
+                            for s_ in active:
+                                if slot_tier.get(s_, 0) == ti:
+                                    for pid in pager.owned_pages(s_):
+                                        pmask_np[pid] = True
+                            ncache = self._select_paged(
+                                ncache, cache_t, mask, jnp.asarray(pmask_np)
+                            )
+                        else:
+                            ncache = self._select(ncache, cache_t, mask)
                     frac = ap.policy.shadow_frac
                     if (
                         frac > 0.0
@@ -981,11 +1462,17 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                     if ap is not None:
                         ti = slot_tier.get(slot, 0)
                         tier_tokens[ti] = tier_tokens.get(ti, 0) + 1
-                    sched.record(slot, int(toks_np[slot]))
+                    evicted = sched.record(slot, int(toks_np[slot]))
                     decoded_tokens += 1
+                    if evicted and self.paged:
+                        # free the pages now (host-side); the device-side
+                        # null-page clear flushes before the next admission
+                        pager.release(slot)
+                        clears.append(slot)
                 last_latency = time.time() - t_step
                 last_emitted = len(active)
                 sched.observe_step(step_i, last_latency)
+                decode_iter_lat.append(time.time() - t_iter)
                 decode_steps += 1
                 step_i += 1
             else:
@@ -994,9 +1481,17 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
                 last_latency = float("nan")
                 last_emitted = 0
                 nxt = sched.next_arrival()
-                step_i = step_i + 1 if nxt is None else max(nxt, step_i + 1)
+                if job is not None:
+                    # a staged prefill is progressing: no idle fast-forward
+                    # (it would burn the job's deadline on skipped steps)
+                    step_i += 1
+                else:
+                    step_i = step_i + 1 if nxt is None else max(nxt, step_i + 1)
             if check and self.audit_interval:
-                kv_ref = np.asarray(self._slot_fp(cache))
+                if self.paged:
+                    kv_ref = tuple(np.asarray(x) for x in self._paged_fp(cache))
+                else:
+                    kv_ref = np.asarray(self._slot_fp(cache))
         jax.block_until_ready(tokens)
         wall = max(time.time() - t0, 1e-9)
         s = sched.stats()
@@ -1016,11 +1511,39 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
             "peak_occupancy": s.peak_occupancy,
             "queue_steps": s.queue_steps,
             "p99_queue_steps": p99_wait,
+            # inter-token latency seen by active requests: per-iteration
+            # wall incl. any prefill work the iteration absorbed
+            "decode_iter_p99_ms": (
+                float(np.percentile(np.asarray(decode_iter_lat), 99)) * 1e3
+                if decode_iter_lat else 0.0
+            ),
             "precision_switches": switches,
             "failed": dict(sched.failed),
             "requeued": s.requeued,
             "quarantined_slots": sorted(sched.quarantined_slots),
         }
+        if self._staged:
+            stats["prefill_chunks"] = prefill_chunks
+        if self.paged:
+            stats["paging"] = {
+                "page_size": self.page_size,
+                "kv_pages": self._kv_pages,
+                "pages_per_slot": self._pages_per_slot,
+                "page_nbytes": self._page_nbytes,
+                "peak_used_pages": allocator.peak_used,
+                # the gated residency metric: bytes of pages ever live at
+                # once — what dense serving would hold is n_slots *
+                # pages_per_slot regardless of prompt length or sharing
+                "kv_bytes_resident_peak": (
+                    allocator.peak_used * self._page_nbytes
+                ),
+                "shared_prefix_hits": shared_hits,
+                "prefix_entries": len(registry) if registry is not None else 0,
+                "prefix_evictions": (
+                    registry.evictions if registry is not None else 0
+                ),
+                "quarantined_pages": allocator.quarantined_pages,
+            }
         if check:
             integ["mode"] = self.integrity
             integ["scrubs"] = self._scrubs - scrubs0
@@ -1141,6 +1664,30 @@ def build_parser() -> argparse.ArgumentParser:
                     "Needs P devices (CI: XLA_FLAGS="
                     "--xla_force_host_platform_device_count=8), --bits in "
                     "[1,8], head counts divisible by P; --mode cb only")
+    ap.add_argument("--kv-page-size", type=int, default=0, metavar="POS",
+                    help="paged KV cache (DESIGN.md §12): store KV in "
+                    "fixed-size pages of POS positions with per-slot block "
+                    "tables instead of dense per-slot extents; admission "
+                    "checks free-page capacity and residency scales with "
+                    "actual tokens, not worst-case max_len (0 = dense; "
+                    "--mode cb only, needs int8 KV)")
+    ap.add_argument("--kv-pages", type=int, default=None, metavar="N",
+                    help="physical page-pool size (default: enough for "
+                    "every slot's full extent plus the null page); smaller "
+                    "pools admit by free-page capacity")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="TOKENS",
+                    help="chunked prefill: stage each admission's prefill "
+                    "in fixed TOKENS-sized chunks interleaved with decode "
+                    "steps, isolating decode p99 from prefill bursts "
+                    "(0 = monolithic; --mode cb only)")
+    ap.add_argument("--share-prefixes", action="store_true",
+                    help="copy-on-write shared-prefix reuse: requests "
+                    "declaring a byte-identical prompt prefix map the same "
+                    "physical KV pages read-only and resume prefill from "
+                    "the registered snapshot (needs --kv-page-size)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0, metavar="N",
+                    help="synthetic workload: give every request the same "
+                    "first N prompt tokens and declare them shared")
     ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
                     help="per-request deadline: fail any request not "
                     "finished within STEPS engine iterations of its "
@@ -1254,6 +1801,29 @@ def validate_args(args) -> None:
                 "the lockstep engine has no scheduler to evict from")
         if args.deadline < 1:
             die("--deadline must be >= 1 engine step")
+    if args.kv_page_size < 0:
+        die("--kv-page-size must be >= 0 (0 = dense KV)")
+    if args.prefill_chunk < 0:
+        die("--prefill-chunk must be >= 0 (0 = monolithic prefill)")
+    if args.kv_page_size:
+        if args.mode == "lockstep":
+            die("--kv-page-size drives the continuous-batching engine "
+                "(--mode cb): the lockstep engine has no slots to page")
+        if args.no_kv_quant:
+            die("--kv-page-size needs int8 KV (drop --no-kv-quant): pages "
+                "hold int8 values plus their scale vectors")
+    if args.kv_pages is not None:
+        if not args.kv_page_size:
+            die("--kv-pages needs --kv-page-size (paged KV)")
+        if args.kv_pages < 2:
+            die("--kv-pages must be >= 2 (page 0 is the reserved null page)")
+    if args.prefill_chunk and args.mode == "lockstep":
+        die("--prefill-chunk is a continuous-batching feature (--mode cb)")
+    if args.share_prefixes and not args.kv_page_size:
+        die("--share-prefixes needs --kv-page-size: physical pages are "
+            "the sharing unit")
+    if args.shared_prefix_len < 0:
+        die("--shared-prefix-len must be >= 0")
     if args.audit_interval < 0:
         die("--audit-interval must be >= 0")
     if args.sparsity != "off" and args.level != "bitplane":
@@ -1343,8 +1913,17 @@ def main():
         if args.prompt_lens
         else [args.prompt_len]
     )
+    if args.shared_prefix_len and args.shared_prefix_len >= min(lens):
+        raise SystemExit(
+            f"[serve] invalid flags: --shared-prefix-len "
+            f"{args.shared_prefix_len} must be shorter than every prompt "
+            f"length (min {min(lens)})"
+        )
     n_slots = args.n_slots or args.batch
     max_len = max(lens) + args.gen
+    if args.kv_page_size:
+        # round up to a whole number of pages (paged_init_cache requires it)
+        max_len = -(-max_len // args.kv_page_size) * args.kv_page_size
     ap_policy = (
         AutopilotPolicy(
             sla_ms=args.sla_ms,
@@ -1362,21 +1941,41 @@ def main():
         audit_interval=args.audit_interval,
         autopilot=ap_policy,
         model_parallel=args.model_parallel,
+        page_size=args.kv_page_size,
+        kv_pages=args.kv_pages,
+        prefill_chunk=args.prefill_chunk,
+        share_prefixes=args.share_prefixes,
     )
     if args.model_parallel > 1:
         tag += f" tp={args.model_parallel}"
+    if args.kv_page_size:
+        tag += f" paged/{args.kv_page_size}"
     if args.precision:
         engine.set_precision(args.precision)
+    prefix = (
+        rng.integers(0, cfg.vocab_size, (args.shared_prefix_len,))
+        if args.shared_prefix_len
+        else None
+    )
+
+    def _prompt(s):
+        if prefix is None:
+            return rng.integers(0, cfg.vocab_size, (s,))
+        return np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size, (s - prefix.size,))]
+        )
+
     requests = [
         Request(
             rid=i,
-            tokens=rng.integers(0, cfg.vocab_size, (s,)),
+            tokens=_prompt(s),
             max_new_tokens=args.gen,
             temperature=args.temperature,
             arrival_step=i * args.stagger,
             deadline_step=(
                 i * args.stagger + args.deadline if args.deadline else None
             ),
+            shared_prefix_len=args.shared_prefix_len,
         )
         for i, s in enumerate(lens)
     ]
@@ -1399,6 +1998,15 @@ def main():
         f"slot util {stats['slot_utilization']:.2f}, "
         f"kv cache {stats['kv_cache_bytes'] / 1024:.1f} KiB"
     )
+    if "paging" in stats:
+        pg = stats["paging"]
+        print(
+            f"[serve] paging: {pg['kv_pages']} pages x {pg['page_size']} pos, "
+            f"peak {pg['peak_used_pages']} pages resident "
+            f"({pg['kv_bytes_resident_peak'] / 1024:.1f} KiB), "
+            f"{pg['shared_prefix_hits']} shared-prefix hits, "
+            f"{stats.get('prefill_chunks', 0)} prefill chunks"
+        )
     for step_i, prec in stats["precision_switches"]:
         print(f"[serve] precision switch at decode step {step_i}: -> {prec}")
     if "autopilot" in stats:

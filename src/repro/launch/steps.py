@@ -147,7 +147,16 @@ def make_prefill_step(
 
     ``collector`` (an :class:`repro.core.integrity.Collector`): run the
     forward under ABFT alarm collection — the step returns a third output,
-    the (n_checks,) bool alarm vector (see :func:`_collected`)."""
+    the (n_checks,) bool alarm vector (see :func:`_collected`).
+
+    With ``kv_quant`` the forward runs against a **raw** bf16 cache and
+    quantizes once at the end (``models.paging.quantize_scratch``) rather
+    than quantizing on store: the compiled prefill program is then the
+    *same* program chunked prefill runs per chunk, which is what makes a
+    chunk schedule and a monolithic launch emit bit-identical logits and
+    committed KV bytes (DESIGN.md §12)."""
+    from repro.models.paging import quantize_scratch
+
     policy = _dial(policy, precision)
 
     def prefill_step(params, batch):
@@ -158,7 +167,7 @@ def make_prefill_step(
             if cfg.frontend == "vision" and "patches" in batch:
                 s += batch["patches"].shape[1]
         cache = (
-            init_cache(cfg, bsz, max_len or s, cfg.dtype, kv_quant=kv_quant)
+            init_cache(cfg, bsz, max_len or s, cfg.dtype, kv_quant=False)
             if cfg.is_decoder
             else None
         )
@@ -170,11 +179,50 @@ def make_prefill_step(
             )
 
         (logits, _aux, cache), alarms = _collected(collector, body)
+        if kv_quant and cache is not None:
+            cache = quantize_scratch(cache)
         if collector is None:
             return logits[:, -1, :], cache
         return logits[:, -1, :], cache, alarms
 
     return prefill_step
+
+
+def make_chunk_prefill_step(
+    cfg: ModelConfig,
+    policy=None,
+    precision: Optional[Tuple[int, int]] = None,
+    collector=None,
+):
+    """One chunked-prefill stage: chunk_step(params, scratch, tokens) ->
+    (last_logits, scratch[, alarms]).
+
+    Appends ``tokens`` (1, C) to a **raw** bf16 scratch cache
+    (``init_cache(cfg, 1, max_len, kv_quant=False)``) at its running
+    length and attends the whole written extent — the same compiled
+    program as :func:`make_prefill_step`'s forward, so any chunk schedule
+    reproduces the monolithic prefill bit for bit. jit re-specializes per
+    distinct chunk length, exactly like per-prompt-length prefill.
+    Quantization happens once at commit (``models.paging``), never here.
+
+    The scratch must NOT be jit-donated: shared-prefix registry entries
+    hold snapshots of earlier chunk states (DESIGN.md §12).
+    """
+    policy = _dial(policy, precision)
+
+    def chunk_step(params, scratch, tokens):
+        def body():
+            return forward(
+                cfg, params, {"tokens": tokens}, policy=policy,
+                cache=scratch, last_only=True,
+            )
+
+        (logits, _aux, scratch_out), alarms = _collected(collector, body)
+        if collector is None:
+            return logits[:, -1, :], scratch_out
+        return logits[:, -1, :], scratch_out, alarms
+
+    return chunk_step
 
 
 def make_decode_step(cfg: ModelConfig, policy=None, precision: Optional[Tuple[int, int]] = None):
@@ -284,6 +332,43 @@ def make_tp_prefill_step(
     return _tp_shard_map(body, tp, (param_specs, P()), out_specs)
 
 
+def make_tp_chunk_prefill_step(
+    cfg: ModelConfig,
+    tp,
+    param_specs,
+    policy=None,
+    max_len: Optional[int] = None,
+    precision: Optional[Tuple[int, int]] = None,
+    collector=None,
+):
+    """Tensor-parallel :func:`make_chunk_prefill_step`: the raw batch-1
+    scratch rides through head-sharded like any KV tree (its k/v leaves
+    map through ``tp.cache_specs`` by name); logits replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    local_cfg = tp.local_config(cfg)
+    inner = make_chunk_prefill_step(
+        local_cfg, policy=policy, precision=precision, collector=collector
+    )
+    scratch_specs = tp.cache_specs(
+        jax.eval_shape(
+            lambda: init_cache(cfg, 1, max_len or 8, cfg.dtype, kv_quant=False)
+        )
+    )
+
+    def body(params, scratch, tokens):
+        local = tp.localize(params, param_specs)
+        with tp.scope():
+            out = inner(local, scratch, tokens)
+        if collector is None:
+            return out
+        logits, scratch_out, alarms = out
+        return logits, scratch_out, tp.reduce_alarms(alarms)
+
+    out_specs = (P(), scratch_specs) + ((P(),) if collector is not None else ())
+    return _tp_shard_map(body, tp, (param_specs, scratch_specs, P()), out_specs)
+
+
 def make_tp_cb_decode_step(
     cfg: ModelConfig,
     tp,
@@ -295,6 +380,7 @@ def make_tp_cb_decode_step(
     precision: Optional[Tuple[int, int]] = None,
     collector=None,
     with_logits: bool = False,
+    cache_template=None,
 ):
     """Tensor-parallel :func:`make_cb_decode_step`: cb_step(params, cache,
     tokens, temps, key) under ``shard_map`` over ``tp.mesh``.
@@ -305,6 +391,13 @@ def make_tp_cb_decode_step(
     redundantly and bit-identically on every shard from the replicated
     post-psum logits, so the returned tokens are replicated without a
     collective. See DESIGN.md §11.
+
+    ``cache_template``: zero-arg callable building the cache tree the
+    step will carry (its eval-shape feeds ``tp.cache_specs``); overrides
+    the dense ``init_cache`` template — the paged engine passes
+    ``models.paging.paged_init_cache`` here, whose pool/scale leaves
+    shard head-parallel by the same leaf-name rules and whose block
+    tables replicate (DESIGN.md §12).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -313,13 +406,10 @@ def make_tp_cb_decode_step(
         local_cfg, policy=policy, precision=precision, collector=collector,
         with_logits=with_logits,
     )
-    cache_specs = tp.cache_specs(
-        jax.eval_shape(
-            lambda: init_cache(
-                cfg, n_slots, max_len or 8, cfg.dtype, kv_quant=kv_quant
-            )
-        )
+    template = cache_template or (
+        lambda: init_cache(cfg, n_slots, max_len or 8, cfg.dtype, kv_quant=kv_quant)
     )
+    cache_specs = tp.cache_specs(jax.eval_shape(template))
 
     def body(params, cache, tokens, temps, key):
         local = tp.localize(params, param_specs)

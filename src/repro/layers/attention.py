@@ -279,7 +279,42 @@ def attention_apply(
         v = constrain(v, ("batch", None, None, None))
 
     new_cache = cache
-    if cache is not None and s == 1:  # decode step
+    if cache is not None and s == 1 and "block_table" in cache:  # paged decode
+        # Block-table indirection (DESIGN.md §12): each slot's KV lives in
+        # fixed-size pages of shared pools; the table row maps logical page
+        # index -> physical page. The append scatters one (position, head)
+        # vector into the slot's current page; the gather materializes the
+        # same (B, S_max, Hkv, D) per-slot view the dense cache stores, so
+        # the decode reduction grid — and every emitted token — is
+        # bit-identical to the dense engine. Freed slots are cleared to the
+        # null page 0 (models/paging.py), so their garbage lane writes can
+        # never land on a page since reallocated to another tenant.
+        bt = cache["block_table"]  # (B, P) int32
+        ps = cache["k_q"].shape[1]
+        pos = cache["len"]
+        phys = jnp.take_along_axis(bt, (pos // ps)[:, None], axis=1)[:, 0]
+        row = pos % ps
+        k_new, ks_new = quantize_kv(k)
+        v_new, vs_new = quantize_kv(v)
+        k_pool = cache["k_q"].at[phys, row].set(k_new[:, 0])
+        v_pool = cache["v_q"].at[phys, row].set(v_new[:, 0])
+        ks_pool = cache["k_scale"].at[phys, row].set(ks_new[:, 0])
+        vs_pool = cache["v_scale"].at[phys, row].set(vs_new[:, 0])
+        b_, p_ = bt.shape
+        s_max = p_ * ps
+        gather = lambda pool: pool[bt].reshape(b_, s_max, *pool.shape[2:])
+        kv_len = pos + 1
+        valid = jnp.arange(s_max)[None, :] < kv_len[:, None]
+        out = _decode_gqa(
+            q, gather(k_pool), gather(v_pool), valid,
+            gather(ks_pool), gather(vs_pool),
+        )
+        new_cache = {
+            "k_q": k_pool, "k_scale": ks_pool,
+            "v_q": v_pool, "v_scale": vs_pool,
+            "block_table": bt, "len": kv_len,
+        }
+    elif cache is not None and s == 1:  # decode step
         quantized = "k_q" in cache
         pos = cache["len"]  # (B,) int32 per-slot: tokens already generated
         s_max = (cache["k_q"] if quantized else cache["k"]).shape[1]
@@ -320,33 +355,82 @@ def attention_apply(
             out = _decode_gqa(q, k_cache, v_cache, valid)
             new_cache = {"k": k_cache, "v": v_cache, "len": kv_len}
     else:
+        # Prefill (with or without a cache). When filling a full-attention
+        # cache, attention runs over the cache's whole extent under a
+        # kv-length mask rather than over the raw in-chunk K/V: chunked
+        # prefill appends each chunk at the running length and reads the
+        # earlier chunks back, and the monolithic path masks to the same
+        # grid — one shared reduction schedule, so a chunk schedule and a
+        # single launch emit bit-identical logits (DESIGN.md §12). Masked
+        # tail rows contribute exp(NEG_INF - m) == 0.0 exactly.
+        readback = None
         if cache is not None:  # prefill into cache
+            if "block_table" in cache:
+                raise ValueError(
+                    "paged caches are decode-only: prefill runs against a raw "
+                    "scratch cache and commits via models.paging.paged_commit"
+                )
             quantized = "k_q" in cache
             s_max = (cache["k_q"] if quantized else cache["k"]).shape[1]
-            kw, vw = k, v
-            if s > s_max:  # windowed ring cache: keep only the last s_max
-                kw, vw = k[:, -s_max:], v[:, -s_max:]
-            new_len = jnp.full((b,), s, jnp.int32)
-            if quantized:
-                kq, ks = quantize_kv(kw)
-                vq, vs = quantize_kv(vw)
+            if window or s > s_max:
+                # windowed ring caches (and oversize prompts) keep only the
+                # trailing extent; attention stays on the raw in-chunk K/V
+                kw, vw = k, v
+                if s > s_max:
+                    kw, vw = k[:, -s_max:], v[:, -s_max:]
+                new_len = jnp.full((b,), s, jnp.int32)
+                if quantized:
+                    kq, ks = quantize_kv(kw)
+                    vq, vs = quantize_kv(vw)
+                    new_cache = {
+                        "k_q": lax.dynamic_update_slice(cache["k_q"], kq, (0, 0, 0, 0)),
+                        "k_scale": lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, 0)),
+                        "v_q": lax.dynamic_update_slice(cache["v_q"], vq, (0, 0, 0, 0)),
+                        "v_scale": lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, 0)),
+                        "len": new_len,
+                    }
+                else:
+                    k_cache = lax.dynamic_update_slice(
+                        cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
+                    )
+                    v_cache = lax.dynamic_update_slice(
+                        cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
+                    )
+                    new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+            elif quantized:
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
                 new_cache = {
                     "k_q": lax.dynamic_update_slice(cache["k_q"], kq, (0, 0, 0, 0)),
                     "k_scale": lax.dynamic_update_slice(cache["k_scale"], ks, (0, 0, 0)),
                     "v_q": lax.dynamic_update_slice(cache["v_q"], vq, (0, 0, 0, 0)),
                     "v_scale": lax.dynamic_update_slice(cache["v_scale"], vs, (0, 0, 0)),
-                    "len": new_len,
+                    "len": jnp.full((b,), s, jnp.int32),
                 }
+                # attend the raw (unquantized) K/V zero-padded to the cache
+                # extent — same grid as the raw-scratch readback below
+                pad = ((0, 0), (0, s_max - s), (0, 0), (0, 0))
+                readback = (jnp.pad(k, pad), jnp.pad(v, pad), 0, s)
             else:
+                # raw scratch: append this chunk at the running per-slot
+                # length (zero for a fresh cache, i.e. monolithic prefill)
+                off = cache["len"][0]
                 k_cache = lax.dynamic_update_slice(
-                    cache["k"], kw.astype(cache["k"].dtype), (0, 0, 0, 0)
+                    cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0)
                 )
                 v_cache = lax.dynamic_update_slice(
-                    cache["v"], vw.astype(cache["v"].dtype), (0, 0, 0, 0)
+                    cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0)
                 )
-                new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+                new_cache = {"k": k_cache, "v": v_cache, "len": cache["len"] + s}
+                readback = (k_cache, v_cache, off, off + s)
         if window:
             out = _local_gqa(q, k, v, window=window)
+        elif readback is not None:
+            kf, vf, qo, klen = readback
+            out = _chunked_gqa(
+                q, kf.astype(q.dtype), vf.astype(q.dtype),
+                causal=causal, chunk=chunk, q_offset=qo, kv_len=klen,
+            )
         else:
             out = _chunked_gqa(q, k, v, causal=causal, chunk=chunk, q_offset=0)
 

@@ -158,6 +158,43 @@ def init_cache(
     return {"step": step, "periods": periods, "tail": tail}
 
 
+def _check_seq_cache(cache, seq_cache):
+    """Fail fast, naming the offending leaf, when a seq cache cannot be
+    scattered into a slot cache — a structure or shape mismatch (wrong
+    ``max_len``/``kv_quant``/config) otherwise surfaces deep inside
+    ``tree_map`` as a cryptic tree-structure or XLA shape error."""
+    import jax
+
+    def leaves(tree):
+        return {
+            jax.tree_util.keystr(path): leaf
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+        }
+
+    slot_leaves, seq_leaves = leaves(cache), leaves(seq_cache)
+    missing = sorted(set(slot_leaves) - set(seq_leaves))
+    extra = sorted(set(seq_leaves) - set(slot_leaves))
+    if missing or extra:
+        raise ValueError(
+            "insert_slot: seq-cache tree does not match the slot cache "
+            f"(missing leaves: {missing or 'none'}; unexpected leaves: "
+            f"{extra or 'none'}) — both caches must come from the same "
+            "init_cache configuration (same layer kinds and kv_quant)"
+        )
+    for key, slot_leaf in slot_leaves.items():
+        seq_leaf = seq_leaves[key]
+        if len(seq_leaf.shape) != len(slot_leaf.shape) or any(
+            s > c for s, c in zip(seq_leaf.shape, slot_leaf.shape)
+        ):
+            raise ValueError(
+                f"insert_slot: leaf {key} has seq-cache shape "
+                f"{tuple(seq_leaf.shape)}, which does not fit slot-cache "
+                f"shape {tuple(slot_leaf.shape)} — same rank with every "
+                "extent <= the slot cache's is required (check max_len "
+                "and batch)"
+            )
+
+
 def insert_slot(cache, seq_cache, slot):
     """Scatter a batch-1 sequence cache into slot ``slot`` of a slot cache.
 
@@ -174,6 +211,8 @@ def insert_slot(cache, seq_cache, slot):
     slot).
     """
     import jax
+
+    _check_seq_cache(cache, seq_cache)
 
     def upd(axis):
         def one(g, p):

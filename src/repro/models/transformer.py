@@ -251,6 +251,13 @@ def _embed_inputs(cfg: ModelConfig, params, batch, *, policy, training, cache):
         s = x.shape[1]
     if cache is not None and s == 1:  # decode: per-slot positions
         positions = cache["step"][:, None].astype(jnp.int32)
+    elif cache is not None:
+        # prefill-with-cache: continue from the running per-slot offset
+        # (zero for a fresh cache, so monolithic prefill is the special
+        # case; chunked prefill appends successive chunks)
+        positions = cache["step"][:, None].astype(jnp.int32) + jnp.arange(
+            s, dtype=jnp.int32
+        )[None, :]
     else:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     return x, positions
@@ -296,11 +303,9 @@ def forward(
             new_layer_caches.append(nc)
         new_cache = None
         if cache is not None:
-            step = (
-                cache["step"] + 1
-                if x.shape[1] == 1
-                else jnp.full((x.shape[0],), x.shape[1], jnp.int32)
-            )
+            # decode advances by 1, prefill by the chunk length — always
+            # from the running offset (zero for a fresh cache)
+            step = cache["step"] + x.shape[1]
             new_cache = {"step": step, "layers": new_layer_caches}
     else:
         period = cfg.period if cfg.period else (kinds[0],)
@@ -436,11 +441,9 @@ def forward(
 
         new_cache = None
         if cache is not None:
-            step = (
-                cache["step"] + 1
-                if x.shape[1] == 1
-                else jnp.full((x.shape[0],), x.shape[1], jnp.int32)
-            )
+            # decode advances by 1, prefill by the chunk length — always
+            # from the running offset (zero for a fresh cache)
+            step = cache["step"] + x.shape[1]
             new_cache = {"step": step, "periods": new_periods, "tail": new_tail}
 
     if last_only:

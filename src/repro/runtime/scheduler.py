@@ -19,9 +19,16 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
 
 import numpy as np
+
+#: Ring-buffer bound on the per-step stat histories (depth / latency /
+#: queue waits). A long-running serve observes one entry per engine
+#: iteration; unbounded lists are a slow host-memory leak under
+#: sustained traffic, and every consumer (autopilot EWMA, bench p99)
+#: only ever looks at a recent window anyway.
+HISTORY_LIMIT = 4096
 
 
 class SchedulerError(Exception):
@@ -51,6 +58,12 @@ class Request:
     must have finished; past it the scheduler fails the request (pending
     or mid-decode) instead of letting it occupy a slot forever. ``None``
     = no deadline.
+
+    ``shared_prefix_len``: the request declares its first N prompt tokens
+    as a shared prefix (a system prompt): the paged engine's prefix
+    registry maps the same physical KV pages read-only across requests
+    with byte-identical declared prefixes (DESIGN.md §12). 0 = no
+    sharing. Purely advisory — engines without prefix sharing ignore it.
     """
 
     rid: int
@@ -59,6 +72,7 @@ class Request:
     temperature: float = 0.0
     arrival_step: int = 0
     deadline_step: Optional[int] = None
+    shared_prefix_len: int = 0
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)
@@ -66,6 +80,11 @@ class Request:
             raise ValueError("prompt must be a non-empty 1-D token array")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.shared_prefix_len < 0 or self.shared_prefix_len > self.tokens.size:
+            raise ValueError(
+                f"shared_prefix_len ({self.shared_prefix_len}) must be in "
+                f"[0, prompt length {self.tokens.size}]"
+            )
         if self.deadline_step is not None and self.deadline_step <= self.arrival_step:
             raise ValueError(
                 f"deadline_step ({self.deadline_step}) must be after "
@@ -90,7 +109,9 @@ class SchedulerStats:
     quarantined_slots: int = 0
     shed: int = 0  # overload-evicted from the queue tail (autopilot)
     # controller inputs, recorded via observe_step(): one entry per
-    # observed engine iteration, aligned by position
+    # observed engine iteration, aligned by position. Ring-buffered to
+    # the most recent HISTORY_LIMIT entries (host-memory bound under
+    # sustained traffic).
     depth_history: tuple = ()  # queue depth at each observed step
     latency_history: tuple = ()  # per-step wall latency (s), NaN if unknown
     queue_waits: tuple = ()  # per-admission steps waited past arrival
@@ -110,13 +131,20 @@ class SlotScheduler:
     them from the queue.
     """
 
-    def __init__(self, n_slots: int, max_extent: Optional[int] = None):
+    def __init__(
+        self,
+        n_slots: int,
+        max_extent: Optional[int] = None,
+        history_limit: int = HISTORY_LIMIT,
+    ):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
         self.max_extent = max_extent
+        self.history_limit = history_limit
         self._pending: deque[Request] = deque()
         self._active: dict[int, _InFlight] = {}
+        self._reserved: set[int] = set()  # staged prefills in flight
         self._free: list[int] = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
         self.finished: dict[int, np.ndarray] = {}
         self.failed: dict[int, str] = {}
@@ -129,9 +157,11 @@ class SlotScheduler:
         self._failed = 0
         self._requeued = 0
         self._shed = 0
-        self._depth_history: list[int] = []
-        self._latency_history: list[float] = []
-        self._queue_waits: list[int] = []
+        # deque(maxlen=...) ring buffers: O(1) append, oldest entries
+        # dropped — see HISTORY_LIMIT
+        self._depth_history: deque[int] = deque(maxlen=history_limit)
+        self._latency_history: deque[float] = deque(maxlen=history_limit)
+        self._queue_waits: deque[int] = deque(maxlen=history_limit)
 
     # -- queue side ---------------------------------------------------------
 
@@ -151,24 +181,63 @@ class SlotScheduler:
                 )
         self._pending.append(request)
 
-    def admissible(self, step: int) -> Iterator[tuple[int, Request]]:
+    def admissible(
+        self,
+        step: int,
+        capacity: Optional[Callable[[Request], bool]] = None,
+    ) -> Iterator[tuple[int, Request]]:
         """Yield (slot, request) pairs to prefill at engine iteration
         ``step``: arrival-ordered, as many as there are free slots. The
-        caller must follow each yield with :meth:`start`."""
+        caller must follow each yield with :meth:`start`.
+
+        ``capacity(request) -> bool``: an extra admission gate beyond
+        free slots — the paged engine checks free-*page* capacity here
+        instead of the dense ``max_extent``. A failing head request
+        stops admission (FIFO, no bypass: letting smaller requests jump
+        a capacity-starved head would starve large requests forever).
+        Requests are popped lazily, so a caller that stops iterating
+        leaves the remainder queued."""
         while self._free and self._pending and self._pending[0].arrival_step <= step:
+            if capacity is not None and not capacity(self._pending[0]):
+                return
             req = self._pending.popleft()
             waited = step - req.arrival_step
             self._queue_steps += waited
             self._queue_waits.append(waited)
             yield self._free[-1], req
 
+    def reserve(self, slot: int) -> None:
+        """Remove ``slot`` from the free pool ahead of :meth:`start`: a
+        staged (chunked) prefill occupies the slot across several engine
+        iterations before its first token exists, and the slot must not
+        be handed to another request meanwhile (DESIGN.md §12)."""
+        if slot not in self._free:
+            raise SchedulerError(f"slot {slot} is not free; cannot reserve")
+        self._free.remove(slot)
+        self._reserved.add(slot)
+
+    def unreserve(self, slot: int) -> None:
+        """Abort a staged prefill: return its reserved slot to the free
+        pool (the request itself is the caller's to fail or resubmit)."""
+        if slot not in self._reserved:
+            raise SchedulerError(f"slot {slot} is not reserved")
+        self._reserved.discard(slot)
+        self._release(slot)
+
     def start(self, slot: int, request: Request, first_token: int) -> bool:
         """Occupy ``slot`` with ``request`` whose prefill sampled
         ``first_token``. Returns True if the request is already complete
-        (max_new_tokens == 1), in which case the slot is freed again."""
-        popped = self._free.pop()
-        if popped != slot:
-            raise RuntimeError(f"slot order violated: expected {popped}, got {slot}")
+        (max_new_tokens == 1), in which case the slot is freed again.
+        Accepts either the next free slot (immediate admission) or a
+        slot previously taken via :meth:`reserve` (staged prefill)."""
+        if slot in self._reserved:
+            self._reserved.discard(slot)
+        else:
+            popped = self._free.pop()
+            if popped != slot:
+                raise RuntimeError(
+                    f"slot order violated: expected {popped}, got {slot}"
+                )
         self._active[slot] = _InFlight(request, [int(first_token)])
         self._admitted += 1
         self._peak = max(self._peak, len(self._active))
@@ -251,18 +320,28 @@ class SlotScheduler:
         rid; pair with :meth:`retries` to bound attempts."""
         inf = self._active.pop(slot)
         self._release(slot)
-        req = inf.request
-        req.arrival_step = arrival_step
-        self._retries[req.rid] = self._retries.get(req.rid, 0) + 1
+        return self.resubmit(inf.request, arrival_step)
+
+    def resubmit(self, request: Request, arrival_step: int) -> int:
+        """Return a popped-but-not-started request to the queue (a staged
+        prefill whose pages faulted mid-flight): counts as a requeue/retry
+        exactly like :meth:`requeue`, but the caller holds the request —
+        it is in no slot. The caller must :meth:`unreserve` its slot."""
+        request.arrival_step = arrival_step
+        self._retries[request.rid] = self._retries.get(request.rid, 0) + 1
         self._requeued += 1
+        self._insert_pending(request)
+        return request.rid
+
+    def _insert_pending(self, req: Request) -> None:
+        """Insert in arrival order so a requeue cannot stall the head."""
         pending = list(self._pending)
         at = next(
-            (i for i, r in enumerate(pending) if r.arrival_step > arrival_step),
+            (i for i, r in enumerate(pending) if r.arrival_step > req.arrival_step),
             len(pending),
         )
         pending.insert(at, req)
         self._pending = deque(pending)
-        return req.rid
 
     def retries(self, rid: int) -> int:
         return self._retries.get(rid, 0)
@@ -319,7 +398,7 @@ class SlotScheduler:
         """False when pending requests can never run: every slot is
         quarantined (the all-slots-poisoned liveness hazard)."""
         return not self._pending or bool(
-            self._free or self._active
+            self._free or self._active or self._reserved
         )
 
     # -- lifecycle ----------------------------------------------------------

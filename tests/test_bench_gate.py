@@ -32,6 +32,7 @@ def _doc(
     static_p99=9.0,
     tp_bytes4=250_000,
     tp_skipped=None,
+    kv_shrink=1.8,
 ):
     """A minimal but complete healthy report, knobs per failure mode."""
     return {
@@ -69,6 +70,13 @@ def _doc(
                     "undegraded_tokens_vs_static": "ok",
                     "degraded_tokens_vs_single_tier": "ok",
                     "shed_only_at_lowest": "ok",
+                },
+            },
+            "paged_serving": {
+                "kv_shrink_x": kv_shrink,
+                "parity": {
+                    "paged_chunked_tokens_vs_dense": "ok",
+                    "paged_monolithic_tokens_vs_dense": "ok",
                 },
             },
             "tp_serving": (
@@ -268,3 +276,34 @@ def test_tp_parity_hard_fails(tmp_path, capsys, check):
     fresh["benches"]["tp_serving"]["parity"][check] = "mismatch"
     assert _run(tmp_path, fresh) == 1
     assert f"tp_serving.parity.{check}" in capsys.readouterr().out
+
+
+def test_kv_shrink_floor_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(kv_shrink=1.05)) == 1
+    out = capsys.readouterr().out
+    assert "paged_serving" in out and "below floor" in out
+
+
+def test_kv_shrink_floor_flag_overrides(tmp_path):
+    assert _run(tmp_path, _doc(kv_shrink=1.25)) == 0  # default floor 1.2
+    assert _run(
+        tmp_path, _doc(kv_shrink=1.25), extra=["--kv-shrink-floor", "1.5"]
+    ) == 1
+
+
+def test_missing_paged_serving_section_fails(tmp_path, capsys):
+    fresh = _doc()
+    del fresh["benches"]["paged_serving"]
+    assert _run(tmp_path, fresh) == 1
+    assert "no paged_serving section" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("check", [
+    "paged_chunked_tokens_vs_dense",
+    "paged_monolithic_tokens_vs_dense",
+])
+def test_paged_parity_hard_fails(tmp_path, capsys, check):
+    fresh = _doc()
+    fresh["benches"]["paged_serving"]["parity"][check] = "mismatch"
+    assert _run(tmp_path, fresh) == 1
+    assert f"paged_serving.parity.{check}" in capsys.readouterr().out

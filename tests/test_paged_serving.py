@@ -1,0 +1,234 @@
+"""Paged serving engine: token-bit parity with the dense oracle.
+
+The contract the ``paged_serving`` bench gate enforces (DESIGN.md §12):
+the paged continuous-batching engine — block-table indirection, chunked
+prefill, copy-on-write shared-prefix reuse — decodes a mixed-length
+staggered workload **token-bit-identically** to the dense engine, under
+``integrity=detect`` and across a mid-run precision-tier switch, while
+shared prefixes keep peak page residency strictly below the unshared
+run. Plus interpret-mode parity of the paged flash-attention kernel
+against the dense kernel on gathered pools.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.precision import PrecisionPolicy
+from repro.kernels.flash_attention import flash_attention, paged_flash_attention
+from repro.launch.serve import ContinuousBatchingEngine
+from repro.models import init_params
+from repro.runtime.scheduler import Request
+
+KEY = jax.random.PRNGKey(0)
+ARCH = "granite-3-8b"
+GEN = 5
+PREFIX_LEN = 12
+LENS = [20, 33, 20, 27, 45]
+
+_SETUP_CACHE: list = []
+
+
+def _setup():
+    if not _SETUP_CACHE:
+        cfg = get_reduced(ARCH)
+        params = init_params(cfg, KEY)
+        policy = PrecisionPolicy.uniform(8, 8, level="bitplane")
+        _SETUP_CACHE.append((cfg, params, policy))
+    return _SETUP_CACHE[0]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+def _requests(cfg, gen=GEN):
+    """Mixed-length staggered workload where every prompt opens with the
+    same PREFIX_LEN tokens (a shared system prompt)."""
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, (PREFIX_LEN,))
+    body = np.random.default_rng(1)
+    return [
+        Request(
+            rid=i,
+            tokens=np.concatenate(
+                [prefix, body.integers(0, cfg.vocab_size, (s - PREFIX_LEN,))]
+            ),
+            max_new_tokens=gen,
+            arrival_step=i * 2,
+            shared_prefix_len=PREFIX_LEN,
+        )
+        for i, s in enumerate(LENS)
+    ]
+
+
+def _parity(dense_results, paged_results):
+    assert set(dense_results) == set(paged_results)
+    for rid in dense_results:
+        np.testing.assert_array_equal(
+            dense_results[rid], paged_results[rid],
+            err_msg=f"request {rid} diverged from the dense oracle",
+        )
+
+
+def test_paged_chunked_shared_parity(setup):
+    """Chunked prefill + CoW prefix sharing: bit-identical to dense."""
+    cfg, params, policy = setup
+    dense = ContinuousBatchingEngine(cfg, params, policy, n_slots=3, max_len=64)
+    r_dense, _ = dense.run(_requests(cfg))
+    paged = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=3, max_len=64,
+        page_size=8, prefill_chunk=7, share_prefixes=True,
+    )
+    r_paged, stats = paged.run(_requests(cfg))
+    _parity(r_dense, r_paged)
+    pg = stats["paging"]
+    assert pg["shared_prefix_hits"] >= 1, "later arrivals must hit the registry"
+    assert stats["prefill_chunks"] > len(LENS), "prefill did not run chunked"
+    assert pg["peak_used_pages"] <= pg["kv_pages"] - 1
+    assert pg["kv_bytes_resident_peak"] == pg["peak_used_pages"] * pg["page_nbytes"]
+
+
+def test_paged_integrity_detect_parity(setup):
+    """Per-page checksums in the audit loop: zero false alarms, and the
+    detect path itself stays bit-identical to the dense detect engine."""
+    cfg, params, _ = setup
+    policy = PrecisionPolicy.uniform(8, 8, level="bitplane", integrity="detect")
+    dense = ContinuousBatchingEngine(cfg, params, policy, n_slots=3, max_len=64)
+    r_dense, _ = dense.run(_requests(cfg))
+    paged = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=3, max_len=64, page_size=8,
+    )
+    r_paged, stats = paged.run(_requests(cfg))
+    _parity(r_dense, r_paged)
+    assert stats["integrity"]["kv_alarms"] == 0, (
+        "paged checksum re-baselining raised a false KV alarm"
+    )
+    assert stats["integrity"]["page_faults"] == 0
+
+
+def test_paged_midrun_tier_switch_parity(setup):
+    """A scheduled precision-tier switch mid-run (PR 7 composition): the
+    paged merge selects pool leaves per physical page and must stay
+    bit-identical to the dense engine's per-slot merge."""
+    cfg, params, policy = setup
+    sched = {6: 4}
+    dense = ContinuousBatchingEngine(cfg, params, policy, n_slots=3, max_len=64)
+    r_dense, _ = dense.run(_requests(cfg), precision_schedule=sched)
+    paged = ContinuousBatchingEngine(
+        cfg, params, policy, n_slots=3, max_len=64,
+        page_size=8, share_prefixes=True,
+    )
+    r_paged, _ = paged.run(_requests(cfg), precision_schedule=sched)
+    _parity(r_dense, r_paged)
+
+
+def test_prefix_sharing_reduces_resident_pages(setup):
+    """The point of CoW sharing: with every prompt opening on the same
+    prefix, peak page residency must drop below the unshared run."""
+    cfg, params, policy = setup
+
+    def run(share):
+        eng = ContinuousBatchingEngine(
+            cfg, params, policy, n_slots=3, max_len=64,
+            page_size=8, share_prefixes=share,
+        )
+        reqs = _requests(cfg)
+        if not share:
+            for r in reqs:
+                r.shared_prefix_len = 0
+        results, stats = eng.run(reqs)
+        return results, stats["paging"]["peak_used_pages"]
+
+    r_shared, peak_shared = run(True)
+    r_unshared, peak_unshared = run(False)
+    _parity(r_unshared, r_shared)  # sharing must not change tokens
+    assert peak_shared < peak_unshared, (
+        f"sharing did not reduce residency: {peak_shared} >= {peak_unshared}"
+    )
+
+
+def test_paged_engine_validation():
+    cfg, params, policy = _setup()
+    with pytest.raises(ValueError, match="kv_quant"):
+        ContinuousBatchingEngine(
+            cfg, params, policy, n_slots=2, max_len=32,
+            page_size=8, kv_quant=False,
+        )
+    with pytest.raises(ValueError, match="divisible|page"):
+        ContinuousBatchingEngine(
+            cfg, params, policy, n_slots=2, max_len=30, page_size=8,
+        )
+    with pytest.raises(ValueError, match="share_prefixes"):
+        ContinuousBatchingEngine(
+            cfg, params, policy, n_slots=2, max_len=32, share_prefixes=True,
+        )
+
+
+# --------------------------------------------------------------------------
+# Paged flash-attention kernel (interpret mode)
+# --------------------------------------------------------------------------
+
+
+def test_paged_kernel_matches_dense_gather():
+    """The block-table-indirect kernel must be bit-identical to the dense
+    kernel run on the explicitly gathered pools — including partial last
+    pages, permuted page placement, and null-page padding."""
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, D = 3, 8, 2, 16
+    PS, P = 8, 6
+    n_pages = B * P + 1
+    kq = rng.integers(-127, 128, (n_pages, PS, Hkv, D), dtype=np.int8)
+    vq = rng.integers(-127, 128, (n_pages, PS, Hkv, D), dtype=np.int8)
+    ks = rng.uniform(0.001, 0.02, (n_pages, PS, Hkv)).astype(np.float32)
+    vs = rng.uniform(0.001, 0.02, (n_pages, PS, Hkv)).astype(np.float32)
+    kq[0] = vq[0] = 0
+    ks[0] = vs[0] = 0
+    tables = rng.permutation(np.arange(1, n_pages))[: B * P].reshape(B, P)
+    tables = tables.astype(np.int32)
+    lens = np.array([37, 1, 48], np.int32)
+    for b in range(B):
+        tables[b, -(-int(lens[b]) // PS):] = 0  # pad with the null page
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, D)), jnp.bfloat16)
+
+    out_paged = paged_flash_attention(
+        q, jnp.asarray(kq), jnp.asarray(vq), jnp.asarray(ks), jnp.asarray(vs),
+        jnp.asarray(tables), jnp.asarray(lens), interpret=True,
+    )
+
+    kd = jnp.asarray(kq)[tables].reshape(B, P * PS, Hkv, D).transpose(0, 2, 1, 3)
+    vd = jnp.asarray(vq)[tables].reshape(B, P * PS, Hkv, D).transpose(0, 2, 1, 3)
+    ksd = jnp.asarray(ks)[tables].reshape(B, P * PS, Hkv).transpose(0, 2, 1)
+    vsd = jnp.asarray(vs)[tables].reshape(B, P * PS, Hkv).transpose(0, 2, 1)
+    out_dense = flash_attention(
+        q, kd, vd, causal=False, kv_lens=jnp.asarray(lens),
+        k_scale=ksd, v_scale=vsd,
+        block_q=1, block_k=PS, out_dtype=jnp.bfloat16, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out_paged), np.asarray(out_dense))
+
+
+def test_paged_kernel_validation():
+    q = jnp.zeros((2, 4, 1, 16), jnp.bfloat16)
+    pool = jnp.zeros((5, 8, 2, 16), jnp.int8)
+    scale = jnp.zeros((5, 8, 2), jnp.float32)
+    tables = jnp.zeros((2, 3), jnp.int32)
+    lens = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="block_tables"):
+        paged_flash_attention(
+            q, pool, pool, scale, scale, jnp.zeros((3, 3), jnp.int32), lens,
+            interpret=True,
+        )
+    with pytest.raises(ValueError, match="kv_lens"):
+        paged_flash_attention(
+            q, pool, pool, scale, scale, tables, jnp.zeros((3,), jnp.int32),
+            interpret=True,
+        )
+    with pytest.raises(ValueError, match="v_scale_pool"):
+        paged_flash_attention(
+            q, pool, pool, scale, jnp.zeros((5, 8, 3), jnp.float32), tables,
+            lens, interpret=True,
+        )

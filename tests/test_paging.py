@@ -1,0 +1,500 @@
+"""Paged KV cache bookkeeping + device helpers (DESIGN.md §12).
+
+The property test is the load-bearing piece: random
+alloc/retain/release/fork traces against a shadow model must never leak
+or double-free a page, refcounts must hit zero exactly at release, and a
+CoW fork must preserve the shared page's bytes for the remaining holders
+until the forker's first write. The rest pins the SlotPager/
+PrefixRegistry contracts and the jitted cache helpers (commit writes
+only owned pages, clear redirects to the null page, per-page checksums
+are single-flip sound, select_paged merges pools per physical page).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image without hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.models import paging
+from repro.models.cache import init_cache, insert_slot
+from repro.models.paging import (
+    PageAllocator,
+    PagingError,
+    PrefixRegistry,
+    SlotPager,
+)
+from repro.runtime.scheduler import Request, SchedulerError, SlotScheduler
+
+ARCH = "granite-3-8b"
+
+
+# --------------------------------------------------------------------------
+# PageAllocator property test
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_allocator_trace_property(data):
+    """Random alloc/retain/release/fork traces: the allocator must agree
+    with a shadow model at every step — no leaked or double-freed pages,
+    refcount zero exactly at final release, and CoW-forked pages keep
+    their bytes for the remaining holders until the forker writes."""
+    n_pages = data.draw(st.integers(3, 12), label="n_pages")
+    alloc = PageAllocator(n_pages, page_size=4)
+    refs: dict[int, int] = {}  # shadow refcounts
+    store: dict[int, int] = {}  # shadow page "bytes" (an int payload)
+    handles: list[int] = []  # one entry per live reference
+    next_payload = 0
+
+    for _ in range(data.draw(st.integers(5, 60), label="trace_len")):
+        op = data.draw(st.sampled_from(["alloc", "retain", "release", "fork"]))
+        if op == "alloc" or not handles:
+            if not alloc.free_pages:
+                with pytest.raises(PagingError):
+                    alloc.alloc()
+                continue
+            pid = alloc.alloc()
+            assert pid != 0, "null page must never be handed out"
+            assert pid not in refs, f"page {pid} double-allocated"
+            refs[pid] = 1
+            store[pid] = next_payload
+            next_payload += 1
+            handles.append(pid)
+        elif op == "retain":
+            pid = data.draw(st.sampled_from(handles))
+            alloc.retain(pid)
+            refs[pid] += 1
+            handles.append(pid)
+        elif op == "release":
+            pid = handles.pop(data.draw(st.integers(0, len(handles) - 1)))
+            alloc.release(pid)
+            refs[pid] -= 1
+            if refs[pid] == 0:
+                # refcount hit zero exactly at the final release: the
+                # allocator must agree the page is dead...
+                assert alloc.refcount(pid) == 0
+                with pytest.raises(PagingError):
+                    alloc.release(pid)  # ...and a double free must raise
+                del refs[pid]
+                del store[pid]
+        else:  # fork = declare intent to write through one handle
+            i = data.draw(st.integers(0, len(handles) - 1))
+            pid = handles[i]
+            was_shared = refs[pid] > 1
+            shared_payload = store[pid]
+            if was_shared and not alloc.free_pages:
+                with pytest.raises(PagingError):
+                    alloc.fork(pid)
+                continue
+            orig = pid
+            new_pid, copied = alloc.fork(pid)
+            assert copied == was_shared
+            if copied:
+                assert new_pid != orig
+                refs[orig] -= 1
+                refs[new_pid] = 1
+                store[new_pid] = store[orig]  # copy bytes before diverging
+                handles[i] = new_pid
+                pid = new_pid
+            # first divergent write lands on the (possibly new) page...
+            store[pid] = next_payload
+            next_payload += 1
+            if copied:
+                # ...and the shared page's bytes are untouched for the
+                # remaining holders.
+                assert store[orig] == shared_payload
+
+        # global invariants after every operation
+        assert {p: c for p, c in refs.items()} == {
+            p: alloc.refcount(p) for p in refs
+        }
+        assert alloc.used_pages == len(refs)
+        assert alloc.used_pages + alloc.free_pages == n_pages - 1, (
+            "pages leaked: live + free must cover the whole pool"
+        )
+
+    for pid in list(handles):
+        alloc.release(pid)
+        refs[pid] -= 1
+        if refs[pid] == 0:
+            del refs[pid]
+    assert alloc.used_pages == len(refs) == 0
+    assert alloc.free_pages == n_pages - 1
+
+
+def test_allocator_fork_preserves_shared_bytes():
+    """Deterministic CoW check on a real byte store: forking a shared
+    page gives the writer a copy and leaves the original bytes intact."""
+    alloc = PageAllocator(8, page_size=4)
+    pool = np.zeros((8, 4), np.int32)
+    pid = alloc.alloc()
+    pool[pid] = 7
+    alloc.retain(pid)  # second holder (e.g. prefix registry)
+    new_pid, copied = alloc.fork(pid)
+    assert copied and new_pid != pid
+    pool[new_pid] = pool[pid]  # copy, then diverge
+    pool[new_pid, 0] = 99
+    assert (pool[pid] == 7).all(), "shared page bytes changed under CoW"
+    assert alloc.refcount(pid) == 1 and alloc.refcount(new_pid) == 1
+    # exclusively held: fork is in-place
+    assert alloc.fork(new_pid) == (new_pid, False)
+
+
+def test_allocator_quarantine():
+    alloc = PageAllocator(4, page_size=4)
+    a = alloc.alloc()
+    alloc.quarantine(a)  # live: takes effect when the refcount drains
+    alloc.release(a)
+    assert alloc.refcount(a) == 0
+    seen = {alloc.alloc() for _ in range(alloc.free_pages)}
+    assert a not in seen, "quarantined page must never be reallocated"
+    assert alloc.quarantined_pages == 1
+    alloc.quarantine(0)  # null page: no-op
+    assert alloc.quarantined_pages == 1
+
+
+# --------------------------------------------------------------------------
+# SlotPager + PrefixRegistry
+# --------------------------------------------------------------------------
+
+
+def test_slot_pager_assign_release():
+    alloc = PageAllocator(10, page_size=4)
+    pager = SlotPager(alloc, n_slots=2, pages_per_slot=4)
+    assert pager.pages_needed(9) == 3
+    table, mask = pager.assign(0, [], 3)
+    assert table.shape == (4,) and mask.shape == (4,)
+    assert (table[3:] == 0).all() and not mask[3:].any()
+    assert mask[:3].all()
+    assert pager.owned_pages(0) == list(table[:3])
+    with pytest.raises(PagingError):
+        pager.assign(0, [], 1)  # double assignment
+    with pytest.raises(PagingError):
+        pager.assign(1, [], 5)  # over pages_per_slot
+
+    # shared mapping retains, commit mask excludes the shared pages
+    shared = pager.pages(0)[:2]
+    t2, m2 = pager.assign(1, shared, 3)
+    assert list(t2[:2]) == shared and not m2[:2].any() and m2[2]
+    assert all(alloc.refcount(p) == 2 for p in shared)
+    assert sorted(pager.slots_holding(shared[0])) == [0, 1]
+    pager.release(0)
+    assert all(alloc.refcount(p) == 1 for p in shared), (
+        "shared pages must survive the first holder's release"
+    )
+    pager.release(1)
+    assert alloc.used_pages == 0
+
+
+def test_prefix_registry_lru_tags_and_drop():
+    alloc = PageAllocator(16, page_size=4)
+    reg = PrefixRegistry(alloc, capacity=2)
+    toks = np.arange(8)
+    pids = [alloc.alloc(), alloc.alloc()]
+    assert reg.register(toks, pids, scratch="snapA")
+    assert all(alloc.refcount(p) == 2 for p in pids)
+
+    # peek: no LRU touch, no hit count; lookup: both
+    assert reg.peek(toks).hits == 0
+    hit = reg.lookup(toks)
+    assert hit.hits == 1 and hit.scratch == "snapA"
+    assert reg.lookup(np.arange(9)) is None
+
+    # tag scoping: the same tokens at another precision tier miss
+    assert reg.peek(toks, tag=(4, 4)) is None
+    pids_t = [alloc.alloc()]
+    assert reg.register(toks, pids_t, scratch="snapB", tag=(4, 4))
+    assert reg.lookup(toks, tag=(4, 4)).scratch == "snapB"
+    assert reg.lookup(toks).scratch == "snapA"
+
+    # capacity self-bound: third entry evicts the LRU one
+    assert len(reg) == 2
+    reg.register(np.arange(3), [alloc.alloc()], scratch="snapC")
+    assert len(reg) == 2 and reg.evictions == 1
+
+    # protect: eviction under pressure must skip the entry about to be hit
+    protected = reg.key(toks)
+    assert reg.evict_oldest(protect=protected)
+    assert reg.peek(toks) is not None
+
+    # drop_page releases and invalidates every entry mapping the page
+    assert reg.drop_page(pids[0]) == 1
+    assert reg.peek(toks) is None
+    assert alloc.refcount(pids[0]) == 1  # only the original holder left
+    reg.clear()
+    assert len(reg) == 0
+
+
+# --------------------------------------------------------------------------
+# Device-side helpers
+# --------------------------------------------------------------------------
+
+
+def _cfg():
+    return get_reduced(ARCH)
+
+
+def test_paged_init_cache_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="not divisible"):
+        paging.paged_init_cache(cfg, 2, max_len=10, page_size=4, n_pages=8)
+    with pytest.raises(ValueError, match="null page"):
+        paging.paged_init_cache(cfg, 2, max_len=16, page_size=4, n_pages=4)
+
+
+def test_paged_commit_writes_only_owned_pages():
+    """Masked (shared) chunks scatter to the null page: committing a slot
+    that maps shared prefix pages must leave those pages' bytes alone."""
+    cfg = _cfg()
+    ps, n_pages, max_len = 4, 9, 16
+    cache = paging.paged_init_cache(cfg, 2, max_len, ps, n_pages)
+    rng = np.random.default_rng(0)
+
+    def scratch():
+        s = init_cache(cfg, 1, max_len, cfg.dtype, kv_quant=False)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.asarray(
+                rng.standard_normal(x.shape), x.dtype
+            ) if x.dtype != jnp.int32 else x,
+            s,
+        )
+
+    table = np.array([1, 2, 3, 4], np.int32)
+    cache = paging.paged_commit(
+        cache, scratch(), 0, table, np.ones(4, bool), 16
+    )
+    before = jax.tree_util.tree_map(np.asarray, cache)
+
+    # slot 1 shares pages 1-2 (read-only) and owns 5-6
+    table2 = np.array([1, 2, 5, 6], np.int32)
+    mask2 = np.array([False, False, True, True])
+    cache = paging.paged_commit(cache, scratch(), 1, table2, mask2, 16)
+
+    def pools(tree):
+        return [
+            (k, leaf) for path, leaf in jax.tree_util.tree_flatten_with_path(
+                jax.tree_util.tree_map(np.asarray, tree)
+            )[0]
+            for k in [jax.tree_util.keystr(path)]
+            if any(p in k for p in ("k_q", "k_scale", "v_q", "v_scale"))
+        ]
+
+    for (name, b), (_, a) in zip(pools(before), pools(cache)):
+        page_axis = 1 if b.ndim == 5 or (b.ndim == 4 and "scale" in name) else 0
+        sl = (slice(None), [1, 2]) if page_axis else ([1, 2],)
+        np.testing.assert_array_equal(
+            b[sl], a[sl], err_msg=f"shared pages rewritten in {name}"
+        )
+        own = (slice(None), [5, 6]) if page_axis else ([5, 6],)
+        assert not np.array_equal(b[own], a[own]), f"owned pages not written in {name}"
+
+
+def test_clear_slot_redirects_to_null_page():
+    cfg = _cfg()
+    cache = paging.paged_init_cache(cfg, 2, 16, 4, 9)
+    scratch = init_cache(cfg, 1, 16, cfg.dtype, kv_quant=False)
+    cache = paging.paged_commit(
+        cache, scratch, 1, np.array([1, 2, 3, 4], np.int32), np.ones(4, bool), 10
+    )
+    cache = paging.clear_slot(cache, 1)
+    assert int(cache["step"][1]) == 0
+    leaves = {
+        jax.tree_util.keystr(p): l
+        for p, l in jax.tree_util.tree_flatten_with_path(cache)[0]
+    }
+    for name, leaf in leaves.items():
+        if "block_table" in name:
+            tbl = np.asarray(leaf)
+            assert (tbl[..., 1, :] == 0).all(), f"{name} not nulled"
+        if name.endswith("['len']"):
+            assert (np.asarray(leaf)[..., 1] == 0).all()
+
+
+def test_paged_checksums_single_flip():
+    """One flipped byte in a pool moves exactly its page's sum; metadata
+    flips move the slot sums and leave page sums alone."""
+    cfg = _cfg()
+    cache = paging.paged_init_cache(cfg, 2, 16, 4, 9)
+    page_sums, slot_sums = jax.jit(paging.paged_checksums)(cache)
+    assert page_sums.shape == (9,) and slot_sums.shape == (2,)
+
+    def corrupt(tree, match, fn):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: fn(l) if match in jax.tree_util.keystr(p) else l, tree
+        )
+
+    dirty = corrupt(cache, "k_q", lambda l: l.at[..., 3, 0, 0, 0].set(1))
+    p2, s2 = jax.jit(paging.paged_checksums)(dirty)
+    (moved,) = np.nonzero(np.asarray(p2) != np.asarray(page_sums))
+    assert list(moved) == [3]
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(slot_sums))
+
+    dirty = corrupt(cache, "block_table", lambda l: l.at[..., 1, 0].set(5))
+    p3, s3 = jax.jit(paging.paged_checksums)(dirty)
+    np.testing.assert_array_equal(np.asarray(p3), np.asarray(page_sums))
+    (moved,) = np.nonzero(np.asarray(s3) != np.asarray(slot_sums))
+    assert list(moved) == [1]
+
+
+def test_select_paged_merges_pools_per_page():
+    cfg = _cfg()
+    a = paging.paged_init_cache(cfg, 2, 16, 4, 9)
+    b = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), a)
+    take_slots = np.array([False, True])
+    take_pages = np.zeros(9, bool)
+    take_pages[[2, 5]] = True
+    out = jax.tree_util.tree_map(
+        np.asarray, paging.select_paged(a, b, take_slots, take_pages)
+    )
+    assert out["step"][0] == 0 and out["step"][1] == 1
+    leaves = {
+        jax.tree_util.keystr(p): l
+        for p, l in jax.tree_util.tree_flatten_with_path(out)[0]
+    }
+    for name, leaf in leaves.items():
+        if "k_q" in name:
+            page_axis = leaf.ndim - 4
+            got = leaf.reshape((-1,) + leaf.shape[page_axis:]) if page_axis else leaf
+            for stack in got if page_axis else [got]:
+                assert (stack[[2, 5]] == 1).all(), f"selected pages not taken in {name}"
+                keep = [i for i in range(9) if i not in (2, 5)]
+                assert (stack[keep] == 0).all(), f"unselected pages taken in {name}"
+        if "block_table" in name:
+            assert (leaf[..., 0, :] == 0).all() and (leaf[..., 1, :] == 1).all()
+
+
+def test_page_nbytes():
+    cfg = _cfg()
+    cache = paging.paged_init_cache(cfg, 2, 16, 4, 9)
+    per_pos = cfg.n_kv_heads * cfg.head_dim * 1 + cfg.n_kv_heads * 4  # int8 + f32 scale
+    expected = cfg.n_layers * 2 * 4 * per_pos  # layers x (K,V) x page_size
+    assert paging.page_nbytes(cache) == expected
+
+
+# --------------------------------------------------------------------------
+# Scheduler: ring buffers, capacity gate, reservation protocol
+# --------------------------------------------------------------------------
+
+
+def _req(rid, n=4, arrival=0, gen=3):
+    return Request(
+        rid=rid,
+        tokens=np.arange(n) % 7,
+        max_new_tokens=gen,
+        arrival_step=arrival,
+    )
+
+
+def test_scheduler_history_ring_buffers_bounded():
+    sched = SlotScheduler(1, history_limit=8)
+    for step in range(50):
+        sched.observe_step(step, latency_s=0.001)
+    stats = sched.stats()
+    assert len(stats.depth_history) == 8
+    assert len(stats.latency_history) == 8
+    assert stats.depth_history[-1] == 0
+
+    sched2 = SlotScheduler(1, history_limit=4)
+    for i in range(12):
+        sched2.submit(_req(i, arrival=0))
+    admitted = 0
+    for step in range(12):
+        for slot, req in sched2.admissible(step):
+            sched2.start(slot, req, 1)
+            admitted += 1
+        for slot in list(sched2.active_slots):
+            while not sched2.record(slot, 1):
+                pass
+    assert admitted == 12
+    assert len(sched2.stats().queue_waits) == 4
+
+
+def test_scheduler_capacity_gate_blocks_head_fifo():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0, n=8))
+    sched.submit(_req(1, n=2))
+    # head request fails the capacity gate: admission stops entirely —
+    # the smaller request behind it must NOT bypass (starvation guard)
+    got = list(sched.admissible(0, capacity=lambda r: r.tokens.size <= 4))
+    assert got == []
+    assert sched.pending_rids == [0, 1]
+    # capacity recovers: both admit in order
+    for slot, req in sched.admissible(0, capacity=lambda r: True):
+        sched.start(slot, req, 1)
+    assert sched.active_slots == [0, 1]
+
+
+def test_scheduler_reservation_protocol():
+    sched = SlotScheduler(2)
+    sched.submit(_req(0))
+    ((slot, req),) = list(sched.admissible(0))
+    sched.reserve(slot)
+    with pytest.raises(SchedulerError):
+        sched.reserve(slot)  # already reserved -> not free
+    assert sched.servable  # reserved slot keeps the engine alive
+    # another admission must not see the reserved slot
+    sched.submit(_req(1))
+    for s2, r2 in sched.admissible(0):
+        assert s2 != slot
+        sched.start(s2, r2, 1)
+    # start accepts the reserved slot out of pop order
+    assert not sched.start(slot, req, 1)
+    assert sorted(sched.active_slots) == [0, 1]
+
+
+def test_scheduler_unreserve_and_resubmit():
+    sched = SlotScheduler(1)
+    sched.submit(_req(0, gen=3))
+    ((slot, req),) = list(sched.admissible(0))
+    sched.reserve(slot)
+    # staged prefill aborts (integrity fault on a shared page): the slot
+    # returns to the pool and the request re-queues with backoff
+    sched.unreserve(slot)
+    rid = sched.resubmit(req, arrival_step=5)
+    assert rid == 0 and sched.retries(0) == 1
+    assert sched.pending_rids == [0]
+    with pytest.raises(SchedulerError):
+        sched.unreserve(slot)  # not reserved anymore
+    ((slot2, req2),) = list(sched.admissible(5))
+    assert slot2 == slot
+    sched.start(slot2, req2, 1)
+    for _ in range(2):
+        sched.record(slot2, 1)
+    assert sched.done and 0 in sched.finished
+
+
+def test_resubmit_keeps_arrival_order():
+    sched = SlotScheduler(1)
+    sched.submit(_req(1, arrival=4))
+    sched.resubmit(_req(0), arrival_step=2)
+    assert sched.pending_rids == [0, 1]
+    sched.resubmit(_req(2), arrival_step=9)
+    assert sched.pending_rids == [0, 1, 2]
+
+
+# --------------------------------------------------------------------------
+# insert_slot fail-fast (satellite)
+# --------------------------------------------------------------------------
+
+
+def test_insert_slot_names_structure_mismatch():
+    cfg = _cfg()
+    slot_cache = init_cache(cfg, 2, 16, cfg.dtype, kv_quant=True)
+    raw = init_cache(cfg, 1, 16, cfg.dtype, kv_quant=False)
+    with pytest.raises(ValueError, match="missing leaves.*k_q"):
+        insert_slot(slot_cache, raw, 0)
+
+
+def test_insert_slot_names_shape_mismatch():
+    cfg = _cfg()
+    slot_cache = init_cache(cfg, 2, 16, cfg.dtype, kv_quant=False)
+    too_long = init_cache(cfg, 1, 32, cfg.dtype, kv_quant=False)
+    with pytest.raises(ValueError, match="does not fit.*max_len"):
+        insert_slot(slot_cache, too_long, 0)
