@@ -337,6 +337,48 @@ def _paged_serving_failures(doc: dict, floor: float) -> list[str]:
     )
 
 
+def _tuned_failures(doc: dict, floor: float) -> list[str]:
+    """Autotuner gate on the tuned_tiles sweep. Token parity across
+    heuristic/tuned phases and the warm-start zero-tune verdict ride the
+    hard parity gate; this checks the performance claim: tuned decode AND
+    prefill throughput must each be >= ``floor`` x the auto_tiles
+    heuristic on every measured workload (on the jnp bench host the
+    honest expectation is ~1.0x — tiles are inert there — so the floor
+    is slack for host noise, not a win target; collapse far below 1x
+    means the tuner is picking actively bad tiles or the store lookup
+    path got expensive). A missing or skipped section fails loudly."""
+    tt = doc.get("benches", {}).get("tuned_tiles")
+    if not tt:
+        return [
+            "no tuned_tiles section in the fresh run — serving_bench "
+            "stopped emitting the autotuner sweep the gate is supposed "
+            "to check"
+        ]
+    if "skipped" in tt:
+        return [f"tuned_tiles sweep was skipped ({tt['skipped']})"]
+    ratios = tt.get("tuned_vs_heuristic", {})
+    if not ratios:
+        return [
+            "tuned_tiles section carries no tuned_vs_heuristic ratios — "
+            "the sweep ran but measured nothing the gate can check"
+        ]
+    fails = []
+    for workload, got in sorted(ratios.items()):
+        verdict = "ok" if got >= floor else "REGRESSED"
+        print(
+            f"[gate] tuned_tiles: {workload} tuned/heuristic {got:.3f}x "
+            f"(floor {floor:.2f}x) {verdict}"
+        )
+        if got < floor:
+            fails.append(
+                f"tuned_tiles {workload} tuned-vs-heuristic throughput "
+                f"{got:.3f}x below floor {floor:.2f}x — autotuned plans "
+                "are slower than the auto_tiles heuristic they must "
+                "never lose to"
+            )
+    return fails
+
+
 def _parity_failures(doc: dict) -> list[str]:
     fails = []
     for section, bench in doc.get("benches", {}).items():
@@ -381,6 +423,14 @@ def main(argv=None) -> int:
         help="max tolerated per-device plane-cache bytes at "
         "model_parallel=P as a multiple of 1/P of the single-device "
         "footprint (pack-word padding + replicated non-TP leaves)",
+    )
+    ap.add_argument(
+        "--tuned-floor", type=float, default=0.8,
+        help="min tolerated tuned-vs-heuristic throughput ratio from the "
+        "tuned_tiles sweep, per workload (expected ~1.0 on the jnp bench "
+        "host where tiles are inert; the floor is slack for shared-host "
+        "noise — the failure mode is the tuner selecting tiles slower "
+        "than the auto_tiles default it is supposed to dominate)",
     )
     ap.add_argument(
         "--kv-shrink-floor", type=float, default=1.2,
@@ -436,6 +486,7 @@ def main(argv=None) -> int:
     failures.extend(_autopilot_failures(fresh))
     failures.extend(_tp_serving_failures(fresh, args.tp_shrink_slack))
     failures.extend(_paged_serving_failures(fresh, args.kv_shrink_floor))
+    failures.extend(_tuned_failures(fresh, args.tuned_floor))
 
     parity = _parity_failures(fresh)
     for p in parity:

@@ -726,6 +726,160 @@ def paged_serving_sweep(cfg, params, smoke: bool = False) -> dict:
     }
 
 
+def tuned_tiles_sweep(cfg, params, smoke: bool = False) -> dict:
+    """Tuned-vs-heuristic decode/prefill throughput (ISSUE 10).
+
+    Three phases over the same decode-heavy and prefill-heavy workloads:
+
+    1. **heuristic** — plain engines, tiles from ``auto_tiles``;
+    2. **tuned (cold)** — the plan registry is cleared and engines are
+       built with ``autotune=True`` against a persistent plan store
+       (``REPRO_PLAN_STORE`` or a temp dir), so every plan build consults
+       the roofline-pruned tuner and persists its winner;
+    3. **tuned (warm)** — the registry is cleared again and a *fresh*
+       tuner (zero counters) is attached to the same store, simulating a
+       second process start: every consulted plan must be a store hit
+       with **zero** tuning runs (the ``warm_start_zero_tune`` parity
+       verdict CI hard-fails on).
+
+    Tokens must be bit-identical across all three phases — tiles change
+    the MXU pass schedule, never the integer arithmetic — and the
+    tuned-vs-heuristic throughput ratios are floor-gated by
+    ``check_bench_regression --tuned-floor``. On this jnp host tiles are
+    inert (XLA fuses the contraction), so the tuner collapses each plan's
+    candidate space to the single heuristic survivor and the ratios
+    measure store-plumbing overhead (~1.0x); on a Pallas backend the same
+    sweep measures real tile wins.
+    """
+    import tempfile
+
+    from repro.runtime.plan_store import PlanStore
+
+    policy = PrecisionPolicy.uniform(8, 8, variant="booth", level="bitplane")
+    if smoke:
+        n_slots = 2
+        workloads = {"decode": ([4, 8], 6), "prefill": ([24, 32], 2)}
+    else:
+        n_slots = 4
+        workloads = {"decode": ([8, 8, 16, 16], 16), "prefill": ([64, 96, 128, 128], 4)}
+
+    store_dir = os.environ.get("REPRO_PLAN_STORE") or tempfile.mkdtemp(
+        prefix="plan_store_"
+    )
+    store_path = os.path.join(store_dir, "plan_store.json")
+
+    def requests(lens, gen):
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, (s,)),
+                    max_new_tokens=gen, arrival_step=0)
+            for i, s in enumerate(lens)
+        ]
+
+    def run_phase(autotune: bool):
+        """Build one engine per workload; returns (tokens, tok/s) maps."""
+        tokens, tps = {}, {}
+        for name, (lens, gen) in workloads.items():
+            engine = ContinuousBatchingEngine(
+                cfg, params, policy, n_slots=n_slots, max_len=max(lens) + gen,
+                autotune=autotune,
+                plan_store_path=store_path if autotune else None,
+            )
+            engine.run(requests(lens, gen))  # warm: compile
+            # best-of-3: identical warm runs swing >1.5x on shared hosts
+            # and the gated ratio here is expected ~1.0, not a real win
+            best = 0.0
+            for _ in range(3):
+                res, stats = engine.run(requests(lens, gen))
+                metric = (
+                    stats["tok_per_s"]
+                    if name == "decode"
+                    else stats["prefill_tokens"] / max(stats["wall_s"], 1e-9)
+                )
+                best = max(best, metric)
+            tokens[name], tps[name] = res, round(best, 2)
+        return tokens, tps
+
+    registry = plan_mod.DEFAULT_REGISTRY
+    try:
+        registry.attach_tuner(None)
+        base_tokens, base_tps = run_phase(autotune=False)
+
+        registry.clear()  # every plan must re-resolve through the tuner
+        cold_tokens, cold_tps = run_phase(autotune=True)
+        cold = dict(registry.store_stats())
+
+        # Second-process simulation: fresh tuner (zero counters), warm store.
+        registry.attach_tuner(None)
+        registry.clear()
+        warm_tokens, warm_tps = run_phase(autotune=True)
+        warm = dict(registry.store_stats())
+    finally:
+        registry.attach_tuner(None)
+
+    token_parity = "ok"
+    for name in workloads:
+        for phase_tokens in (cold_tokens, warm_tokens):
+            for rid, toks in base_tokens[name].items():
+                if not np.array_equal(phase_tokens[name][rid], toks):
+                    token_parity = "mismatch"
+
+    # Zero tuning runs at warm start, and the store served every lookup
+    # the cold phase resolved (hit counter == consulted-plan count).
+    consulted = cold["store_hits"] + cold["store_misses"]
+    warm_ok = (
+        warm["tunes"] == 0
+        and warm["store_misses"] == 0
+        and warm["store_hits"] == consulted
+        and warm["store_hits"] > 0
+    )
+    tuned_tps = {k: max(cold_tps[k], warm_tps[k]) for k in workloads}
+    return {
+        "workload": {
+            name: {"prompt_lens": lens, "gen": gen, "n_slots": n_slots}
+            for name, (lens, gen) in workloads.items()
+        },
+        "store": {
+            "path": store_path,
+            "fingerprint": cold.get("fingerprint"),
+            "entries": PlanStore(store_path).entries(),
+        },
+        "hardware": {
+            "name": cold.get("hardware"),
+            "source": cold.get("hardware_source"),
+        },
+        "tok_per_s": {
+            name: {
+                "heuristic": base_tps[name],
+                "tuned_cold": cold_tps[name],
+                "tuned_warm": warm_tps[name],
+            }
+            for name in workloads
+        },
+        "tuned_vs_heuristic": {
+            name: round(tuned_tps[name] / max(base_tps[name], 1e-9), 3)
+            for name in workloads
+        },
+        "plan_counters": {"cold": cold, "warm": warm},
+        "parity": {
+            "tuned_tokens_vs_heuristic": token_parity,
+            "warm_start_zero_tune": (
+                "ok"
+                if warm_ok
+                else f"hits_{warm['store_hits']}_misses_{warm['store_misses']}"
+                f"_tunes_{warm['tunes']}_expected_hits_{consulted}"
+            ),
+        },
+        "note": (
+            "prefill tok/s = prefill_tokens/wall on the prefill-heavy "
+            "workload; decode tok/s = engine tok_per_s. best-of-3 per "
+            "phase. On the jnp backend tiles are inert, so the ratios "
+            "gate store plumbing at ~1.0x; Pallas backends measure real "
+            "tile wins here"
+        ),
+    }
+
+
 def serving_bench(json_path: str | None = None, smoke: bool = False):
     """Returns report rows; writes the ``serving`` JSON section."""
     from kernel_bench import JSON_PATH, _write_bench_section
@@ -775,6 +929,9 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
     autopilot = autopilot_sweep(cfg, params, smoke=smoke)
     tp_serving = tp_serving_sweep(cfg, params, smoke=smoke)
     paged = paged_serving_sweep(cfg, params, smoke=smoke)
+    # last: it clears and re-resolves the process plan registry (tuner
+    # attach/detach), which the other sweeps must not see mid-flight
+    tuned = tuned_tiles_sweep(cfg, params, smoke=smoke)
 
     kv_reduction = stats_x["kv_cache_bytes"] / stats_q["kv_cache_bytes"]
     # full-config accounting: the reduced head_dim understates the win
@@ -843,6 +1000,10 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         path, "paged_serving",
         {"bench": "paged_serving", "arch": cfg.name, "smoke": smoke, **paged},
     )
+    _write_bench_section(
+        path, "tuned_tiles",
+        {"bench": "tuned_tiles", "arch": cfg.name, "smoke": smoke, **tuned},
+    )
     rows = [
         ("serving/cb_int8_tok_s", payload["tok_per_s"]["cb_int8_kv"],
          f"lockstep_{payload['tok_per_s']['lockstep_per_request']}"),
@@ -873,6 +1034,13 @@ def serving_bench(json_path: str | None = None, smoke: bool = False):
         f"_p99_chunked_{paged['decode_iter_p99_ms']['paged_chunked']}"
         f"_mono_{paged['decode_iter_p99_ms']['paged_monolithic']}",
     ))
+    rows.append((
+        "serving/tuned_vs_heuristic_decode_x",
+        tuned["tuned_vs_heuristic"]["decode"],
+        f"prefill_{tuned['tuned_vs_heuristic']['prefill']}"
+        f"_warmstart_{tuned['parity']['warm_start_zero_tune']}"
+        f"_parity_{tuned['parity']['tuned_tokens_vs_heuristic']}",
+    ))
     return rows
 
 
@@ -894,9 +1062,13 @@ if __name__ == "__main__":
     ap.add_argument("--paged-sweep", action="store_true",
                     help="run only the paged-KV serving sweep (residency, "
                     "decode p99, parity) and print it")
+    ap.add_argument("--tuned-sweep", action="store_true",
+                    help="run only the autotuner sweep (tuned-vs-heuristic "
+                    "throughput, warm-start zero-tune check) and print it")
     args = ap.parse_args()
     if (args.precision_sweep or args.sparsity_sweep or args.integrity_sweep
-            or args.autopilot_sweep or args.tp_sweep or args.paged_sweep):
+            or args.autopilot_sweep or args.tp_sweep or args.paged_sweep
+            or args.tuned_sweep):
         import json as _json
 
         cfg = get_reduced(ARCH)
@@ -906,6 +1078,7 @@ if __name__ == "__main__":
               else integrity_sweep if args.integrity_sweep
               else autopilot_sweep if args.autopilot_sweep
               else paged_serving_sweep if args.paged_sweep
+              else tuned_tiles_sweep if args.tuned_sweep
               else tp_serving_sweep)
         print(_json.dumps(fn(cfg, params, smoke=args.smoke), indent=2))
     else:

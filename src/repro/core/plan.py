@@ -133,12 +133,19 @@ class PlanRegistry:
     cache-hit contract the tests assert), so dispatch resolution runs once
     per distinct (shape, precision, backend, layout) combination per
     process. ``hits``/``misses`` are observability counters.
+
+    An attached tuner (``attach_tuner``; see ``core/autotune``) is
+    consulted during plan builds *before* the ``auto_tiles`` fallback —
+    with a persistent store behind it, compile-once becomes
+    tune-once-per-fleet. ``clear`` drops plans but keeps the tuner: a
+    re-resolved plan should still find its stored tiles.
     """
 
     def __init__(self) -> None:
         self._plans: dict[PlanKey, "MatmulPlan"] = {}
         self.hits = 0
         self.misses = 0
+        self.tuner = None
 
     def get(self, key: PlanKey) -> "MatmulPlan":
         plan = self._plans.get(key)
@@ -149,6 +156,19 @@ class PlanRegistry:
         else:
             self.hits += 1
         return plan
+
+    def attach_tuner(self, tuner) -> None:
+        """Attach (or with None, detach) a ``PlanAutotuner``-shaped object:
+        ``tiles_for(key, kernel) -> (bm, bn, bk) | None`` plus ``stats()``.
+        Injected by the serving layer — core never imports runtime."""
+        self.tuner = tuner
+
+    def store_stats(self) -> dict:
+        """Tuner/store counters for engine ``stats()`` blocks; zeros with
+        no tuner attached so callers need not branch."""
+        if self.tuner is None:
+            return {"store_hits": 0, "store_misses": 0, "tunes": 0}
+        return self.tuner.stats()
 
     def clear(self) -> None:
         self._plans.clear()
@@ -311,11 +331,27 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         kernel = "staged"
 
     # Tile resolution (once; executors pass explicit tiles to the kernel
-    # wrappers, which never override explicit values). bn joins the
-    # heuristic: fused decode steps take the N-derived wide tile.
-    bm, bn, bk = ops.auto_tiles(key.m, key.k, key.bm, key.bk, n=key.n, bn=key.bn)
-    if key.bm is None and kernel in ("fused_cached", "fused_repack", "staged", "cached_planes"):
-        bm = ops._int8_bm(bm)  # these kernels consume int8 operand tiles
+    # wrappers, which never override explicit values). Explicit tiles win
+    # unconditionally; otherwise an attached tuner is consulted (store
+    # hit or fresh micro-benchmark — core/autotune) and only then the
+    # auto_tiles heuristic. bn joins the heuristic: fused decode steps
+    # take the N-derived wide tile.
+    tuned = False
+    bm = bn = bk = None
+    if (
+        registry.tuner is not None
+        and key.bm is None
+        and key.bn is None
+        and key.bk is None
+    ):
+        tiles = registry.tuner.tiles_for(key, kernel)
+        if tiles is not None:
+            bm, bn, bk = tiles
+            tuned = True
+    if not tuned:
+        bm, bn, bk = ops.auto_tiles(key.m, key.k, key.bm, key.bk, n=key.n, bn=key.bn)
+        if key.bm is None and kernel in ("fused_cached", "fused_repack", "staged", "cached_planes"):
+            bm = ops._int8_bm(bm)  # these kernels consume int8 operand tiles
     pack_block = bk  # fused_repack packs the weight with the K tile as block
 
     # Occupancy gating is a property of the plane-pair kernels: the jnp
@@ -346,6 +382,7 @@ def _build_plan(key: PlanKey, registry: "PlanRegistry") -> "MatmulPlan":
         trunc_cache=trunc_cache,
         gate=gate,
         check=check,
+        tuned=tuned,
     )
 
 
@@ -587,6 +624,11 @@ class MatmulPlan:
     #: "off"; executors compare the accumulator row-sums against the
     #: cache's column checksums and report to the integrity collector)
     check: bool = False
+    #: provenance: tiles came from an attached autotuner (store hit or
+    #: fresh micro-benchmark) rather than the ``auto_tiles`` heuristic.
+    #: Tuned plans are bit-identical to heuristic plans — tiles change
+    #: the MXU pass schedule, never the integer arithmetic.
+    tuned: bool = False
 
     def __call__(self, x, w=None, *, w_planes=None, epilogue=None):
         key = self.key
@@ -711,6 +753,8 @@ class MatmulPlan:
             f"{k.level}/{k.variant} -> {self.kernel} backend={k.backend} "
             f"tiles=(bm={self.bm}, bn={self.bn}, bk={self.bk})"
         )
+        if self.tuned:
+            s += " tuned"
         if self.a_shift or self.w_shift:
             s += f" trunc(w {k.w_in_bits}->{k.w_bits}, a {k.a_in_bits}->{k.a_bits})"
         if k.sparsity != "off":

@@ -84,6 +84,39 @@ def _int8_bm(bm: int) -> int:
     return max(bm, 32)
 
 
+#: Mosaic geometry shared by the legality predicate and the autotuner's
+#: candidate generator (core/autotune): the 128-wide vector lane, the
+#: (32, 128) minimum int8 tile, bits per packed plane word, and the
+#: per-core VMEM working-set budget (~16 MB on current TPUs; we cap the
+#: per-grid-step estimate at half to leave room for double buffering and
+#: semaphores).
+MOSAIC_LANE = 128
+MOSAIC_INT8_MIN_BM = 32
+PACKED_WORD_BITS = 32
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def tiles_legal(
+    bm: int, bn: int, bk: int, *, int8: bool = True, vmem_bytes: int = 0
+) -> bool:
+    """Would Mosaic accept this (bm, bn, bk) tile triple?
+
+    The single source of truth the autotuner's candidate generation and
+    the property tests share: bm a positive sublane multiple of 8 (>= 32
+    when the route keeps int8 operand tiles), bn and bk positive
+    multiples of the 128-wide lane (which also makes bk a whole number of
+    32-bit packed plane words), and — when the caller supplies its
+    working-set estimate — the grid step within the VMEM budget.
+    """
+    if bm <= 0 or bn <= 0 or bk <= 0:
+        return False
+    if bm % 8 or (int8 and bm < MOSAIC_INT8_MIN_BM):
+        return False
+    if bn % MOSAIC_LANE or bk % MOSAIC_LANE or bk % PACKED_WORD_BITS:
+        return False
+    return vmem_bytes <= VMEM_BUDGET_BYTES
+
+
 def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
     pads = []
     for dim, mult in zip(x.shape, multiples):

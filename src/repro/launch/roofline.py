@@ -16,14 +16,27 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict
+from typing import Dict, Optional
 
-# TPU v5e per-chip constants (the assignment's hardware model).
-PEAK_FLOPS_BF16 = 197e12  # FLOP/s
-PEAK_FLOPS_INT8 = 394e12
-HBM_BW = 819e9  # B/s
-LINK_BW = 50e9  # B/s per ICI link
-HBM_BYTES = 16 * 1024**3
+from repro.core.autotune import (  # noqa: F401  (re-exported table)
+    HARDWARE_TABLE,
+    HardwareModel,
+    calibrate_from_bench,
+    hardware_model,
+)
+
+# TPU v5e per-chip constants. These used to be hard-coded here; they are
+# now one entry in the backend-keyed HARDWARE_TABLE (core/autotune) with
+# a CPU/interpret fallback row and calibrate_from_bench() fitting the
+# terms to a measured BENCH_kernel.json. The module-level aliases stay
+# for existing callers (dryrun.py reads HBM_BYTES) and remain the
+# default when a Roofline is built without an explicit hardware model.
+_TPU = HARDWARE_TABLE["tpu"]
+PEAK_FLOPS_BF16 = _TPU.peak_flops_bf16  # FLOP/s
+PEAK_FLOPS_INT8 = _TPU.peak_flops_int8
+HBM_BW = _TPU.hbm_bw  # B/s
+LINK_BW = _TPU.link_bw  # B/s per ICI link
+HBM_BYTES = _TPU.hbm_bytes
 
 _DTYPE_BYTES = {
     "pred": 1,
@@ -108,11 +121,15 @@ class Roofline:
     compute_s: float = 0.0
     memory_s: float = 0.0
     collective_s: float = 0.0
+    # Which hardware-table row (possibly bench-calibrated) the terms are
+    # normalized against; None keeps the historical TPU-v5e defaults.
+    hw: Optional[HardwareModel] = None
 
     def __post_init__(self):
-        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
-        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
-        self.collective_s = self.collective_bytes / (self.chips * LINK_BW)
+        hw = self.hw or _TPU
+        self.compute_s = self.hlo_flops / (self.chips * hw.peak_flops_bf16)
+        self.memory_s = self.hlo_bytes / (self.chips * hw.hbm_bw)
+        self.collective_s = self.collective_bytes / (self.chips * hw.link_bw)
 
     @property
     def bottleneck(self) -> str:
@@ -135,9 +152,8 @@ class Roofline:
     @property
     def mfu(self) -> float:
         """Model-FLOPs utilization at the roofline step time."""
-        return self.model_flops / (
-            self.step_time_s * self.chips * PEAK_FLOPS_BF16 + 1e-30
-        )
+        peak = (self.hw or _TPU).peak_flops_bf16
+        return self.model_flops / (self.step_time_s * self.chips * peak + 1e-30)
 
     def row(self) -> dict:
         return {

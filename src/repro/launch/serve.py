@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 import warnings
 from collections import deque
@@ -245,7 +246,64 @@ class _IntegrityRuntime:
         return any(bad for _, bad in res), len(res)
 
 
-class Engine(_PrecisionDial, _IntegrityRuntime):
+class _PlanTuning:
+    """Shared autotuner wiring for both engines (DESIGN.md §13).
+
+    ``autotune=True`` attaches a roofline-calibrated tile autotuner
+    (core/autotune) — optionally backed by a persistent per-host plan
+    store (runtime/plan_store) — to the process plan registry at
+    construction, i.e. *before* the first trace builds any plan: a
+    serving process with a warm store starts at peak with zero tuning
+    runs. ``plan_stats`` surfaces the registry hit/miss counters plus the
+    tuner's store hit/miss/tune counts for ``stats()`` blocks.
+    """
+
+    def _init_autotune(self, autotune: bool, plan_store_path) -> None:
+        from repro.core import plan as plan_mod
+
+        self.autotuner = None
+        if not autotune:
+            if plan_store_path:
+                raise ValueError(
+                    "plan_store_path requires autotune=True (the store is "
+                    "only read/written by the attached tuner)"
+                )
+            return
+        from repro.core.autotune import PlanAutotuner, calibrate_from_bench
+        from repro.runtime.plan_store import PlanStore
+
+        registry = plan_mod.DEFAULT_REGISTRY
+        store = PlanStore(plan_store_path) if plan_store_path else None
+        current = registry.tuner
+        if (
+            current is not None
+            and store is not None
+            and getattr(getattr(current, "store", None), "path", None) == store.path
+        ):
+            # Engines in one process share the tuner (and its memo):
+            # tune-once applies across engine instances too.
+            self.autotuner = current
+            return
+        # Calibrate the pruning model against this host's measured bench
+        # report when one exists; the builtin table row otherwise.
+        bench_path = os.environ.get("BENCH_KERNEL_JSON", "BENCH_kernel.json")
+        self.autotuner = PlanAutotuner(store=store, hw=calibrate_from_bench(bench_path))
+        registry.attach_tuner(self.autotuner)
+
+    def plan_stats(self) -> dict:
+        from repro.core import plan as plan_mod
+
+        reg = plan_mod.DEFAULT_REGISTRY
+        out = {
+            "registry_hits": reg.hits,
+            "registry_misses": reg.misses,
+            "resolved": len(reg),
+        }
+        out.update(reg.store_stats())
+        return out
+
+
+class Engine(_PrecisionDial, _IntegrityRuntime, _PlanTuning):
     """Minimal lockstep batched generation engine over the serve steps."""
 
     def __init__(
@@ -260,7 +318,10 @@ class Engine(_PrecisionDial, _IntegrityRuntime):
         value_bits: Optional[int] = None,
         audit_interval: int = 1,
         max_retries: int = 2,
+        autotune: bool = False,
+        plan_store_path: Optional[str] = None,
     ):
+        self._init_autotune(autotune, plan_store_path)
         self.cfg = cfg
         self.policy = policy
         self.plane_cache = plane_cache
@@ -416,7 +477,7 @@ class _PrefillJob:
     from_hit: bool = False  # resumed from a registry snapshot
 
 
-class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
+class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime, _PlanTuning):
     """Slot-scheduled serving over a shared, optionally int8, KV cache.
 
     ``n_slots`` decode lanes share one slot-indexed cache of ``max_len``
@@ -469,9 +530,13 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
         kv_pages: Optional[int] = None,
         prefill_chunk: int = 0,
         share_prefixes: bool = False,
+        autotune: bool = False,
+        plan_store_path: Optional[str] = None,
     ):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        # Attach the tuner before anything traces: warm-start at load.
+        self._init_autotune(autotune, plan_store_path)
         self.cfg = cfg
         self.policy = policy
         self.n_slots = n_slots
@@ -1521,6 +1586,9 @@ class ContinuousBatchingEngine(_PrecisionDial, _IntegrityRuntime):
             "failed": dict(sched.failed),
             "requeued": s.requeued,
             "quarantined_slots": sorted(sched.quarantined_slots),
+            # plan-layer observability: registry hit/miss plus the
+            # autotuner's store hit/miss/tune counters (zeros untuned)
+            "plans": self.plan_stats(),
         }
         if self._staged:
             stats["prefill_chunks"] = prefill_chunks
@@ -1688,6 +1756,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--shared-prefix-len", type=int, default=0, metavar="N",
                     help="synthetic workload: give every request the same "
                     "first N prompt tokens and declare them shared")
+    ap.add_argument("--autotune", action="store_true",
+                    help="roofline-calibrated tile autotuning (DESIGN.md "
+                    "§13): prune the (bm, bn, bk) space per plan with the "
+                    "calibrated analytic model, micro-benchmark <= 4 "
+                    "survivors, and serve every plan at its winning tiles "
+                    "(bit-identical tokens; tiles change the MXU pass "
+                    "schedule, never the arithmetic)")
+    ap.add_argument("--plan-store", default=None, metavar="PATH",
+                    help="persist winning tile configurations at PATH keyed "
+                    "(host fingerprint, plan key): a warm store restarts "
+                    "the process at peak with zero tuning runs — "
+                    "tune-once-per-fleet (needs --autotune)")
     ap.add_argument("--deadline", type=int, default=None, metavar="STEPS",
                     help="per-request deadline: fail any request not "
                     "finished within STEPS engine iterations of its "
@@ -1824,6 +1904,9 @@ def validate_args(args) -> None:
             "the sharing unit")
     if args.shared_prefix_len < 0:
         die("--shared-prefix-len must be >= 0")
+    if args.plan_store and not args.autotune:
+        die("--plan-store needs --autotune: the store is only read and "
+            "written by the attached tuner")
     if args.audit_interval < 0:
         die("--audit-interval must be >= 0")
     if args.sparsity != "off" and args.level != "bitplane":
@@ -1863,6 +1946,19 @@ def validate_args(args) -> None:
             die("--precision-switch step must be >= 0")
 
 
+def _print_plan_stats(engine) -> None:
+    ps = engine.plan_stats()
+    line = (
+        f"[serve] plans: {ps['resolved']} resolved "
+        f"(registry {ps['registry_hits']} hits / {ps['registry_misses']} "
+        f"misses), store {ps['store_hits']} hits / {ps['store_misses']} "
+        f"misses, {ps['tunes']} tuned"
+    )
+    if "fingerprint" in ps:
+        line += f", host {ps['fingerprint']}"
+    print(line)
+
+
 def main():
     args = build_parser().parse_args()
     validate_args(args)
@@ -1897,7 +1993,11 @@ def main():
             plane_cache=not args.no_plane_cache,
             sample_fn=sampling.make_sample_fn(args.temperature),
             audit_interval=args.audit_interval,
+            autotune=args.autotune,
+            plan_store_path=args.plan_store,
         )
+        if args.autotune:
+            _print_plan_stats(engine)
         if args.precision:
             engine.set_precision(args.precision)
         prompts = jnp.asarray(
@@ -1945,7 +2045,11 @@ def main():
         kv_pages=args.kv_pages,
         prefill_chunk=args.prefill_chunk,
         share_prefixes=args.share_prefixes,
+        autotune=args.autotune,
+        plan_store_path=args.plan_store,
     )
+    if args.autotune:
+        tag += " autotuned"
     if args.model_parallel > 1:
         tag += f" tp={args.model_parallel}"
     if args.kv_page_size:
@@ -2032,6 +2136,8 @@ def main():
             f"({ig['audit_alarms']} alarms), {ig['kv_alarms']} KV alarms, "
             f"{ig['scrubs']} scrubs, {ig['step_retries']} step retries"
         )
+    if args.autotune:
+        _print_plan_stats(engine)
     if injector is not None:
         undet = injector.undetected
         print(

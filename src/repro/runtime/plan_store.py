@@ -1,0 +1,127 @@
+"""Persistent per-host plan store: atomic, versioned, corruption-tolerant.
+
+The durable half of tune-once-per-fleet (DESIGN.md §13): the autotuner's
+winning tile configurations are persisted as JSON keyed
+``(host_fingerprint, plan key id)`` so the *next* process — or the next
+CI run restoring the store from its cache — starts at peak with zero
+tuning runs.
+
+Durability contract:
+
+* **Atomic.** Every write lands via temp-file-in-same-directory +
+  ``os.replace``: a concurrent reader sees either the old document or
+  the new one, never a torn half-write.
+* **Versioned.** The document carries ``version``; a schema bump
+  discards the old document wholesale on load (stale tiles silently
+  feeding new kernels is exactly the bug this store must not have).
+* **Corruption-tolerant.** A missing, torn, or non-JSON file degrades to
+  an empty store (and records why in :attr:`PlanStore.load_error`) —
+  the plan layer then falls back to ``auto_tiles``; it never crashes a
+  serving process over a bad cache file.
+
+Staleness is handled by keying, not TTLs: the fingerprint hashes the
+toolchain + device identity (see ``core/autotune.host_fingerprint``), so
+an upgraded jax or a different accelerator reads an empty namespace and
+re-tunes, leaving the old host's entries untouched for peers still on
+the old fleet image.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+__all__ = ["STORE_VERSION", "PlanStore"]
+
+STORE_VERSION = 1
+
+
+def _empty_doc() -> dict:
+    return {"version": STORE_VERSION, "hosts": {}}
+
+
+class PlanStore:
+    """JSON-file store the autotuner reads through and writes through.
+
+    Duck-typed against ``core/autotune.PlanAutotuner``'s expectations
+    (``get``/``put``) — core never imports this module; the serving layer
+    constructs the store and injects it.
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = os.fspath(path)
+        self.load_error: Optional[str] = None
+        self._doc: Optional[dict] = None
+
+    # -- load --------------------------------------------------------------
+    def _load(self) -> dict:
+        if self._doc is not None:
+            return self._doc
+        self.load_error = None
+        try:
+            with open(self.path) as fh:
+                doc = json.load(fh)
+        except FileNotFoundError:
+            doc = _empty_doc()
+        except (OSError, ValueError) as exc:
+            # Torn write that escaped os.replace (e.g. a truncated copy
+            # out of a CI cache) or hand-edited garbage: start empty.
+            self.load_error = f"unreadable ({exc.__class__.__name__}): {exc}"
+            doc = _empty_doc()
+        if not isinstance(doc, dict) or not isinstance(doc.get("hosts"), dict):
+            self.load_error = self.load_error or "malformed document"
+            doc = _empty_doc()
+        elif doc.get("version") != STORE_VERSION:
+            self.load_error = (
+                f"version mismatch (store {doc.get('version')!r}, "
+                f"code {STORE_VERSION}) — discarded"
+            )
+            doc = _empty_doc()
+        self._doc = doc
+        return doc
+
+    # -- the tuner-facing API ---------------------------------------------
+    def get(self, fingerprint: str, key_id: str) -> Optional[dict]:
+        record = self._load()["hosts"].get(fingerprint, {}).get(key_id)
+        return record if isinstance(record, dict) else None
+
+    def put(self, fingerprint: str, key_id: str, record: dict) -> None:
+        doc = self._load()
+        doc["hosts"].setdefault(fingerprint, {})[key_id] = dict(record)
+        self._flush(doc)
+
+    # -- observability -----------------------------------------------------
+    def entries(self, fingerprint: Optional[str] = None) -> int:
+        hosts = self._load()["hosts"]
+        if fingerprint is not None:
+            return len(hosts.get(fingerprint, {}))
+        return sum(len(v) for v in hosts.values())
+
+    def stats(self) -> dict:
+        out = {"path": self.path, "entries": self.entries(),
+               "version": STORE_VERSION}
+        if self.load_error:
+            out["load_error"] = self.load_error
+        return out
+
+    # -- atomic write ------------------------------------------------------
+    def _flush(self, doc: dict) -> None:
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(self.path) + ".", suffix=".tmp", dir=parent
+        )
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(doc, fh, indent=1, sort_keys=True)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise

@@ -43,9 +43,11 @@ def _describe(obj) -> str:
 
 
 PLAN_SURFACE = {
+    # PR 10: 'tuned' is provenance — tiles came from the autotuner/store
+    # rather than the auto_tiles heuristic
     "MatmulPlan": "dataclass('key', 'registry', 'kernel', 'bm', 'bn', 'bk', "
     "'pack_block', 'a_shift', 'w_shift', 'scale_mult', 'requant_w', "
-    "'trunc_cache', 'gate', 'check') methods('with_precision', "
+    "'trunc_cache', 'gate', 'check', 'tuned') methods('with_precision', "
     "'sparsity_stats', 'integrity_stats', 'describe')",
     # PR 8: 'shard' carries the tensor-parallel placement triple
     # (axis_name, axis_size, role) so per-shard plans (local m/k/n) never
@@ -54,7 +56,9 @@ PLAN_SURFACE = {
     "'w_in_bits', 'variant', 'level', 'mode', 'backend', 'accum', "
     "'has_epilogue', 'cache', 'fused', 'packed', 'bm', 'bn', 'bk', "
     "'sparsity', 'integrity', 'shard') methods()",
-    "PlanRegistry": "class methods('get', 'clear', 'plans')",
+    # PR 10: attach_tuner/store_stats hook the roofline autotuner in
+    "PlanRegistry": "class methods('get', 'attach_tuner', 'store_stats', "
+    "'clear', 'plans')",
     "DEFAULT_REGISTRY": "PlanRegistry",
     "make_plan": "(policy: 'PrecisionPolicy', layer_name: 'str', shapes, "
     "backend: 'str' = 'auto', *, w_planes: 'Optional[bp.WeightPlanes]' = None, "
@@ -88,6 +92,10 @@ OPS_SURFACE = {
     "auto_tiles": "(m: 'int', k: 'int', bm: 'Optional[int]', "
     "bk: 'Optional[int]', n: 'Optional[int]' = None, "
     "bn: 'Optional[int]' = None) -> 'tuple[int, ...]'",
+    # PR 10: the shared Mosaic-legality predicate the autotuner's
+    # candidate generator and the stored-record validator both gate on
+    "tiles_legal": "(bm: 'int', bn: 'int', bk: 'int', *, "
+    "int8: 'bool' = True, vmem_bytes: 'int' = 0) -> 'bool'",
     "Epilogue": "NamedTuple('a_scale', 'w_scale', 'bias', 'activation', "
     "'out_dtype')",
     "apply_epilogue": "(acc: 'jax.Array', ep: 'Epilogue') -> 'jax.Array'",

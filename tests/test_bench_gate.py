@@ -33,6 +33,10 @@ def _doc(
     tp_bytes4=250_000,
     tp_skipped=None,
     kv_shrink=1.8,
+    tuned_decode=1.01,
+    tuned_prefill=0.98,
+    tuned_skipped=None,
+    warm_start="ok",
 ):
     """A minimal but complete healthy report, knobs per failure mode."""
     return {
@@ -79,6 +83,22 @@ def _doc(
                     "paged_monolithic_tokens_vs_dense": "ok",
                 },
             },
+            "tuned_tiles": (
+                {"skipped": tuned_skipped} if tuned_skipped else {
+                    "tuned_vs_heuristic": {
+                        "decode": tuned_decode,
+                        "prefill": tuned_prefill,
+                    },
+                    "plan_counters": {
+                        "cold": {"store_hits": 0, "store_misses": 7, "tunes": 7},
+                        "warm": {"store_hits": 7, "store_misses": 0, "tunes": 0},
+                    },
+                    "parity": {
+                        "tuned_tokens_vs_heuristic": "ok",
+                        "warm_start_zero_tune": warm_start,
+                    },
+                }
+            ),
             "tp_serving": (
                 {"skipped": tp_skipped} if tp_skipped else {
                     "model_parallel": [1, 2, 4],
@@ -307,3 +327,47 @@ def test_paged_parity_hard_fails(tmp_path, capsys, check):
     fresh["benches"]["paged_serving"]["parity"][check] = "mismatch"
     assert _run(tmp_path, fresh) == 1
     assert f"paged_serving.parity.{check}" in capsys.readouterr().out
+
+
+def test_tuned_floor_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(tuned_decode=0.5)) == 1
+    out = capsys.readouterr().out
+    assert "tuned_tiles" in out and "below floor" in out
+    assert "auto_tiles heuristic" in out
+
+
+def test_tuned_floor_flag_overrides(tmp_path):
+    assert _run(tmp_path, _doc(tuned_prefill=0.7)) == 1  # default floor 0.8
+    assert _run(
+        tmp_path, _doc(tuned_prefill=0.7), extra=["--tuned-floor", "0.5"]
+    ) == 0
+
+
+def test_missing_tuned_tiles_section_fails(tmp_path, capsys):
+    fresh = _doc()
+    del fresh["benches"]["tuned_tiles"]
+    assert _run(tmp_path, fresh) == 1
+    assert "no tuned_tiles section" in capsys.readouterr().out
+
+
+def test_skipped_tuned_tiles_section_fails(tmp_path, capsys):
+    assert _run(tmp_path, _doc(tuned_skipped="store unwritable")) == 1
+    assert "tuned_tiles sweep was skipped" in capsys.readouterr().out
+
+
+def test_tuned_section_without_ratios_fails(tmp_path, capsys):
+    fresh = _doc()
+    fresh["benches"]["tuned_tiles"].pop("tuned_vs_heuristic")
+    assert _run(tmp_path, fresh) == 1
+    assert "no tuned_vs_heuristic ratios" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("check,verdict", [
+    ("tuned_tokens_vs_heuristic", "mismatch"),
+    ("warm_start_zero_tune", "hits_3_misses_4_tunes_4_expected_hits_7"),
+])
+def test_tuned_verdicts_hard_fail_via_parity(tmp_path, capsys, check, verdict):
+    fresh = _doc()
+    fresh["benches"]["tuned_tiles"]["parity"][check] = verdict
+    assert _run(tmp_path, fresh) == 1
+    assert f"tuned_tiles.parity.{check}" in capsys.readouterr().out
